@@ -1,0 +1,40 @@
+"""Kernel micro-benchmarks: interpret-mode wall time (structural) plus the
+analytic MXU/VMEM utilization of the chosen block shapes.
+
+CSV: name,us_per_call,derived  (derived = analytic VMEM KiB of working set)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def main(full: bool = False) -> None:
+    print("name,us_per_call,derived")
+    shapes = [(256, 512, 256), (512, 512, 512)]
+    if full:
+        shapes += [(2048, 4096, 2048)]
+    for m, k, n in shapes:
+        a = jnp.ones((m, k), jnp.bfloat16)
+        b = jnp.ones((k, n), jnp.bfloat16)
+        fn = jax.jit(lambda x, y: kops.matmul(x, y, interpret=True))
+        fn(a, b).block_until_ready()
+        t0 = time.perf_counter()
+        fn(a, b).block_until_ready()
+        us = (time.perf_counter() - t0) * 1e6
+        bm, bk, bn = kops.plan_blocks(m, k, n)
+        vmem_kib = (bm * bk + bk * bn + 2 * bm * bn) * 2 / 1024 \
+            + bm * bn * 4 / 1024
+        print(f"kernel_matmul_{m}x{k}x{n}_b{bm}.{bk}.{bn},{us:.0f},"
+              f"{vmem_kib:.0f}KiB")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,73 @@
+"""Model-level benchmark — paper Figs. 1, 16, 17.
+
+For GPT-3 175B and Llama-2 70B (the paper's two models), derive per-step
+times for training / prefill / decoding under each overlap mode from the
+per-layer roofline terms on the v5e target:
+
+  non-overlap (xla)  : T = compute + memory' + collective      (serial)
+  medium (decomposed): T = max-pipelined per chunk with the split-GEMM
+                       penalty (paper §2.2's critique)
+  FLUX (flux)        : T = max(compute, collective) + one-chunk tail
+                       (fused kernel; paper §3.3)
+
+Also prints the communication fraction (Fig. 1 analogue) and the resulting
+speedups over the non-overlap baseline (Fig. 16/17 analogue).
+
+CSV: name,us_per_call,derived   (derived = speedup over xla mode)
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import get_config
+from repro.core import ect
+
+N_TP = 8
+PHASES = {
+    "train": dict(m_tokens=8 * 2048, passes=3.0),   # fwd+bwd
+    "prefill": dict(m_tokens=8 * 2048, passes=1.0),
+    "decode64": dict(m_tokens=64, passes=1.0),
+    "decode512": dict(m_tokens=512, passes=1.0),
+}
+
+
+def layer_seam_times(cfg, m_tokens: int, mode: str):
+    """The two MLP seams + two attention seams of one layer under a mode."""
+    d, f = cfg.d_model, cfg.d_ff
+    seams = [
+        ("ag", m_tokens, f, d),          # h -> 4h (AllGather-GEMM)
+        ("rs", m_tokens, d, f),          # 4h -> h (GEMM-ReduceScatter)
+        ("ag", m_tokens, 3 * d, d),      # qkv
+        ("rs", m_tokens, d, d),          # attn out
+    ]
+    total = dict(overall=0.0, gemm=0.0, comm=0.0, exposed=0.0)
+    for seam, m, n, k in seams:
+        est = ect.model_overlap(seam, m, n, k, N_TP, mode)
+        for kk in total:
+            total[kk] += est[kk]
+    return total
+
+
+def main(full: bool = False) -> None:
+    print("name,us_per_call,derived")
+    for arch in ("gpt3_175b", "llama2_70b"):
+        cfg = get_config(arch)
+        for phase, ph in PHASES.items():
+            base = None
+            for mode in ("xla", "decomposed", "flux"):
+                t = layer_seam_times(cfg, ph["m_tokens"], mode)
+                step_us = t["overall"] * ph["passes"] * cfg.num_layers * 1e6
+                if mode == "xla":
+                    base = step_us
+                    frac = t["comm"] / t["overall"] if t["overall"] else 0
+                    print(f"modellevel_{arch}_{phase}_commfrac,"
+                          f"{step_us:.0f},{100*frac:.1f}")
+                speedup = base / step_us if step_us else 0.0
+                print(f"modellevel_{arch}_{phase}_{mode},"
+                      f"{step_us:.0f},{speedup:.3f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

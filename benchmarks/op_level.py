@@ -1,0 +1,68 @@
+"""Op-level AG/RS overlap benchmark — paper Figs. 4, 11, 12, 13, 14.
+
+GEMM shapes from GPT-3 175B exactly as in §5.1: (n,k) = (49152, 12288) for
+AllGather-GEMM and (12288, 49152) for GEMM-ReduceScatter, m swept over
+{64, 512} (decode, Fig. 14) and {1024..8192} (train/prefill, Figs. 11-13).
+
+Two result sets per row:
+  * modeled — v5e roofline projection (core.ect.model_overlap) per mode:
+    OverallTime, ECT (Eq. 1), OverlapEfficiency (Eq. 2).  This is the
+    apples-to-apples reproduction of the paper's metric on our target HW.
+  * measured — μs/call of the jitted seam at REDUCED dims on this host
+    (CPU: structural sanity only; pass --full on a real TPU pod).
+
+CSV: name,us_per_call,derived   (derived = modeled overlap efficiency %)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ect, overlap
+
+M_SWEEP = [64, 512, 1024, 2048, 4096, 8192]
+N_TP = 8                      # paper's single-node TP degree
+
+
+def measured_us(seam: str, m: int, n: int, k: int, mode: str,
+                iters: int = 3) -> float:
+    """Single-device structural timing at reduced dims (TP=1 fallback)."""
+    x = jnp.zeros((1, m, k), jnp.bfloat16)
+    w = jnp.zeros((k, n), jnp.bfloat16)
+    if seam == "ag":
+        fn = jax.jit(lambda a, b: overlap.ag_matmul(a, b, None, mode))
+    else:
+        fn = jax.jit(lambda a, b: overlap.matmul_rs(a, b, None, mode))
+    fn(x, w).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(x, w).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(full: bool = False) -> None:
+    scale = 1 if full else 16       # reduce dims 16x for the CPU timing
+    rows = []
+    for seam, (n, k) in [("ag", (49152, 12288)), ("rs", (12288, 49152))]:
+        for m in M_SWEEP:
+            base = ect.model_overlap(seam, m, n, k, N_TP, "xla")
+            for mode in ("xla", "decomposed", "flux"):
+                est = ect.model_overlap(seam, m, n, k, N_TP, mode)
+                eff = 1.0 - est["ect"] / base["ect"] if base["ect"] else 0.0
+                us = measured_us(seam, max(m // scale, 8), n // scale,
+                                 k // scale, mode if mode != "flux"
+                                 else "decomposed")
+                rows.append((f"oplevel_{seam}_m{m}_{mode}", us,
+                             f"{100*eff:.1f}"))
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,39 @@
+"""Benchmark runner: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (harness contract)."""
+from __future__ import annotations
+
+import argparse
+import io
+from contextlib import redirect_stdout
+
+from benchmarks import kernel_bench, model_level, op_level, swizzle, tuning
+
+
+def _run(name, mod, full):
+    print(f"# --- {name} ---")
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        mod.main(full=full)
+    out = buf.getvalue()
+    # drop the per-module header; keep one global header
+    lines = [l for l in out.splitlines()
+             if l and l != "name,us_per_call,derived"]
+    print("\n".join(lines))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full problem sizes (use on real hardware)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    _run("op-level AG/RS (paper Figs. 4, 11-14)", op_level, args.full)
+    _run("comm-tile + pull/push tuning (Figs. 9, 10)", tuning, args.full)
+    _run("tile-coordinate swizzle (Fig. 8)", swizzle, args.full)
+    _run("model-level train/prefill/decode (Figs. 1, 16, 17)", model_level,
+         args.full)
+    _run("kernel micro-bench", kernel_bench, args.full)
+
+
+if __name__ == "__main__":
+    main()

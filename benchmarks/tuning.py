@@ -1,0 +1,43 @@
+"""Auto-tuning benchmark — paper Figs. 9 (pull/push) and 10 (comm tile size).
+
+Sweeps the decomposed-mode chunk count (the §4.3 communication-tile knob)
+and the ring direction (pull/push analogue) and reports the planner's pick.
+
+CSV: name,us_per_call,derived  (derived = modeled overall ms)
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import ect, planner
+
+N_TP = 8
+
+
+def main(full: bool = False) -> None:
+    print("name,us_per_call,derived")
+    n, k = 49152, 12288
+    for m in (1024, 4096, 8192):
+        for chunks in (N_TP, 2 * N_TP, 4 * N_TP, 8 * N_TP):
+            est = ect.model_overlap("ag", m, n, k, N_TP, "decomposed",
+                                    comm_chunks=chunks)
+            print(f"tuning_commtile_m{m}_c{chunks},"
+                  f"{est['overall']*1e6:.0f},{est['overall']*1e3:.3f}")
+        plan = planner.plan_seam("ag", m, n, k, N_TP)
+        print(f"tuning_planner_m{m}_pick_{plan.mode}_c{plan.comm_chunks},"
+              f"{plan.predicted_overall_s*1e6:.0f},"
+              f"{100*plan.predicted_overlap_eff:.1f}")
+    # ring direction (pull/push analogue): symmetric on a torus — the knob
+    # exists (kernels' reverse=); the WINNING setting is both at once:
+    # decomposed_bidir rides both full-duplex link directions (-36% ICI
+    # time on the codeqwen train cell, EXPERIMENTS §Perf 1e).
+    for mode in ("reverse0", "reverse1", "bidir"):
+        note = ("duplex-2x-ring-bw" if mode == "bidir"
+                else "same-bandwidth-on-torus")
+        print(f"tuning_ringdir_{mode},0,{note}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic pipeline, with checkpointing and fault-tolerant stepping.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 200
+
+(Defaults are sized for this CPU container; on a pod, raise batch/seq and
+pass --tp/--dp.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.model import count_params_analytic
+from repro.runtime import trainer as T
+
+
+def build_config() -> ModelConfig:
+    return ModelConfig(
+        name="repro_100m",
+        family="dense",
+        num_layers=12,
+        d_model=640,
+        num_heads=10,
+        num_kv_heads=10,
+        d_ff=2560,
+        vocab_size=32768,
+        rope_style="rope",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = build_config()
+    n = count_params_analytic(cfg)
+    print(f"model: {n/1e6:.1f}M params")
+    par = ParallelConfig(tp=1, dp=1, overlap_mode="decomposed")
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+    tc = T.TrainConfig(total_steps=args.steps, warmup_steps=20,
+                       base_lr=6e-4, schedule="wsd",
+                       checkpoint_dir=args.ckpt_dir, checkpoint_every=100,
+                       log_every=10)
+    tr = T.Trainer(cfg, par, mesh, tc)
+    tr.data_cfg = dataclasses.replace(
+        tr.data_cfg, seq_len=args.seq, global_batch=args.batch)
+
+    t0 = time.time()
+    params, opt, hist = tr.train(resume=True)
+    dt = time.time() - t0
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"\ntrained {len(hist)} steps in {dt:.0f}s ({tok_s:.0f} tok/s)")
+    print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    print(f"straggler events: {tr.straggler_events}, failures: {tr.failures}")
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    print("train_100m OK")
+
+
+if __name__ == "__main__":
+    main()

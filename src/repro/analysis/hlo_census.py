@@ -1,0 +1,17 @@
+"""Collective-op census over optimized HLO text (dry-run cross-check)."""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+
+
+def hlo_collective_counts(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        k = m.group(1)
+        counts[k] = counts.get(k, 0) + 1
+    return counts

@@ -1,0 +1,85 @@
+"""Roofline report generator: reads experiments/dryrun/*.json and emits the
+EXPERIMENTS.md §Dry-run / §Roofline tables."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+GB = 2 ** 30
+
+
+def load_cells(dirpath: str) -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_rows(cells: List[Dict], mesh: str = "pod16x16",
+                  mode: str = "decomposed", opt: str = "") -> List[str]:
+    rows = []
+    for c in cells:
+        if (c.get("mesh") != mesh
+                or c.get("overlap_mode", "decomposed") != mode
+                or c.get("opt", "") != opt):
+            continue
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | "
+                        f"skip | — | (sub-quadratic only) |")
+            continue
+        a = c.get("analyzer")
+        if not a:
+            continue
+        dom = a["dominant"]
+        terms = {"compute": a["compute_term_s"], "memory": a["memory_term_s"],
+                 "collective": a["collective_term_s"]}
+        bound = max(terms.values())
+        frac = terms["compute"] / bound if bound else 0.0
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(a['compute_term_s'])} | "
+            f"{fmt_s(a['memory_term_s'])} | {fmt_s(a['collective_term_s'])} | "
+            f"{c['useful_ratio']:.2f} | **{dom}** | {frac:.2f} | "
+            f"{c['memory_analysis']['temp_bytes']/GB:.1f} GB |")
+    return rows
+
+
+def summary(cells: List[Dict]) -> Dict:
+    ok = [c for c in cells if "error" not in c and "skipped" not in c
+          and "analyzer" in c]
+    skips = [c for c in cells if "skipped" in c]
+    doms: Dict[str, int] = {}
+    for c in ok:
+        d = c["analyzer"]["dominant"]
+        doms[d] = doms.get(d, 0) + 1
+    return {"ok": len(ok), "skipped": len(skips), "dominant": doms}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print("| arch | shape | compute | memory | collective | useful | "
+          "dominant | comp/roof | XLA temp/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in roofline_rows(cells, args.mesh):
+        print(r)
+    print()
+    print(summary(cells))
+
+
+if __name__ == "__main__":
+    main()

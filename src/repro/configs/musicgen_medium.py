@@ -1,0 +1,21 @@
+"""MusicGen-medium: decoder-only transformer over EnCodec tokens (4
+codebooks).  The EnCodec frontend is a STUB: input_specs provides
+precomputed frame embeddings [B, S, D].  [arXiv:2306.05284; hf]"""
+from repro.configs.base import ModelConfig, shrink
+
+CONFIG = ModelConfig(
+    name="musicgen_medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    rope_style="rope",           # positional stand-in for sinusoidal
+    frontend="audio_frames",
+    num_codebooks=4,
+    sub_quadratic=False,
+)
+
+SMOKE_CONFIG = shrink(CONFIG)

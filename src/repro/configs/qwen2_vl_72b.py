@@ -1,0 +1,21 @@
+"""Qwen2-VL 72B backbone: M-RoPE, dynamic resolution.  The vision tower is a
+STUB: input_specs provides precomputed patch embeddings + 3-D position ids.
+[arXiv:2409.12191; hf]"""
+from repro.configs.base import ModelConfig, shrink
+
+CONFIG = ModelConfig(
+    name="qwen2_vl_72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    rope_style="mrope",
+    qkv_bias=True,
+    frontend="vision_patches",
+    sub_quadratic=False,
+)
+
+SMOKE_CONFIG = shrink(CONFIG)

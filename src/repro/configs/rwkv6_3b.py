@@ -1,0 +1,20 @@
+"""RWKV-6 (Finch) 3B: attention-free, data-dependent decay.
+[arXiv:2404.05892; hf]"""
+from repro.configs.base import RWKV, ModelConfig, RWKVConfig, shrink
+
+CONFIG = ModelConfig(
+    name="rwkv6_3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=0,                 # attention-free
+    num_kv_heads=0,
+    d_ff=8960,
+    vocab_size=65536,
+    pattern=((RWKV, RWKV),),     # time-mix + channel-mix
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64),
+    rope_style="none",
+    sub_quadratic=True,          # O(1) state decode -> long_500k runs
+)
+
+SMOKE_CONFIG = shrink(CONFIG)

@@ -1,0 +1,6 @@
+# FLUX core: fine-grained communication overlap for tensor parallelism.
+from repro.core.overlap import (  # noqa: F401
+    ag_matmul, matmul_rs, matmul_ar, ag_matmul_ref, matmul_rs_ref,
+    VALID_MODES,
+)
+from repro.core import ect, planner  # noqa: F401

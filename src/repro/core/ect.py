@@ -1,0 +1,129 @@
+"""Effective Communication Time and Overlap Efficiency (paper §2.3).
+
+  ECT       = OverallTime - GEMM_non-split                     (Eq. 1)
+  E_overlap = 1 - ECT_overlap / ECT_non-overlap                (Eq. 2)
+
+A perfect overlap method has ECT == 0 and E_overlap == 100 %.  Negative
+efficiency means the "overlap" method is slower than the non-overlapping
+baseline — the paper uses this to show TransformerEngine regressing.
+
+Two backends:
+  * measured  — wall-clock on the current devices (meaningful on real TPU;
+    on this CPU container it is structural evidence only).
+  * modeled   — roofline model from analytic FLOPs/bytes and the v5e
+    constants; used for the §Perf projections in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# TPU v5e constants (per task statement)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s per chip
+HBM_BW = 819e9                 # B/s per chip
+ICI_BW = 50e9                  # B/s per link (per direction)
+
+
+@dataclasses.dataclass
+class ECTResult:
+    name: str
+    overall_s: float
+    gemm_nonsplit_s: float
+
+    @property
+    def ect_s(self) -> float:
+        return self.overall_s - self.gemm_nonsplit_s
+
+    def overlap_efficiency(self, baseline: "ECTResult") -> float:
+        if baseline.ect_s == 0:
+            return float("nan")
+        return 1.0 - self.ect_s / baseline.ect_s
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time of a jitted callable (blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+# ---------------------------------------------------------------------------
+# Modeled (roofline) ECT for the op-level benchmark tables.
+# ---------------------------------------------------------------------------
+def gemm_efficiency(m: int, m_half: float = 128.0) -> float:
+    """MXU efficiency vs the m (rows) dimension: small-m GEMMs underutilize
+    the systolic array (the paper's §2.2 third critique of split GEMMs)."""
+    return m / (m + m_half)
+
+
+def model_gemm_time(m: int, n: int, k: int, dtype_bytes: int = 2,
+                    mfu: float = 0.7) -> float:
+    """Max of compute and memory roofline terms for one GEMM on one chip."""
+    flops = 2.0 * m * n * k
+    bytes_ = dtype_bytes * (m * k + k * n + m * n)
+    eff = mfu * gemm_efficiency(m)
+    return max(flops / (PEAK_FLOPS_BF16 * eff), bytes_ / HBM_BW)
+
+
+def model_collective_time(shard_bytes: float, n_dev: int,
+                          kind: str = "ag", links: int = 1) -> float:
+    """Ring-collective time on ICI.  ``shard_bytes`` is the PER-DEVICE shard
+    (AG input / RS output); a ring moves (n-1) shards over every link, twice
+    for all-reduce."""
+    mult = 2.0 if kind in ("ar", "allreduce") else 1.0
+    return mult * (n_dev - 1) * shard_bytes / (ICI_BW * links)
+
+
+def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
+                  mode: str, dtype_bytes: int = 2,
+                  comm_chunks: int = 0) -> Dict[str, float]:
+    """Analytic OverallTime for one TP seam under each overlap strategy.
+
+    seam="ag": C = AllGather_m(A[m/n,k]) @ B[k,n/n]   (per-device n_local=n/n_dev)
+    seam="rs": C = RS_m(A[m,k/n] @ B[k/n,n])
+    Returns dict(overall, gemm, comm, exposed).
+    """
+    if seam == "ag":
+        gemm = model_gemm_time(m, n // n_dev, k, dtype_bytes)
+        comm_bytes = (m // n_dev) * k * dtype_bytes
+        comm = model_collective_time(comm_bytes, n_dev, "ag")
+    else:
+        gemm = model_gemm_time(m, n, k // n_dev, dtype_bytes)
+        comm_bytes = (m // n_dev) * n * dtype_bytes
+        comm = model_collective_time(comm_bytes, n_dev, "rs")
+
+    launch_overhead = 5e-6          # per extra kernel launch (GPU-ish; the
+    #                                 paper's "scheduling overheads" §2.2)
+    if mode == "xla":               # serial: collective fully exposed
+        overall = gemm + comm
+    elif mode == "decomposed":      # medium-grained: per-chunk pipeline with
+        # split-GEMM inefficiency (chunk rows = m/chunks) + launch overheads
+        chunks = max(comm_chunks or n_dev, 1)
+        penalty = gemm_efficiency(m) / gemm_efficiency(max(m // chunks, 1))
+        g = gemm * penalty + launch_overhead * chunks
+        if seam == "rs":
+            # the inter-chunk adds serialize the split GEMMs (paper §2.2
+            # second critique): only the hops hide, not the GEMM chunks
+            overall = g + comm / chunks
+        else:
+            overall = max(g, comm) + min(g, comm) / chunks
+    else:                           # flux: fused kernel, unsplit GEMM speed;
+        # one comm step exposed at the head (AG) / tail (RS) — paper §3.3
+        step_c = comm / max(n_dev - 1, 1)
+        dma_overhead = 1.02         # fused-kernel bookkeeping
+        overall = max(gemm * dma_overhead, comm) + step_c
+    exposed = overall - gemm
+    return dict(overall=overall, gemm=gemm, comm=comm, exposed=exposed,
+                ect=exposed, overlap_eff=1.0 - exposed / comm if comm else 0.0)

@@ -1,0 +1,411 @@
+"""FLUX-style communication/computation overlap ops (the paper's core).
+
+Three implementations of the two Megatron-TP seams, selectable per call:
+
+  ``mode="xla"``         non-overlapping baseline: one collective + one matmul
+                         (the paper's PyTorch+NCCL reference point).
+  ``mode="decomposed"``  medium/fine-grained chunked ring via ``ppermute``:
+                         the Wang-et-al./TransformerEngine analogue.  The chunk
+                         count (``comm_chunks``) is the paper's §4.3
+                         "communication tile size" knob; XLA's async
+                         collective-permute + latency-hiding scheduler overlap
+                         the chunk GEMMs with the ring hops on TPU.
+  ``mode="flux"``        the paper's contribution: ONE fused Pallas kernel per
+                         (GEMM, collective) pair — tile-granular remote DMA in
+                         the prologue (AllGather) / epilogue (ReduceScatter),
+                         semaphore waits instead of spin-signals, swizzled tile
+                         walk.  See ``repro/kernels/``.
+
+All ops must be called inside ``jax.shard_map``; ``axis`` names the TP mesh
+axis.  Every op is differentiable via custom_vjp, and the backward pass uses
+the *interchanged* overlapped op (AG <-> RS), exactly as in the paper §2.1.
+
+Shapes follow the paper's Fig. 2 (sequence-sharded activations):
+
+  ag_matmul   : x[B, S/N, D] , w[D, F/N]  ->  (AllGather S) @ w  = y[B, S, F/N]
+  matmul_rs   : y[B, S, F/N] , w[F/N, D]  ->  ReduceScatter_S(y @ w) = [B, S/N, D]
+  matmul_ar   : y[B, m, F/N] , w[F/N, D]  ->  AllReduce(y @ w)       = [B, m, D]
+                (decode path: m == 1 new token, no sequence sharding)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+# *_q8 variants quantize the gathered ACTIVATION to int8 with per-128-block
+# scales before it rides the ring (ZeRO++-style, applied to the SP seams) —
+# halves AllGather bytes; opt-in (accuracy-affecting; see EXPERIMENTS §Perf).
+VALID_MODES = ("xla", "decomposed", "flux", "xla_q8", "decomposed_q8",
+               "decomposed_bidir")
+
+
+def _axis_size(axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return lax.axis_size(axis)
+
+
+def _axis_index(axis: str) -> Array:
+    return lax.axis_index(axis)
+
+
+# ---------------------------------------------------------------------------
+# mode="xla": non-overlapping baseline
+# ---------------------------------------------------------------------------
+def _ag_matmul_xla(x: Array, w: Array, axis: str) -> Array:
+    full = lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
+    return jnp.einsum("...sd,df->...sf", full, w)
+
+
+def _matmul_rs_xla(y: Array, w: Array, axis: str) -> Array:
+    partial = jnp.einsum("...sf,fd->...sd", y, w)
+    return lax.psum_scatter(partial, axis, scatter_dimension=partial.ndim - 2,
+                            tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# mode="decomposed": chunked ppermute ring (medium-grained; TE analogue)
+# ---------------------------------------------------------------------------
+def _ring_perm(axis: str, reverse: bool = False):
+    n = lax.axis_size(axis)
+    if reverse:
+        return [(i, (i - 1) % n) for i in range(n)]
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _ag_matmul_decomposed(x: Array, w: Array, axis: str, comm_chunks: int) -> Array:
+    """AllGather-GEMM as a ring of shard hops, each hop's GEMM issued as soon
+    as its shard lands.  ``comm_chunks`` sub-divides each shard so the ring
+    moves smaller messages (finer overlap granularity, more hops)."""
+    n = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    s_shard = x.shape[-2]
+    sub = max(1, comm_chunks // n) if comm_chunks else 1
+    sub = min(sub, s_shard)
+    while s_shard % sub:
+        sub -= 1
+    pieces = jnp.split(x, sub, axis=-2) if sub > 1 else [x]
+
+    out_chunks = []  # (shard_owner_offset, sub_idx, y_chunk)
+    # step 0 consumes the LOCAL shard (paper: "signals for local tiles are
+    # preset to true"); subsequent steps consume the shard arriving from the
+    # left neighbor (ring order = rank+1, rank+2, ... — paper §4.3).
+    bufs = list(pieces)
+    for step in range(n):
+        for j, b in enumerate(bufs):
+            out_chunks.append((step, j, jnp.einsum("...sd,df->...sf", b, w)))
+        if step < n - 1:
+            bufs = [lax.ppermute(b, axis, _ring_perm(axis)) for b in bufs]
+
+    # Assemble: at step k we held the shard of rank (me - k) mod n.
+    sub_len = s_shard // sub
+    y = jnp.zeros((*x.shape[:-2], s_shard * n, w.shape[-1]), out_chunks[0][2].dtype)
+    for step, j, chunk in out_chunks:
+        owner = (me - step) % n
+        start = owner * s_shard + j * sub_len
+        y = lax.dynamic_update_slice_in_dim(y, chunk, start, axis=y.ndim - 2)
+    return y
+
+
+def _matmul_rs_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Array:
+    """GEMM-ReduceScatter ring: at step s each device computes ONLY the output
+    chunk that the ring needs next, adds the partial arriving from its left
+    neighbor, and forwards.  The chunk GEMMs interleave with the hops (paper
+    Fig. 3, medium-grained)."""
+    n = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    seq = y.shape[-2]
+    assert seq % n == 0, f"seq {seq} not divisible by TP {n}"
+    s_shard = seq // n
+
+    def chunk_partial(owner):
+        ys = lax.dynamic_slice_in_dim(y, owner * s_shard, s_shard, axis=y.ndim - 2)
+        return jnp.einsum("...sf,fd->...sd", ys, w)
+
+    # Ring reduce-scatter: the buffer created by device d at step 0 is for
+    # owner (d + n-1); after each rightward hop the holder adds its own
+    # partial for that owner: c(d, s) = (d + n-1 - s) mod n.  After n-1 hops
+    # the buffer for owner X lands on device X with all n partials summed.
+    acc = chunk_partial((me + n - 1) % n)
+    for s in range(1, n):
+        acc = lax.ppermute(acc, axis, _ring_perm(axis))
+        acc = acc + chunk_partial((me + n - 1 - s) % n)
+    return acc
+
+
+def _matmul_ar_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Array:
+    """Decode-path GEMM+AllReduce, chunked along the contraction dim so each
+    partial psum overlaps with the next chunk's GEMM."""
+    n = lax.axis_size(axis)
+    k = y.shape[-1]
+    chunks = comm_chunks if comm_chunks else n
+    chunks = max(1, min(chunks, k))
+    while k % chunks:
+        chunks -= 1
+    ck = k // chunks
+    parts = []
+    for c in range(chunks):
+        yc = lax.dynamic_slice_in_dim(y, c * ck, ck, axis=y.ndim - 1)
+        wc = lax.dynamic_slice_in_dim(w, c * ck, ck, axis=0)
+        parts.append(lax.psum(jnp.einsum("...mf,fd->...md", yc, wc), axis))
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decomposed_bidir: counter-rotating half-rings (beyond-paper).  ICI torus
+# links are full-duplex PER DIRECTION: splitting the ring into two opposite
+# half-volume rings halves the per-link traffic -> ~2x on ring-bound seams.
+# ---------------------------------------------------------------------------
+def _ag_matmul_bidir(x: Array, w: Array, axis: str, comm_chunks: int) -> Array:
+    n = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    s_shard = x.shape[-2]
+    half = s_shard // 2
+    if half == 0 or s_shard % 2:
+        return _ag_matmul_decomposed(x, w, axis, comm_chunks)
+    lo, hi = jnp.split(x, 2, axis=-2)          # top rides right, bottom left
+
+    y = jnp.zeros((*x.shape[:-2], s_shard * n, w.shape[-1]),
+                  jnp.result_type(x.dtype, w.dtype))
+    buf_r, buf_l = lo, hi
+    for step in range(n):
+        owner_r = (me - step) % n
+        owner_l = (me + step) % n
+        y = lax.dynamic_update_slice_in_dim(
+            y, jnp.einsum("...sd,df->...sf", buf_r, w),
+            owner_r * s_shard, axis=y.ndim - 2)
+        y = lax.dynamic_update_slice_in_dim(
+            y, jnp.einsum("...sd,df->...sf", buf_l, w),
+            owner_l * s_shard + half, axis=y.ndim - 2)
+        if step < n - 1:
+            buf_r = lax.ppermute(buf_r, axis, _ring_perm(axis))
+            buf_l = lax.ppermute(buf_l, axis, _ring_perm(axis, reverse=True))
+    return y
+
+
+def _matmul_rs_bidir(y: Array, w: Array, axis: str, comm_chunks: int) -> Array:
+    n = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    seq = y.shape[-2]
+    s_shard = seq // n
+    if s_shard % 2:
+        return _matmul_rs_decomposed(y, w, axis, comm_chunks)
+    half = s_shard // 2
+
+    def partial(owner, top: bool):
+        off = owner * s_shard + (0 if top else half)
+        ys = lax.dynamic_slice_in_dim(y, off, half, axis=y.ndim - 2)
+        return jnp.einsum("...sf,fd->...sd", ys, w)
+
+    # top halves accumulate rightward, bottom halves leftward
+    acc_r = partial((me + n - 1) % n, True)
+    acc_l = partial((me - (n - 1)) % n, False)
+    for s_ in range(1, n):
+        acc_r = lax.ppermute(acc_r, axis, _ring_perm(axis))
+        acc_l = lax.ppermute(acc_l, axis, _ring_perm(axis, reverse=True))
+        acc_r = acc_r + partial((me + n - 1 - s_) % n, True)
+        acc_l = acc_l + partial((me - (n - 1) + s_) % n, False)
+    return jnp.concatenate([acc_r, acc_l], axis=y.ndim - 2)
+
+
+# ---------------------------------------------------------------------------
+# *_q8: int8 block-quantized activation gather (beyond-paper knob)
+# ---------------------------------------------------------------------------
+_Q8_BLOCK = 128
+
+
+def _q8_encode(x: Array) -> Tuple[Array, Array]:
+    d = x.shape[-1]
+    blocks = d // _Q8_BLOCK if d % _Q8_BLOCK == 0 else 1
+    xb = x.reshape(*x.shape[:-1], blocks, d // blocks).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(*x.shape), scale[..., 0].astype(jnp.float32)
+
+
+def _q8_decode(q: Array, scale: Array, dtype) -> Array:
+    d = q.shape[-1]
+    blocks = scale.shape[-1]
+    xb = q.reshape(*q.shape[:-1], blocks, d // blocks).astype(jnp.float32)
+    return (xb * scale[..., None]).reshape(*q.shape).astype(dtype)
+
+
+def _ag_matmul_q8(x: Array, w: Array, axis: str, base: str,
+                  comm_chunks: int) -> Array:
+    q, s = _q8_encode(x)
+    qf = lax.all_gather(q, axis, axis=q.ndim - 2, tiled=True)
+    sf = lax.all_gather(s, axis, axis=s.ndim - 2, tiled=True)
+    full = _q8_decode(qf, sf, x.dtype)
+    return jnp.einsum("...sd,df->...sf", full, w)
+
+
+# ---------------------------------------------------------------------------
+# mode="flux": fused Pallas kernels (see repro/kernels/)
+# ---------------------------------------------------------------------------
+def _ag_matmul_flux(x: Array, w: Array, axis: str) -> Array:
+    from repro.kernels import ops as kops
+    # Kernels operate on [m_shard, k] @ [k, n] 2-D operands and gather along
+    # m in SHARD-MAJOR order.  Move the (sharded) sequence dim to the front so
+    # shard-major == sequence order, then flatten the batch dims into m.
+    n = _axis_size(axis)
+    lead = x.shape[:-2]
+    xt = jnp.moveaxis(x, -2, 0)                        # [S/N, *lead, D]
+    x2 = xt.reshape((-1, x.shape[-1]))                 # [(S/N)*B_flat, D]
+    y2 = kops.ag_matmul_fused(x2, w, axis_name=axis)   # [S*B_flat, F/N]
+    yt = y2.reshape((x.shape[-2] * n, *lead, w.shape[-1]))
+    return jnp.moveaxis(yt, 0, -2)                     # [*lead, S, F/N]
+
+
+def _matmul_rs_flux(y: Array, w: Array, axis: str) -> Array:
+    from repro.kernels import ops as kops
+    n = _axis_size(axis)
+    lead = y.shape[:-2]
+    yt = jnp.moveaxis(y, -2, 0)                        # [S, *lead, F/N]
+    y2 = yt.reshape((-1, y.shape[-1]))
+    o2 = kops.matmul_rs_fused(y2, w, axis_name=axis)   # [S/N * B_flat, D]
+    ot = o2.reshape((y.shape[-2] // n, *lead, w.shape[-1]))
+    return jnp.moveaxis(ot, 0, -2)                     # [*lead, S/N, D]
+
+
+# ---------------------------------------------------------------------------
+# Public, differentiable API
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def ag_matmul(x: Array, w: Array, axis: Optional[str] = None,
+              mode: str = "decomposed", comm_chunks: int = 0) -> Array:
+    """(AllGather along seq) @ w, overlapped per ``mode``."""
+    return _ag_matmul_impl(x, w, axis, mode, comm_chunks)
+
+
+def _ag_matmul_impl(x, w, axis, mode, comm_chunks):
+    assert mode in VALID_MODES, mode
+    if axis is None or _axis_size(axis) == 1:
+        return jnp.einsum("...sd,df->...sf", x, w)
+    if mode == "xla":
+        return _ag_matmul_xla(x, w, axis)
+    if mode == "flux":
+        return _ag_matmul_flux(x, w, axis)
+    if mode.endswith("_q8"):
+        return _ag_matmul_q8(x, w, axis, mode[:-3], comm_chunks)
+    if mode == "decomposed_bidir":
+        return _ag_matmul_bidir(x, w, axis, comm_chunks)
+    return _ag_matmul_decomposed(x, w, axis, comm_chunks)
+
+
+def _ag_matmul_fwd(x, w, axis, mode, comm_chunks):
+    return _ag_matmul_impl(x, w, axis, mode, comm_chunks), (x, w)
+
+
+def _ag_matmul_bwd(axis, mode, comm_chunks, res, g):
+    x, w = res
+    # dX: GEMM + ReduceScatter — the interchanged overlapped op.
+    dx = _matmul_rs_impl(g, w.T, axis, mode, comm_chunks)
+    # dW: contraction over gathered tokens (the re-gather is unavoidable —
+    # a "sequence-partial + psum" variant was tried and REFUTED: each
+    # device's g covers different weight columns, so shard-partials cannot
+    # be psum-combined; see EXPERIMENTS.md §Perf iteration log).
+    if axis is None or _axis_size(axis) == 1:
+        xf = x
+    else:
+        xf = lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
+    dw = jnp.einsum("...sd,...sf->df", xf, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+ag_matmul.defvjp(_ag_matmul_fwd, _ag_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul_rs(y: Array, w: Array, axis: Optional[str] = None,
+              mode: str = "decomposed", comm_chunks: int = 0) -> Array:
+    """ReduceScatter_seq(y @ w), overlapped per ``mode``."""
+    return _matmul_rs_impl(y, w, axis, mode, comm_chunks)
+
+
+def _matmul_rs_impl(y, w, axis, mode, comm_chunks):
+    assert mode in VALID_MODES, mode
+    if mode.endswith("_q8"):
+        mode = mode[:-3]     # RS partials keep full precision (they SUM)
+    if axis is None or _axis_size(axis) == 1:
+        return jnp.einsum("...sf,fd->...sd", y, w)
+    if mode == "xla":
+        return _matmul_rs_xla(y, w, axis)
+    if mode == "flux":
+        return _matmul_rs_flux(y, w, axis)
+    if mode == "decomposed_bidir":
+        return _matmul_rs_bidir(y, w, axis, comm_chunks)
+    return _matmul_rs_decomposed(y, w, axis, comm_chunks)
+
+
+def _matmul_rs_fwd(y, w, axis, mode, comm_chunks):
+    return _matmul_rs_impl(y, w, axis, mode, comm_chunks), (y, w)
+
+
+def _matmul_rs_bwd(axis, mode, comm_chunks, res, g):
+    y, w = res
+    # dY: AllGather + GEMM — interchanged overlapped op.
+    dy = _ag_matmul_impl(g, w.T, axis, mode, comm_chunks)
+    if axis is None or _axis_size(axis) == 1:
+        gf = g
+    else:
+        gf = lax.all_gather(g, axis, axis=g.ndim - 2, tiled=True)
+    dw = jnp.einsum("...sf,...sd->fd", y, gf)
+    return dy.astype(y.dtype), dw.astype(w.dtype)
+
+
+matmul_rs.defvjp(_matmul_rs_fwd, _matmul_rs_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul_ar(y: Array, w: Array, axis: Optional[str] = None,
+              mode: str = "decomposed", comm_chunks: int = 0) -> Array:
+    """AllReduce(y @ w) — the decode-path row-parallel GEMM."""
+    return _matmul_ar_impl(y, w, axis, mode, comm_chunks)
+
+
+def _matmul_ar_impl(y, w, axis, mode, comm_chunks):
+    if axis is None or _axis_size(axis) == 1:
+        return jnp.einsum("...mf,fd->...md", y, w)
+    if mode.startswith("decomposed"):
+        return _matmul_ar_decomposed(y, w, axis, comm_chunks)
+    # xla / flux(decode uses XLA AR: one-token GEMMs are latency- not
+    # bandwidth-bound; the fused kernel's win is in the big seams)
+    return lax.psum(jnp.einsum("...mf,fd->...md", y, w), axis)
+
+
+def _matmul_ar_fwd(y, w, axis, mode, comm_chunks):
+    return _matmul_ar_impl(y, w, axis, mode, comm_chunks), (y, w)
+
+
+def _matmul_ar_bwd(axis, mode, comm_chunks, res, g):
+    y, w = res
+    dy = jnp.einsum("...md,fd->...mf", g, w)
+    dw = jnp.einsum("...mf,...md->fd", y, g)
+    return dy.astype(y.dtype), dw.astype(w.dtype)
+
+
+matmul_ar.defvjp(_matmul_ar_fwd, _matmul_ar_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Reference (oracle) versions for tests: always the naive collective form.
+# ---------------------------------------------------------------------------
+def ag_matmul_ref(x: Array, w: Array, axis: Optional[str]) -> Array:
+    if axis is None or _axis_size(axis) == 1:
+        return jnp.einsum("...sd,df->...sf", x, w)
+    return _ag_matmul_xla(x, w, axis)
+
+
+def matmul_rs_ref(y: Array, w: Array, axis: Optional[str]) -> Array:
+    if axis is None or _axis_size(axis) == 1:
+        return jnp.einsum("...sf,fd->...sd", y, w)
+    return _matmul_rs_xla(y, w, axis)

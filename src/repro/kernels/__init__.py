@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute/communication hot-spots:
+#   ag_gemm    — fused AllGather-GEMM ring (FLUX prologue fusion)
+#   gemm_rs    — fused GEMM-ReduceScatter ring (FLUX epilogue fusion)
+#   matmul     — best non-split GEMM (the paper's ECT baseline)
+#   flash_attention — causal flash w/ block skipping (prefill hotspot)
+#   mla_decode — fused absorbed-MLA decode attention (decode hotspot)
+# ops.py holds the jit-ready wrappers; ref.py the pure-jnp oracles.

@@ -1,0 +1,158 @@
+"""Fused GEMM-ReduceScatter Pallas TPU kernel (FLUX Algorithm 1, TPU-native).
+
+Per device:  out = shard_me( sum_over_ranks( A @ B ) ),  A: [M, K_sh] (local
+K columns), B: [K_sh, N].  The reduction is *fused into the matmul epilogue*
+— the fp32 accumulator of each output tile is folded with the partial tile
+arriving from the upstream neighbor, then immediately DMA'd downstream
+(tile-granular AlltoAll of FLUX §3.1, adapted to the ICI ring so every hop is
+a single neighbor link).
+
+Differences vs. the GPU original, by design (DESIGN.md §2):
+  - FLUX scatters each tile directly to its owner (1 NVLink hop) and reduces
+    with atomics / specialized warps.  On an ICI torus the bandwidth-optimal
+    schedule is the ring: partials accumulate as they travel, so the "Reduce
+    branch" costs one VPU add per tile and needs no atomics.
+  - Tile-coordinate swizzling: rank ``me`` computes the partial for owner
+    ``(me + n-1 - s) mod n`` at ring step ``s``, so at any instant the n
+    in-flight buffers target n distinct owners — the ring version of FLUX's
+    Fig. 7 memory-contention fix (every link busy, no converging writes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M/n,N]
+                    ws, acc_ref, a_vmem, b_vmem, stage, o_stage,
+                    send_sem, recv_sem, copy_a, copy_b, copy_o,
+                    *, axis_name: str, n_dev: int, reverse: bool,
+                    bm: int, bk: int, bn: int):
+    step = pl.program_id(0)
+    mi = pl.program_id(1)
+    ni = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_m, n_n, n_k = pl.num_programs(1), pl.num_programs(2), pl.num_programs(3)
+
+    me = lax.axis_index(axis_name)
+    sgn = -1 if reverse else 1
+    nbr = lax.rem(me + sgn + n_dev, n_dev)
+    # swizzle: owner of the partial we compute at this step
+    owner = lax.rem(me + sgn * (n_dev - 1 - step) + 2 * n_dev, n_dev)
+    m_sh = n_m * bm
+
+    # ---- contraction: accumulate A[owner rows] @ B for this tile ------------
+    ca = pltpu.make_async_copy(
+        a_ref.at[pl.ds(owner * m_sh + mi * bm, bm), pl.ds(ki * bk, bk)],
+        a_vmem, copy_a)
+    cb = pltpu.make_async_copy(
+        b_ref.at[pl.ds(ki * bk, bk), pl.ds(ni * bn, bn)], b_vmem, copy_b)
+    ca.start(); cb.start(); ca.wait(); cb.wait()
+
+    @pl.when(ki == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_vmem[...], b_vmem[...],
+                            preferred_element_type=jnp.float32)
+
+    # ---- epilogue: fold incoming partial, forward (or emit) the tile --------
+    @pl.when(ki == n_k - 1)
+    def _epilogue():
+        @pl.when(step > 0)
+        def _fold_incoming():
+            # WaitSignal for THIS tile of the in-flight buffer, then fuse the
+            # reduction into the accumulator (FLUX "Reduce branch").
+            pltpu.make_async_remote_copy(
+                src_ref=ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
+                dst_ref=ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
+                send_sem=send_sem, recv_sem=recv_sem,
+                device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+            ).wait_recv()
+            inc = pltpu.make_async_copy(
+                ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
+                stage, copy_a)
+            inc.start(); inc.wait()
+            acc_ref[...] += stage[...].astype(jnp.float32)
+
+        @pl.when(step < n_dev - 1)
+        def _forward_tile():
+            stage[...] = acc_ref[...].astype(stage.dtype)
+            st = pltpu.make_async_copy(
+                stage, ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
+                copy_o)
+            st.start(); st.wait()
+            pltpu.make_async_remote_copy(
+                src_ref=ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
+                dst_ref=ws.at[step + 1, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
+                send_sem=send_sem, recv_sem=recv_sem,
+                device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+            ).start()
+
+        @pl.when(step == n_dev - 1)
+        def _emit():
+            # final step computes OUR shard (owner == me): write the reduced
+            # tile straight to the output — epilogue fusion, no extra pass.
+            o_stage[...] = acc_ref[...].astype(o_stage.dtype)
+            co = pltpu.make_async_copy(
+                o_stage, o_ref.at[pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)], copy_o)
+            co.start(); co.wait()
+
+        # drain one outstanding tile-send per tile from the previous step so
+        # the semaphore balances by kernel exit.
+        @pl.when(step > 0)
+        def _drain_prev_send():
+            pltpu.make_async_remote_copy(
+                src_ref=ws.at[step - 1, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
+                dst_ref=ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
+                send_sem=send_sem, recv_sem=recv_sem,
+                device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+            ).wait_send()
+
+
+def gemm_rs(a_local: jax.Array, b_local: jax.Array, *, axis_name: str,
+            n_dev: int, bm: int = 256, bk: int = 512, bn: int = 256,
+            reverse: bool = False, out_dtype=None, partial_dtype=None,
+            interpret: bool = False, collective_id: int = 1) -> jax.Array:
+    """out[M/n, N] = ReduceScatter_m(A_local @ B_local), fused.  Call inside
+    shard_map; A column(K)-sharded, B row(K)-sharded over ``axis_name``."""
+    m, k_sh = a_local.shape
+    k2, n = b_local.shape
+    assert k_sh == k2
+    assert m % n_dev == 0, (m, n_dev)
+    m_sh = m // n_dev
+    out_dtype = out_dtype or a_local.dtype
+    partial_dtype = partial_dtype or out_dtype
+    bm, bk, bn = min(bm, m_sh), min(bk, k_sh), min(bn, n)
+    assert m_sh % bm == 0 and k_sh % bk == 0 and n % bn == 0, (
+        f"gemm_rs dims ({m_sh},{k_sh},{n}) vs blocks ({bm},{bk},{bn})")
+    grid = (n_dev, m_sh // bm, n // bn, k_sh // bk)
+    kernel = functools.partial(
+        _gemm_rs_kernel, axis_name=axis_name, n_dev=n_dev, reverse=reverse,
+        bm=bm, bk=bk, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((m_sh, n), out_dtype),
+        scratch_shapes=[
+            pl.ANY((n_dev, m_sh, n), partial_dtype),    # in-flight partials
+            pltpu.VMEM((bm, bn), jnp.float32),          # accumulator
+            pltpu.VMEM((bm, bk), a_local.dtype),
+            pltpu.VMEM((bk, bn), b_local.dtype),
+            pltpu.VMEM((bm, bn), partial_dtype),        # stage/cast buffer
+            pltpu.VMEM((bm, bn), out_dtype),            # output cast buffer
+            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
+        interpret=interpret,
+    )(a_local, b_local)

@@ -1,0 +1,59 @@
+"""Baseline tiled MXU matmul Pallas kernel — the "best non-split GEMM".
+
+This is the GEMM_non-split of the paper's Effective-Communication-Time metric
+(Eq. 1): all overlap modes are compared against the SAME best matmul.  Block
+shapes are MXU-aligned (multiples of 128) and the fp32 accumulator lives in
+VMEM across the K-contraction grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, *,
+           bm: int = 256, bk: int = 512, bn: int = 256,
+           out_dtype=None, interpret: bool = False) -> jax.Array:
+    """C = A @ B with fp32 accumulation.  A: [M, K], B: [K, N]."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"matmul dims ({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})")
+    out_dtype = out_dtype or a.dtype
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

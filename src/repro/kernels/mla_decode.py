@@ -1,0 +1,108 @@
+"""Fused absorbed-MLA decode attention Pallas kernel.
+
+DeepSeek-V3 decode reads the latent KV cache TWICE in the unfused form
+(scores pass + context pass) and materializes fp32 scores in HBM.  This
+kernel fuses both passes flash-style: one streaming read of the [S, R]
+latent cache per step, online softmax, context accumulated in VMEM.
+
+    scores_s = q_eff · c_s + q_rope · kr_s          (per cached position s)
+    ctx      = softmax(scores) · C                   [H, R]
+
+Identified as the deepseek_v3_671b/decode_32k §Perf cell's next lever —
+the FLUX idea (fuse the neighboring data movement into the compute kernel)
+applied beyond GEMM+collective seams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mla_kernel(valid_ref,                     # SMEM [1]: valid length
+                qe_ref, qr_ref, c_ref, kr_ref,  # VMEM blocks
+                o_ref,
+                m_ref, l_ref, acc_ref,
+                *, bs: int, scale: float):
+    sj = pl.program_id(1)
+    n_s = pl.num_programs(1)
+
+    @pl.when(sj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qe = qe_ref[0].astype(jnp.float32)          # [H, R]
+    qr = qr_ref[0].astype(jnp.float32)          # [H, Dr]
+    c = c_ref[0].astype(jnp.float32)            # [bs, R]
+    kr = kr_ref[0].astype(jnp.float32)          # [bs, Dr]
+
+    s = (jnp.dot(qe, c.T, preferred_element_type=jnp.float32)
+         + jnp.dot(qr, kr.T, preferred_element_type=jnp.float32)) * scale
+    pos = sj * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < valid_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                      # [H, bs]
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, c, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(sj == n_s - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def mla_decode_attention(q_eff: jax.Array, q_rope: jax.Array,
+                         c_cache: jax.Array, kr_cache: jax.Array,
+                         valid_len: jax.Array, *, scale: float,
+                         bs: int = 512, interpret: bool = False) -> jax.Array:
+    """q_eff: [B, H, R]; q_rope: [B, H, Dr]; c_cache: [B, S, R];
+    kr_cache: [B, S, Dr]; valid_len: scalar int32 (positions < valid attend).
+    Returns ctx over the latent: [B, H, R] fp32."""
+    b, h, r = q_eff.shape
+    s = c_cache.shape[1]
+    dr = q_rope.shape[-1]
+    bs = min(bs, s)
+    while s % bs:
+        bs //= 2
+    grid = (b, s // bs)
+    cost = pl.CostEstimate(
+        flops=int(2 * b * h * s * (2 * r + dr)),
+        bytes_accessed=int(c_cache.nbytes + kr_cache.nbytes
+                           + q_eff.nbytes + q_rope.nbytes + b * h * r * 4),
+        transcendentals=int(b * h * s),
+    )
+    out = pl.pallas_call(
+        functools.partial(_mla_kernel, bs=bs, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, h, r), lambda bi, sj: (bi, 0, 0)),
+            pl.BlockSpec((1, h, dr), lambda bi, sj: (bi, 0, 0)),
+            pl.BlockSpec((1, bs, r), lambda bi, sj: (bi, sj, 0)),
+            pl.BlockSpec((1, bs, dr), lambda bi, sj: (bi, sj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, r), lambda bi, sj: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, r), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        cost_estimate=cost,
+        interpret=interpret,
+    )(valid_len.reshape(1), q_eff, q_rope, c_cache, kr_cache)
+    return out

@@ -1,0 +1,91 @@
+"""jit-ready wrappers around the Pallas kernels.
+
+Handles block-size planning (MXU-aligned where shapes allow), interpret-mode
+selection (CPU container -> interpret; real TPU -> Mosaic), and padding.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ag_gemm as _ag
+from repro.kernels import gemm_rs as _rs
+from repro.kernels import matmul as _mm
+
+
+def _interpret_default() -> bool:
+    """Mosaic lowering needs a TPU toolchain; interpret everywhere else."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def pick_block(dim: int, pref: int) -> int:
+    """Largest MXU-friendly block <= pref dividing dim (multiples of 128 when
+    possible, else largest divisor <= pref)."""
+    b = min(pref, dim)
+    b -= b % 128 or 0
+    while b >= 128:
+        if dim % b == 0:
+            return b
+        b -= 128
+    b = min(pref, dim)
+    while b > 1:
+        if dim % b == 0:
+            return b
+        b -= 1
+    return 1
+
+
+def plan_blocks(m: int, k: int, n: int,
+                bm: int = 256, bk: int = 512, bn: int = 256):
+    return pick_block(m, bm), pick_block(k, bk), pick_block(n, bn)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, interpret: Optional[bool] = None,
+           **kw) -> jax.Array:
+    """Best non-split GEMM (the paper's GEMM_non-split baseline)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    bm, bk, bn = plan_blocks(a.shape[0], a.shape[1], b.shape[1],
+                             kw.pop("bm", 256), kw.pop("bk", 512),
+                             kw.pop("bn", 256))
+    return _mm.matmul(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret, **kw)
+
+
+def ag_matmul_fused(a_shard: jax.Array, b_local: jax.Array, *, axis_name: str,
+                    n_dev: Optional[int] = None, reverse: bool = False,
+                    interpret: Optional[bool] = None, **kw) -> jax.Array:
+    """Fused AllGather-GEMM (call inside shard_map)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n_dev = n_dev or lax.axis_size(axis_name)
+    if n_dev == 1:
+        return matmul(a_shard, b_local, interpret=interpret)
+    bm, bk, bn = plan_blocks(a_shard.shape[0], a_shard.shape[1],
+                             b_local.shape[1], kw.pop("bm", 256),
+                             kw.pop("bk", 512), kw.pop("bn", 256))
+    return _ag.ag_gemm(a_shard, b_local, axis_name=axis_name, n_dev=n_dev,
+                       bm=bm, bk=bk, bn=bn, reverse=reverse,
+                       interpret=interpret, **kw)
+
+
+def matmul_rs_fused(a_local: jax.Array, b_local: jax.Array, *, axis_name: str,
+                    n_dev: Optional[int] = None, reverse: bool = False,
+                    interpret: Optional[bool] = None, **kw) -> jax.Array:
+    """Fused GEMM-ReduceScatter (call inside shard_map)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n_dev = n_dev or lax.axis_size(axis_name)
+    if n_dev == 1:
+        return matmul(a_local, b_local, interpret=interpret)
+    m_sh = a_local.shape[0] // n_dev
+    bm, bk, bn = plan_blocks(m_sh, a_local.shape[1], b_local.shape[1],
+                             kw.pop("bm", 256), kw.pop("bk", 512),
+                             kw.pop("bn", 256))
+    return _rs.gemm_rs(a_local, b_local, axis_name=axis_name, n_dev=n_dev,
+                       bm=bm, bk=bk, bn=bn, reverse=reverse,
+                       interpret=interpret, **kw)

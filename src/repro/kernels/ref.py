@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (single-device semantics).
+
+Distributed kernels (ag_matmul / matmul_rs) have per-device oracles given the
+GLOBAL operands; tests run them under shard_map against ``lax`` collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """fp32-accumulating matmul oracle."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def ag_matmul_ref_global(a_global: jax.Array, b_local: jax.Array) -> jax.Array:
+    """Oracle for the fused AllGather-GEMM given the ALREADY-GATHERED A.
+    Per device, output is the full-M product against the local B columns."""
+    return matmul_ref(a_global, b_local)
+
+
+def matmul_rs_ref_global(partials: jax.Array, shard_id: int, n_shards: int) -> jax.Array:
+    """Oracle for fused GEMM-ReduceScatter: ``partials`` is [n_dev, M, N] of
+    per-device partial products; returns shard ``shard_id`` of the sum."""
+    total = jnp.sum(partials.astype(jnp.float32), axis=0)
+    m_shard = total.shape[0] // n_shards
+    return jax.lax.dynamic_slice_in_dim(total, shard_id * m_shard, m_shard, axis=0)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Naive softmax attention oracle.  q,k,v: [B, H, S, D] (k/v may have
+    fewer heads — GQA — broadcast by repetition)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        skv = k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def mla_decode_attention_ref(q_eff, q_rope, c_cache, kr_cache, valid_len,
+                             scale):
+    """Oracle for the fused absorbed-MLA decode attention."""
+    s = (jnp.einsum("bhr,bsr->bhs", q_eff.astype(jnp.float32),
+                    c_cache.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                      kr_cache.astype(jnp.float32))) * scale
+    pos = jnp.arange(c_cache.shape[1])
+    s = jnp.where(pos[None, None, :] < valid_len, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", w, c_cache.astype(jnp.float32))

@@ -1,0 +1,434 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init); 512 placeholder CPU devices back the production
+meshes 16x16 (single pod) and 2x16x16 (two pods).
+
+Per cell this script records, into experiments/dryrun/<cell>.json:
+  - compiled.memory_analysis()  (bytes per device: args/outputs/temps)
+  - compiled.cost_analysis()    (XLA's numbers — undercounts on CPU, kept
+                                 for reference)
+  - the jaxpr-analyzer's per-device FLOPs / HBM bytes / collective bytes
+    (exact; scan-aware — the roofline inputs, see analysis/jaxpr_cost.py)
+  - collective-op counts from the optimized HLO text (cross-check)
+  - MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (serve) and the
+    usefulness ratio MODEL_FLOPS / analyzer FLOPs.
+
+Usage:
+  python -m repro.launch.dryrun --arch codeqwen15_7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import jaxpr_cost as JC
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ParallelConfig,
+                                ShapeConfig, get_config, shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.presets import production_parallel
+from repro.models import model as M
+from repro.models import serve as S
+from repro.optim import adamw
+from repro.parallel.sharding import TPContext
+from repro.runtime import trainer as T
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+def batch_sds(cfg: ModelConfig, shape: ShapeConfig, par: ParallelConfig,
+              mesh) -> Tuple[Dict, Dict]:
+    b, s = shape.global_batch, shape.seq_len
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_total = par.dp * par.pods
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    if b % dp_total:
+        dp = None                      # tiny batches: replicate over data
+    if cfg.frontend:
+        sds = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                              jnp.bfloat16),
+               "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        spec = {"embeds": P(dp, "model", None), "labels": P(dp, None)}
+    else:
+        sds = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        spec = {"tokens": P(dp, None), "labels": P(dp, None)}
+    return sds, spec
+
+
+# named optimization sets for §Perf hillclimbing (dryrun --opt <name>)
+OPT_SETS = {
+    "fusedproj": {"fuse_w13": True},
+    "mlakernel": {"kernel_decode": True},
+    "kernels": {"kernel_decode": True},
+    "rematdots": {"remat": "selective"},
+    "norematfull": {"remat": "none"},
+}
+# cells where fp32 moments cannot fit (EXPERIMENTS §Dry-run memory finding)
+BF16_MOMENT_ARCHS = {"deepseek_v3_671b"}
+
+
+def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False,
+                overlap_mode: str = "decomposed", opt: str = ""):
+    """Public entry: (cfg, shape, par, mesh) for a cell."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    par = production_parallel(cfg, multi_pod=multi_pod, kind=shape.kind,
+                              overlap_mode=overlap_mode)
+    for name in [o for o in opt.split("+") if o]:
+        par = _dc.replace(par, **OPT_SETS[name])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return cfg, shape, par, mesh
+
+
+# ---------------------------------------------------------------------------
+# per-kind step builders
+# ---------------------------------------------------------------------------
+def build_train(cfg, shape, par, mesh):
+    tc = T.TrainConfig(total_steps=1000, base_lr=3e-4)
+    moment_dtype = ("bfloat16" if cfg.name in BF16_MOMENT_ARCHS
+                    else "float32")
+    params_eval = jax.eval_shape(
+        lambda: M.init_model(jax.random.PRNGKey(0), cfg, par))
+    pspecs = M.param_specs(cfg, par, params_eval)
+    opt_eval = jax.eval_shape(
+        lambda p: adamw.init_opt_state(p, moment_dtype), params_eval)
+    step_fn = T.make_train_step(cfg, par, mesh, adamw.AdamWConfig(), tc,
+                                pspecs)
+    bsds, bspec = batch_sds(cfg, shape, par, mesh)
+    # shard_map requires batch specs to match; rebuild with the cell's specs
+    ctx = T.make_ctx(cfg, par, mesh)
+    pod_axis = "pod" if "pod" in mesh.axis_names else None
+    model_rep = adamw.model_replicated_tree(pspecs)
+    opt_specs = adamw.opt_state_specs(pspecs, params_eval, par.dp, par.tp)
+    from repro.optim import schedule as sched
+    schedule_fn = sched.get_schedule(tc.schedule)
+
+    def step_fn_inner(params, opt, batch, step):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.forward_loss(p, batch, ctx, cfg, par))(params)
+        grads = jax.tree.map(
+            lambda g, rep: jax.lax.psum(g, "model") if rep else g,
+            grads, model_rep)
+        loss = jax.lax.pmean(loss, ctx.dp_axes)
+        lr = schedule_fn(step, base_lr=tc.base_lr, warmup=tc.warmup_steps,
+                         total=tc.total_steps)
+        params, opt = adamw.adamw_update(
+            params, grads, opt, adamw.AdamWConfig(), lr, specs=pspecs,
+            dp_axis="data", pod_axis=pod_axis, grad_compress=par.grad_compress)
+        return params, opt, loss
+
+    sm = jax.shard_map(step_fn_inner, mesh=mesh,
+                       in_specs=(pspecs, opt_specs, bspec, P()),
+                       out_specs=(pspecs, opt_specs, P()),
+                       check_vma=False)
+    fn = jax.jit(sm, donate_argnums=(0, 1))
+    args = (params_eval, opt_eval, bsds,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, args
+
+
+def build_decode(cfg, shape, par, mesh):
+    params_eval = jax.eval_shape(
+        lambda: M.init_model(jax.random.PRNGKey(0), cfg, par))
+    pspecs = M.param_specs(cfg, par, params_eval)
+    ctx = T.make_ctx(cfg, par, mesh)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b = shape.global_batch
+    dp_total = par.dp * par.pods
+    dpax = dp_axes if b % dp_total == 0 else ()
+    cache_sds, cache_spec = S.cache_specs(cfg, par, b, shape.seq_len,
+                                          dp_axes=dpax)
+    dp = dpax if len(dpax) > 1 else (dpax[0] if dpax else None)
+
+    def fn(params, caches, tokens, pos):
+        return S.decode_step(params, caches, tokens, pos, ctx, cfg, par)
+
+    sm = jax.shard_map(fn, mesh=mesh,
+                       in_specs=(pspecs, cache_spec, P(dp, None), P()),
+                       out_specs=(P(dp, None), cache_spec),
+                       check_vma=False)
+    jf = jax.jit(sm, donate_argnums=(1,))
+    args = (params_eval, cache_sds,
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return jf, args
+
+
+def build_prefill(cfg, shape, par, mesh):
+    params_eval = jax.eval_shape(
+        lambda: M.init_model(jax.random.PRNGKey(0), cfg, par))
+    pspecs = M.param_specs(cfg, par, params_eval)
+    ctx = T.make_ctx(cfg, par, mesh)
+    bsds, bspec = batch_sds(cfg, shape, par, mesh)
+    b = shape.global_batch
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_total = par.dp * par.pods
+    dpax = dp_axes if b % dp_total == 0 else ()
+    _, cache_spec = S.cache_specs(cfg, par, b, shape.seq_len,
+                                  dp_axes=dpax)
+    dp = dpax if len(dpax) > 1 else (dpax[0] if dpax else None)
+
+    def fn(params, batch):
+        return S.prefill_step(params, batch, ctx, cfg, par)
+
+    sm = jax.shard_map(fn, mesh=mesh,
+                       in_specs=(pspecs, bspec),
+                       out_specs=(P(dp, None), cache_spec),
+                       check_vma=False)
+    jf = jax.jit(sm)
+    bsds.pop("labels", None)
+    bspec.pop("labels", None)
+    return jf, (params_eval, bsds)
+
+
+BUILDERS = {"train": build_train, "prefill": build_prefill,
+            "decode": build_decode}
+
+
+# collective parsing from compiled HLO lives in analysis (importable
+# without touching jax device state)
+from repro.analysis.hlo_census import hlo_collective_counts  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+def reanalyze_cell(path: str) -> None:
+    """Refresh the analyzer fields of a cached cell JSON (fast: no compile)."""
+    with open(path) as f:
+        result = json.load(f)
+    if "skipped" in result or "error" in result:
+        return
+    cfg, shape, par, mesh = input_specs(
+        result["arch"], result["shape"],
+        multi_pod=result["mesh"] != "pod16x16",
+        overlap_mode=result.get("overlap_mode", "decomposed"),
+        opt=result.get("opt", ""))
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    with mesh:
+        fnw, argsw = BUILDERS[shape.kind](cfg, shape, par, mesh)
+        traced = jax.make_jaxpr(fnw)(*argsw)
+    cost = JC.analyze_jaxpr(traced.jaxpr, axis_sizes)
+    terms = JC.roofline_terms(cost)
+    n_params = M.count_params_analytic(cfg)
+    n_active = M.count_params_analytic(cfg, active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+    chips = result["chips"]
+    result.update({
+        "analyzer": {
+            "flops_per_device": cost.flops,
+            "bytes_per_device": cost.bytes,
+            "bytes_all_per_device": cost.bytes_all,
+            "collective_bytes_per_device": cost.collective_bytes,
+            "collective_bytes_by_type": cost.collective_bytes_by_type,
+            "collective_counts": cost.collective_counts,
+            "compute_term_s": terms["compute_s"],
+            "memory_term_s": terms["memory_s"],
+            "collective_term_s": terms["collective_s"],
+            "ici_model_s": terms["ici_model_s"],
+            "ici_duplex_s": terms.get("ici_duplex_s", 0.0),
+            "dominant": terms["dominant"],
+        },
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops / chips,
+        "useful_ratio": (model_flops / chips) / max(cost.flops, 1.0),
+        "params": n_params,
+        "active_params": n_active,
+    })
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overlap_mode: str = "decomposed", force: bool = False,
+             out_dir: Optional[str] = None, opt: str = "",
+             extra_tag: str = "") -> Dict[str, Any]:
+    out_dir = out_dir or OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{mesh_tag}_{arch}_{shape_name}"
+    if overlap_mode != "decomposed":
+        tag += f"_{overlap_mode}"
+    if opt:
+        tag += f"_opt-{opt}"
+    if extra_tag:
+        tag += f"_{extra_tag}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg, shape, par, mesh = input_specs(arch, shape_name,
+                                        multi_pod=multi_pod,
+                                        overlap_mode=overlap_mode, opt=opt)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "overlap_mode": overlap_mode, "kind": shape.kind, "opt": opt,
+        "chips": int(np.prod(mesh.devices.shape)),
+    }
+    if not shape_applicable(cfg, shape):
+        result["skipped"] = ("long_500k requires sub-quadratic attention; "
+                             f"{arch} is full-attention (DESIGN.md §5)")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        return result
+
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = BUILDERS[shape.kind](cfg, shape, par, mesh)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+            mem = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        result.update({
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory_analysis": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            },
+            "xla_cost": {"flops": float(ca.get("flops", 0)),
+                         "bytes_accessed": float(ca.get("bytes accessed", 0))},
+            "hlo_collectives": hlo_collective_counts(hlo),
+            "hlo_chars": len(hlo),
+        })
+    except Exception as e:  # noqa: BLE001
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        raise
+
+    # jaxpr analyzer (separately traced, same step function + args)
+    try:
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        with mesh:
+            fnw, argsw = BUILDERS[shape.kind](cfg, shape, par, mesh)
+            traced = jax.make_jaxpr(fnw)(*argsw)
+        cost = JC.analyze_jaxpr(traced.jaxpr, axis_sizes)
+        terms = JC.roofline_terms(cost)
+        n_params = M.count_params_analytic(cfg)
+        n_active = M.count_params_analytic(cfg, active_only=True)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        if shape.kind == "train":
+            # 6·N·D (dense) / 6·N_active·D (MoE) per task statement
+            model_flops = 6.0 * n_active * tokens
+        else:
+            model_flops = 2.0 * n_active * tokens
+        chips = result["chips"]
+        result.update({
+            "analyzer": {
+                "flops_per_device": cost.flops,
+                "bytes_per_device": cost.bytes,
+                "collective_bytes_per_device": cost.collective_bytes,
+                "collective_bytes_by_type": cost.collective_bytes_by_type,
+                "collective_counts": cost.collective_counts,
+                "compute_term_s": terms["compute_s"],
+                "memory_term_s": terms["memory_s"],
+                "collective_term_s": terms["collective_s"],
+                "ici_model_s": terms["ici_model_s"],
+                "ici_duplex_s": terms.get("ici_duplex_s", 0.0),
+                "dominant": terms["dominant"],
+            },
+            "model_flops_global": model_flops,
+            "model_flops_per_device": model_flops / chips,
+            "useful_ratio": (model_flops / chips) / max(cost.flops, 1.0),
+            "params": n_params,
+            "active_params": n_active,
+        })
+    except Exception as e:  # noqa: BLE001
+        result["analyzer_error"] = f"{type(e).__name__}: {e}"
+
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mode", default="decomposed",
+                    choices=["xla", "decomposed", "flux", "xla_q8",
+                             "decomposed_q8", "decomposed_bidir"])
+    ap.add_argument("--opt", default="", help="named opt set(s), '+'-joined")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="retrace + refresh analyzer fields of cached cells "
+                         "(no recompile)")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        import glob as _glob
+        for path in sorted(_glob.glob(os.path.join(OUT_DIR, "*.json"))):
+            try:
+                reanalyze_cell(path)
+                print("[re]", os.path.basename(path))
+            except Exception as e:  # noqa: BLE001
+                print("[re-FAIL]", os.path.basename(path), e)
+        return
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        tag = f"{'2x16x16' if mp else '16x16'} {a} {s}"
+        try:
+            r = run_cell(a, s, multi_pod=mp, overlap_mode=args.mode,
+                         opt=args.opt, force=args.force)
+            if "skipped" in r:
+                print(f"[skip] {tag}: {r['skipped']}")
+            elif "error" in r:
+                print(f"[FAIL] {tag}: {r['error']}")
+                failures += 1
+            else:
+                dom = r.get("analyzer", {}).get("dominant", "?")
+                print(f"[ok]   {tag}: compile={r['compile_s']}s "
+                      f"dominant={dom}")
+        except Exception as e:  # noqa: BLE001
+            print(f"[FAIL] {tag}: {e}")
+            failures += 1
+    print(f"done; {failures} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

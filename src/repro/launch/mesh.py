@@ -1,0 +1,54 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing this
+module never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before importing jax.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(pods: int, dp: int, tp: int) -> Mesh:
+    """General mesh: drops the pod axis when pods == 1 and dp axis when dp == 1?
+
+    No — axes are kept stable ("pod","data","model") whenever pods > 1, and
+    ("data","model") otherwise, so PartitionSpecs in the model code can always
+    address "data" and "model"; the pod axis only appears at multi-pod scale.
+    """
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def smoke_mesh() -> Mesh:
+    """1-device mesh with the standard axis names, for CPU smoke tests."""
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that carry data parallelism (batch)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def elastic_remesh(surviving_devices: int, tp: int) -> Mesh:
+    """Rebuild a mesh after failures: keep TP intact (a TP group dies with any
+    of its members), shrink DP to what still forms full TP groups."""
+    usable = (surviving_devices // tp) * tp
+    if usable == 0:
+        raise RuntimeError(
+            f"cannot form a single {tp}-way TP group from {surviving_devices} devices")
+    dp = usable // tp
+    devs = np.array(jax.devices()[:usable]).reshape(dp, tp)
+    return Mesh(devs, ("data", "model"))

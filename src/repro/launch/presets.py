@@ -1,0 +1,28 @@
+"""Per-architecture parallelism presets for the production meshes."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def production_parallel(cfg: ModelConfig, *, multi_pod: bool = False,
+                        kind: str = "train",
+                        overlap_mode: str = "decomposed") -> ParallelConfig:
+    """ParallelConfig for the (2,)16x16 meshes, sized per arch family."""
+    pods = 2 if multi_pod else 1
+    big = cfg.name in ("deepseek_v3_671b", "qwen15_110b", "qwen2_vl_72b",
+                       "gpt3_175b", "llama4_scout_17b_a16e", "jamba_v01_52b")
+    zero3 = big and kind == "train"
+    ep_over_dp = (cfg.moe is not None
+                  and cfg.moe.num_experts > 16)          # deepseek: 256e
+    remat = "full" if (big and kind == "train") else (
+        "selective" if kind == "train" else "none")
+    return ParallelConfig(
+        tp=16, dp=16, pods=pods,
+        ep_over_dp=ep_over_dp,
+        zero3=zero3,
+        remat=remat,
+        overlap_mode=overlap_mode,
+        grad_compress=multi_pod,        # compress the slow cross-pod hop
+    )

@@ -1,0 +1,49 @@
+"""Serving launcher: continuous batching over a model checkpoint (or random
+init for smoke runs).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi4_mini_38b --smoke \
+      --requests 8
+"""
+import argparse
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ParallelConfig, get_config, get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.runtime.server import Request, ServeConfig, Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--mode", default="decomposed")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    par = ParallelConfig(tp=args.tp, dp=args.dp, overlap_mode=args.mode)
+    mesh = make_mesh(1, args.dp, args.tp)
+    params = M.init_model(jax.random.PRNGKey(0), cfg, par)
+
+    sc = ServeConfig(max_batch=4, max_seq=args.max_seq, eos_token=-1,
+                     max_new_tokens=args.max_new)
+    server = Server(cfg, par, mesh, params, sc)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=(8 + i,)).astype(np.int32))
+        for i in range(args.requests)]
+    done = server.serve(reqs)
+    for r in sorted(done, key=lambda x: x.rid):
+        print(f"req {r.rid}: +{len(r.output)} tokens: {r.output[:12]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch codeqwen15_7b \
+      --smoke --steps 20          # reduced config, CPU
+  python -m repro.launch.train --arch qwen15_110b --tp 16 --dp 16 \
+      --steps 1000 --mode flux    # production mesh (TPU pod)
+"""
+import argparse
+import dataclasses
+import logging
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ParallelConfig, get_config, get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import trainer as T
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--mode", default="decomposed",
+                    choices=["xla", "decomposed", "flux"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default=None,
+                    help="cosine|wsd (default: per-arch)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--zero3", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    par = ParallelConfig(tp=args.tp, dp=args.dp, pods=args.pods,
+                         overlap_mode=args.mode, zero3=args.zero3,
+                         grad_compress=args.grad_compress,
+                         ep_over_dp=(cfg.moe is not None
+                                     and cfg.moe.num_experts > 16),
+                         fuse_w13=True)
+    mesh = make_mesh(args.pods, args.dp, args.tp)
+
+    schedule = args.schedule or (
+        "wsd" if args.arch.startswith("minicpm") else "cosine")
+    tc = T.TrainConfig(total_steps=args.steps, warmup_steps=args.steps // 10,
+                       base_lr=args.lr, schedule=schedule,
+                       checkpoint_dir=args.ckpt_dir, log_every=10)
+    tr = T.Trainer(cfg, par, mesh, tc, AdamWConfig(lr=args.lr))
+    tr.data_cfg = dataclasses.replace(
+        tr.data_cfg, seq_len=args.seq, global_batch=args.batch)
+    params, opt, hist = tr.train(resume=args.ckpt_dir is not None)
+    print(f"final loss: {hist[-1]['loss']:.4f} "
+          f"(start {hist[0]['loss']:.4f}); straggler events "
+          f"{tr.straggler_events}; failures {tr.failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,399 @@
+"""Attention blocks: GQA (with RoPE / M-RoPE) and DeepSeek MLA.
+
+Train/prefill path (sequence-sharded x, Megatron-SP):
+    x[B,S/TP,D] --ag_matmul--> qkv[B,S,local heads]  (FLUX prologue seam)
+    blocked causal attention (local heads, full sequence)
+    attn_out --matmul_rs--> [B,S/TP,D]               (FLUX epilogue seam)
+
+Decode path (x replicated over TP, batch-sharded over DP):
+    local-head QKV projections, KV-cache append, single-token attention,
+    output projection via matmul_ar (GEMM+AllReduce seam).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import overlap
+from repro.models import layers
+from repro.parallel.sharding import TPContext, pad_heads, pad_kv_heads
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Blocked causal attention (pure-jnp flash; differentiable; O(S·block) memory)
+# ---------------------------------------------------------------------------
+def blocked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      block_q: int = 512, block_kv: int = 1024,
+                      scale: Optional[float] = None) -> Array:
+    """q: [B,H,Sq,Dh], k: [B,Hkv,Skv,Dh], v: [B,Hkv,Skv,Dv] (Dv may differ —
+    MLA); GQA via head broadcast."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    scale = scale or dh ** -0.5
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, dh)
+
+    block_q = min(block_q, sq)
+    while sq % block_q:
+        block_q //= 2
+    block_kv = min(block_kv, skv)
+    while skv % block_kv:
+        block_kv //= 2
+    nq, nkv = sq // block_q, skv // block_kv
+    kv_off = skv - sq  # q positions are the suffix of the kv timeline
+
+    qb = qg.reshape(b, hkv, group, nq, block_q, dh)
+    kb = k.reshape(b, hkv, nkv, block_kv, dh)
+    vb = v.reshape(b, hkv, nkv, block_kv, dv)
+
+    def q_block(qi, qblk):
+        # online softmax over kv blocks
+        def step(carry, j):
+            m, l, acc = carry
+            kj = lax.dynamic_index_in_dim(kb, j, axis=2, keepdims=False)
+            vj = lax.dynamic_index_in_dim(vb, j, axis=2, keepdims=False)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            if causal:
+                qpos = kv_off + qi * block_q + jnp.arange(block_q)
+                kpos = j * block_kv + jnp.arange(block_kv)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, group, block_q, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, group, block_q, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, group, block_q, dv), jnp.float32)
+        # causal: kv blocks beyond this q block contribute nothing; still
+        # scanned (static shapes) but masked out — remat keeps memory flat.
+        (m, l, acc), _ = lax.scan(step, (m0, l0, a0), jnp.arange(nkv))
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    outs = [q_block(qi, qb[:, :, :, qi]) for qi in range(nq)]
+    out = jnp.stack(outs, axis=3)  # [b,hkv,group,nq,bq,dh]
+    return out.reshape(b, hq, sq, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+class AttnDims(NamedTuple):
+    h_pad: int
+    hkv_pad: int
+    dh: int
+
+    @staticmethod
+    def of(cfg: ModelConfig, tp: int) -> "AttnDims":
+        return AttnDims(pad_heads(cfg.num_heads, tp),
+                        pad_kv_heads(cfg.num_kv_heads, tp),
+                        cfg.resolved_head_dim)
+
+
+def init_gqa(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16) -> Dict:
+    """Canonical (TP-independent) init, packed into the per-device
+    interleaved QKV layout; padded heads are ZERO (function-preserving)."""
+    from repro.models import init_utils as iu
+    d = AttnDims.of(cfg, tp)
+    dm = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = dm ** -0.5
+    wq = (jax.random.normal(k1, (dm, cfg.num_heads * d.dh)) * std)
+    wk = (jax.random.normal(k2, (dm, cfg.num_kv_heads * d.dh)) * std)
+    wv = (jax.random.normal(k3, (dm, cfg.num_kv_heads * d.dh)) * std)
+    wq = iu.interleave_heads(wq, cfg.num_heads, d.dh, tp, d.h_pad)
+    wk = iu.replicate_kv_heads(wk, cfg.num_kv_heads, d.dh, tp, d.hkv_pad)
+    wv = iu.replicate_kv_heads(wv, cfg.num_kv_heads, d.dh, tp, d.hkv_pad)
+    wqkv = iu.pack_qkv(wq, wk, wv, tp)
+    wo = (jax.random.normal(k4, (cfg.num_heads * d.dh, dm)) * std)
+    wo = iu.zero_pad_rows(wo, d.h_pad * d.dh)
+    p = {
+        "wqkv": wqkv.astype(dtype),
+        "wo": wo.astype(dtype),
+        "norm": layers.init_rms_norm(dm, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bqkv"] = jnp.zeros(((d.h_pad + 2 * d.hkv_pad) * d.dh,), dtype)
+    return p
+
+
+def gqa_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
+              positions_3d: Optional[Array] = None, with_cache: bool = False):
+    """x: [B, S/TP, D] -> [B, S/TP, D] (pre-norm residual block body).
+    with_cache=True additionally returns the prefill KV cache."""
+    tp = ctx.tp
+    d = AttnDims.of(cfg, tp)
+    hl, hkvl = d.h_pad // tp, d.hkv_pad // tp
+    b, s_loc, _ = x.shape
+    s = s_loc * tp
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    qkv = overlap.ag_matmul(h, p["wqkv"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"]
+    q, k, v = jnp.split(qkv, [hl * d.dh, (hl + hkvl) * d.dh], axis=-1)
+    q = q.reshape(b, s, hl, d.dh)
+    k = k.reshape(b, s, hkvl, d.dh)
+    v = v.reshape(b, s, hkvl, d.dh)
+
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.rope_style == "mrope":
+        p3 = positions_3d if positions_3d is not None else \
+            jnp.broadcast_to(pos, (3, b, s))
+        q = layers.apply_mrope(q, p3, cfg.rope_theta)
+        k = layers.apply_mrope(k, p3, cfg.rope_theta)
+    elif cfg.rope_style == "rope":
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+
+    if ctx.use_kernels:
+        # fused flash kernel: K/V stream in bf16 once per q-row block, no
+        # fp32 score round-trip (4th §Perf iteration — prefill memory)
+        from repro.kernels.flash_attention import flash_attention
+        attn = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        attn = blocked_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3))
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, hl * d.dh)
+    out = overlap.matmul_rs(attn, p["wo"], ctx.axis, ctx.mode,
+                            ctx.comm_chunks)
+    if with_cache:
+        return out, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+    return out
+
+
+def gqa_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
+               cfg: ModelConfig) -> Tuple[Array, Dict]:
+    """x: [B, 1, D] replicated over TP; cache: {k,v: [B, S_max, Hkv_l, Dh]}.
+    ``pos``: scalar current position.  Returns (out [B,1,D], new cache)."""
+    tp = ctx.tp
+    d = AttnDims.of(cfg, tp)
+    hl, hkvl = d.h_pad // tp, d.hkv_pad // tp
+    b = x.shape[0]
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    qkv = jnp.einsum("bsd,df->bsf", h, p["wqkv"])  # local columns; no comm
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"]
+    q, k, v = jnp.split(qkv, [hl * d.dh, (hl + hkvl) * d.dh], axis=-1)
+    q = q.reshape(b, 1, hl, d.dh)
+    k = k.reshape(b, 1, hkvl, d.dh)
+    v = v.reshape(b, 1, hkvl, d.dh)
+
+    pb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1))
+    if cfg.rope_style in ("rope", "mrope"):
+        q = layers.apply_rope(q, pb, cfg.rope_theta)
+        k = layers.apply_rope(k, pb, cfg.rope_theta)
+
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                         pos, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                         pos, axis=1)
+
+    # single-token attention over the cache (memory-bound; roofline's decode
+    # bottleneck).  mask positions > pos.
+    s_max = ck.shape[1]
+    group = hl // hkvl
+    qg = q.reshape(b, 1, hkvl, group, d.dh)
+    scores = jnp.einsum("bohgd,bshd->bhgos", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * (d.dh ** -0.5)
+    valid = (jnp.arange(s_max) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhgos,bshd->bohgd", w, cv.astype(jnp.float32))
+    attn = attn.reshape(b, 1, hl * d.dh).astype(x.dtype)
+
+    out = overlap.matmul_ar(attn, p["wo"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    return out, {"k": ck, "v": cv}
+
+
+def gqa_cache_spec(cfg: ModelConfig, tp: int, batch_local: int, s_max: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    d = AttnDims.of(cfg, tp)
+    hkvl = d.hkv_pad // tp
+    shape = (batch_local, s_max, hkvl, d.dh)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V3 Multi-head Latent Attention
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16) -> Dict:
+    m = cfg.mla
+    dm = cfg.d_model
+    h_pad = pad_heads(cfg.num_heads, tp)
+    ks = jax.random.split(key, 6)
+    std = dm ** -0.5
+    return {
+        "w_dq": (jax.random.normal(ks[0], (dm, m.q_lora_rank)) * std).astype(dtype),
+        "w_uq": (jax.random.normal(
+            ks[1], (m.q_lora_rank,
+                    h_pad * (m.qk_nope_head_dim + m.qk_rope_head_dim)))
+            * m.q_lora_rank ** -0.5).astype(dtype),
+        "w_dkv": (jax.random.normal(
+            ks[2], (dm, m.kv_lora_rank + m.qk_rope_head_dim)) * std).astype(dtype),
+        "w_ukv": (jax.random.normal(
+            ks[3], (m.kv_lora_rank,
+                    h_pad * (m.qk_nope_head_dim + m.v_head_dim)))
+            * m.kv_lora_rank ** -0.5).astype(dtype),
+        "w_o": (jax.random.normal(ks[4], (h_pad * m.v_head_dim, dm))
+                * std).astype(dtype),
+        "q_norm": layers.init_rms_norm(m.q_lora_rank, dtype),
+        "kv_norm": layers.init_rms_norm(m.kv_lora_rank, dtype),
+        "norm": layers.init_rms_norm(dm, dtype),
+    }
+
+
+def mla_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
+              with_cache: bool = False):
+    m = cfg.mla
+    tp = ctx.tp
+    h_pad = pad_heads(cfg.num_heads, tp)
+    hl = h_pad // tp
+    b, s_loc, _ = x.shape
+    s = s_loc * tp
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    # latent down-projections: replicated weights, sequence-local compute
+    q_lat = layers.rms_norm(jnp.einsum("bsd,dr->bsr", h, p["w_dq"]),
+                            p["q_norm"], cfg.norm_eps)
+    kv_all = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])
+    kv_lat = layers.rms_norm(kv_all[..., :m.kv_lora_rank], p["kv_norm"],
+                             cfg.norm_eps)
+    k_rope_s = kv_all[..., m.kv_lora_rank:]             # [B, S/TP, dr] shared
+
+    # RoPE on the shard (positions known locally), then gather sequence
+    pos_loc = layers.seq_positions(b, s_loc, ctx)
+    k_rope_s = layers.apply_rope(k_rope_s[:, :, None, :], pos_loc,
+                                 cfg.rope_theta)[:, :, 0, :]
+
+    # head up-projections: the FLUX AllGather-GEMM seams
+    q = overlap.ag_matmul(q_lat, p["w_uq"], ctx.axis, ctx.mode,
+                          ctx.comm_chunks).reshape(b, s, hl, dqk)
+    kv = overlap.ag_matmul(kv_lat, p["w_ukv"], ctx.axis, ctx.mode,
+                           ctx.comm_chunks)
+    kv = kv.reshape(b, s, hl, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+
+    if ctx.axis is not None and ctx.tp > 1:
+        k_rope = lax.all_gather(k_rope_s, ctx.axis, axis=1, tiled=True)
+    else:
+        k_rope = k_rope_s
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, pos, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, hl, m.qk_rope_head_dim))], axis=-1)
+
+    attn = blocked_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3),
+                             scale=dqk ** -0.5)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, hl * m.v_head_dim)
+    out = overlap.matmul_rs(attn, p["w_o"], ctx.axis, ctx.mode,
+                            ctx.comm_chunks)
+    if with_cache:
+        if ctx.axis is not None and ctx.tp > 1:
+            c_full = lax.all_gather(kv_lat, ctx.axis, axis=1, tiled=True)
+        else:
+            c_full = kv_lat
+        return out, {"c": c_full.astype(jnp.bfloat16),
+                     "kr": k_rope.astype(jnp.bfloat16)}
+    return out
+
+
+def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
+               cfg: ModelConfig) -> Tuple[Array, Dict]:
+    """Absorbed-form MLA decode: the KV cache stores only the latent
+    (kv_lora_rank + rope) per token — DeepSeek's decode memory win.  The
+    nope-scores absorb W_uk into the query; values absorb W_uv after the
+    weighted latent sum."""
+    m = cfg.mla
+    tp = ctx.tp
+    h_pad = pad_heads(cfg.num_heads, tp)
+    hl = h_pad // tp
+    b = x.shape[0]
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    q_lat = layers.rms_norm(jnp.einsum("bsd,dr->bsr", h, p["w_dq"]),
+                            p["q_norm"], cfg.norm_eps)
+    kv_all = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])
+    kv_lat = layers.rms_norm(kv_all[..., :m.kv_lora_rank], p["kv_norm"],
+                             cfg.norm_eps)
+    k_rope = kv_all[..., m.kv_lora_rank:]
+
+    pb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1))
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], pb,
+                               cfg.rope_theta)[:, :, 0, :]
+
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.einsum("bsr,rf->bsf", q_lat, p["w_uq"]).reshape(b, 1, hl, dqk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, pb, cfg.rope_theta)
+
+    # absorb W_uk: q_eff[b,1,h,r] = q_nope . W_uk[r, h, dn]
+    w_ukv = p["w_ukv"].reshape(m.kv_lora_rank, hl,
+                               m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = w_ukv[:, :, :m.qk_nope_head_dim]             # [r, h, dn]
+    w_uv = w_ukv[:, :, m.qk_nope_head_dim:]             # [r, h, dv]
+    q_eff = jnp.einsum("bohd,rhd->bohr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+
+    c_cache = lax.dynamic_update_slice_in_dim(
+        cache["c"], kv_lat.astype(cache["c"].dtype), pos, axis=1)
+    r_cache = lax.dynamic_update_slice_in_dim(
+        cache["kr"], k_rope.astype(cache["kr"].dtype), pos, axis=1)
+
+    if ctx.use_kernels:
+        # fused flash-style pass over the latent cache: ONE streaming read
+        # instead of two + no fp32 score materialization (§Perf cell 3)
+        from repro.kernels.mla_decode import mla_decode_attention
+        ctx_lat = mla_decode_attention(
+            q_eff[:, 0], q_rope[:, 0].astype(jnp.float32), c_cache, r_cache,
+            jnp.asarray(pos + 1, jnp.int32), scale=dqk ** -0.5,
+            interpret=jax.default_backend() != "tpu")[:, None]
+    else:
+        s_max = c_cache.shape[1]
+        scores = (jnp.einsum("bohr,bsr->bhos", q_eff,
+                             c_cache.astype(jnp.float32))
+                  + jnp.einsum("bohd,bsd->bhos", q_rope.astype(jnp.float32),
+                               r_cache.astype(jnp.float32))) * (dqk ** -0.5)
+        valid = (jnp.arange(s_max) <= pos)[None, None, None, :]
+        scores = jnp.where(valid, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhos,bsr->bohr", w,
+                             c_cache.astype(jnp.float32))
+    attn = jnp.einsum("bohr,rhd->bohd", ctx_lat, w_uv.astype(jnp.float32))
+    attn = attn.reshape(b, 1, hl * m.v_head_dim).astype(x.dtype)
+    out = overlap.matmul_ar(attn, p["w_o"], ctx.axis, ctx.mode,
+                            ctx.comm_chunks)
+    return out, {"c": c_cache, "kr": r_cache}
+
+
+def mla_cache_spec(cfg: ModelConfig, tp: int, batch_local: int, s_max: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    m = cfg.mla
+    return {"c": jax.ShapeDtypeStruct((batch_local, s_max, m.kv_lora_rank), dtype),
+            "kr": jax.ShapeDtypeStruct((batch_local, s_max, m.qk_rope_head_dim),
+                                       dtype)}

@@ -1,0 +1,305 @@
+"""FFN blocks: dense SwiGLU (Megatron TP seams) and expert-parallel MoE.
+
+MoE dispatch is capacity-bucketed all_to_all over the EP group (the "model"
+axis, or ("data","model") jointly for DeepSeek-scale expert counts).  The
+routed-expert GEMMs are batched per local expert; the shared-expert path is
+a regular dense TP FFN whose compute can hide the all_to_all (hillclimb
+lever; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core import overlap
+from repro.models import layers
+from repro.parallel.sharding import TPContext, pad_ff
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU FFN (the paper's Fig. 2 MLP — both FLUX seams)
+# ---------------------------------------------------------------------------
+def init_ffn(key, d_model: int, d_ff: int, tp: int, dtype=jnp.bfloat16,
+             fuse13: bool = False) -> Dict:
+    """Canonical d_ff init, zero-padded to the TP-aligned width (padding is
+    function-preserving: silu(0)*0 @ 0-rows contributes nothing).
+    ``fuse13`` packs w1|w3 into one per-device-interleaved w13 so the
+    forward needs ONE AllGather-GEMM instead of two (§Perf iteration)."""
+    from repro.models import init_utils as iu
+    ffp = pad_ff(d_ff, tp)
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d_model ** -0.5
+    w1 = iu.zero_pad_cols(
+        jax.random.normal(k1, (d_model, d_ff)) * std, ffp).astype(dtype)
+    w3 = iu.zero_pad_cols(
+        jax.random.normal(k2, (d_model, d_ff)) * std, ffp).astype(dtype)
+    p = {
+        "w2": iu.zero_pad_rows(
+            jax.random.normal(k3, (d_ff, d_model)) * (d_ff ** -0.5),
+            ffp).astype(dtype),
+        "norm": layers.init_rms_norm(d_model, dtype),
+    }
+    if fuse13:
+        p["w13"] = iu.pack_pair(w1, w3, tp)
+    else:
+        p["w1"] = w1
+        p["w3"] = w3
+    return p
+
+
+def ffn_train(p: Dict, x: Array, ctx: TPContext, eps: float = 1e-5) -> Array:
+    """x: [B, S/TP, D] -> [B, S/TP, D].  w1/w3 column-sharded, w2 row-sharded."""
+    h = layers.rms_norm(x, p["norm"], eps)
+    if "w13" in p:
+        a13 = overlap.ag_matmul(h, p["w13"], ctx.axis, ctx.mode,
+                                ctx.comm_chunks)
+        a, g = jnp.split(a13, 2, axis=-1)   # local shard = [w1_i | w3_i]
+    else:
+        a = overlap.ag_matmul(h, p["w1"], ctx.axis, ctx.mode, ctx.comm_chunks)
+        g = overlap.ag_matmul(h, p["w3"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    y = jax.nn.silu(a) * g
+    return overlap.matmul_rs(y, p["w2"], ctx.axis, ctx.mode, ctx.comm_chunks)
+
+
+def ffn_decode(p: Dict, x: Array, ctx: TPContext, eps: float = 1e-5) -> Array:
+    """x: [B, 1, D] replicated -> [B, 1, D]; row-parallel AR seam."""
+    h = layers.rms_norm(x, p["norm"], eps)
+    if "w13" in p:
+        a13 = jnp.einsum("bsd,df->bsf", h, p["w13"])
+        a, g = jnp.split(a13, 2, axis=-1)
+    else:
+        a = jnp.einsum("bsd,df->bsf", h, p["w1"])
+        g = jnp.einsum("bsd,df->bsf", h, p["w3"])
+    y = jax.nn.silu(a) * g
+    return overlap.matmul_ar(y, p["w2"], ctx.axis, ctx.mode, ctx.comm_chunks)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig, ep: int, tp: int,
+             dtype=jnp.bfloat16, fuse13: bool = False) -> Dict:
+    """GLOBAL expert stacks (the EP sharding lives in param_specs; forward
+    code sees the local E/ep slice via shard_map)."""
+    mc = cfg.moe
+    dm = cfg.d_model
+    e = mc.num_experts
+    ks = jax.random.split(key, 5)
+    std = dm ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (dm, mc.num_experts))
+                   * std).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, dm, mc.expert_ffn))
+               * std).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, dm, mc.expert_ffn))
+               * std).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, mc.expert_ffn, dm))
+               * (mc.expert_ffn ** -0.5)).astype(dtype),
+        "norm": layers.init_rms_norm(dm, dtype),
+    }
+    if mc.num_shared_experts:
+        p["shared"] = init_ffn(ks[4], dm,
+                               mc.shared_ffn * mc.num_shared_experts, tp,
+                               dtype, fuse13=fuse13)
+        # shared path norm is the same pre-norm; drop its private norm
+        del p["shared"]["norm"]
+    return p
+
+
+def _capacity(tokens: int, mc: MoEConfig, ep: int) -> int:
+    per_expert = tokens * mc.top_k / mc.num_experts
+    c = int(per_expert * mc.capacity_factor) + 1
+    return max(c, 4)
+
+
+def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
+              eps: float = 1e-5) -> Tuple[Array, Array]:
+    """x: [B, S/TP, D] -> ([B, S/TP, D], aux_loss).
+
+    Stages: router -> capacity-bucketed dispatch (scatter) -> all_to_all over
+    the EP group -> batched expert GEMMs -> all_to_all back -> combine.
+    """
+    mc = cfg.moe
+    b, s_loc, dm = x.shape
+    t = b * s_loc
+    ep_axes = ctx.ep_axes or ((ctx.axis,) if ctx.axis else ())
+    ep = 1
+    for a in ep_axes:
+        ep = ep * lax.axis_size(a)
+    e = mc.num_experts
+    e_loc = max(e // ep, 1)
+
+    h = layers.rms_norm(x, p["norm"], eps)
+    ht = h.reshape(t, dm)
+
+    # ---- router (fp32) ------------------------------------------------------
+    logits = jnp.einsum("td,de->te", ht.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = lax.top_k(probs, mc.top_k)             # [t, k]
+    gate = gate / jnp.clip(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style).  me/ce are GLOBAL token means —
+    # they must be pmean'd over the token-sharding axes BEFORE the product
+    # (a product of shard-means is not the mean of the product).
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], e), axis=0)
+    for ax in ((ctx.axis,) if ctx.axis else ()) + tuple(ctx.dp_axes):
+        if lax.axis_size(ax) > 1:
+            me = lax.pmean(me, ax)
+            ce = lax.pmean(ce, ax)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- capacity bucketing --------------------------------------------------
+    cap = _capacity(t, mc, 1)                           # per (global) expert here
+    flat_e = eidx.reshape(-1)                           # [t*k]
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # [t*k, E]
+    pos_in_e = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
+    keep = pos_in_e < cap
+    slot = jnp.clip(pos_in_e, 0, cap - 1)
+
+    disp = jnp.zeros((e, cap, dm), ht.dtype)
+    src = jnp.repeat(jnp.arange(t), mc.top_k)
+    disp = disp.at[flat_e, slot].add(
+        jnp.where(keep[:, None], ht[src], 0))
+
+    # ---- all_to_all over the EP group ---------------------------------------
+    if ep > 1:
+        buf = disp.reshape(ep, e_loc, cap, dm)
+        buf = _all_to_all_grouped(buf, ep_axes)
+        # [ep, e_loc, cap, dm]: leading dim now indexes source EP rank
+        buf = jnp.moveaxis(buf, 0, 1).reshape(e_loc, ep * cap, dm)
+    else:
+        buf = disp.reshape(e_loc, cap, dm)
+
+    # ---- expert GEMMs (batched over local experts) ---------------------------
+    a1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    a3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    hidden = jax.nn.silu(a1) * a3
+    out = jnp.einsum("ecf,efd->ecd", hidden, p["w2"])
+
+    # ---- return path ----------------------------------------------------------
+    if ep > 1:
+        ret = out.reshape(e_loc, ep, cap, dm)
+        ret = jnp.moveaxis(ret, 1, 0)                    # [ep, e_loc, cap, dm]
+        ret = _all_to_all_grouped(ret, ep_axes)
+        ret = ret.reshape(e, cap, dm)
+    else:
+        ret = out.reshape(e, cap, dm)
+
+    # combine: gather each (token, k) slot's output, weighted by gate
+    vals = ret[flat_e, slot]                             # [t*k, dm]
+    vals = jnp.where(keep[:, None], vals, 0)
+    gates = gate.reshape(-1)
+    comb = jax.ops.segment_sum(vals * gates[:, None], src, num_segments=t)
+    y = comb.reshape(b, s_loc, dm).astype(x.dtype)
+
+    if mc.num_shared_experts:
+        sh = {"norm": p["norm"], **{k: v for k, v in p["shared"].items()}}
+        y = y + ffn_train(sh, x, ctx, eps)
+    return y, aux.astype(jnp.float32)
+
+
+def _all_to_all_grouped(buf: Array, ep_axes: Tuple[str, ...]) -> Array:
+    """all_to_all over possibly-multiple mesh axes: buf [ep, ...] split on dim
+    0 across the flattened EP group, concatenated back on dim 0."""
+    if len(ep_axes) == 1:
+        return lax.all_to_all(buf, ep_axes[0], split_axis=0, concat_axis=0,
+                              tiled=True)
+    # multi-axis: split dim 0 as (a0, a1, ...) and a2a per axis sequentially
+    sizes = [lax.axis_size(a) for a in ep_axes]
+    out = buf
+    n = buf.shape[0]
+    # reshape [ep, ...] -> [s0, s1, ...rest] and exchange one axis at a time
+    out = out.reshape(*sizes, *buf.shape[1:])
+    for i, a in enumerate(ep_axes):
+        out = lax.all_to_all(out, a, split_axis=i, concat_axis=i, tiled=True)
+    return out.reshape(n, *buf.shape[1:])
+
+
+def moe_decode(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
+               eps: float = 1e-5) -> Array:
+    """Decode MoE.  x: [B, 1, D] REPLICATED over the model axis (decode has
+    no sequence sharding).  Tokens that belong to other data shards of the EP
+    group are brought in by a (tiny) all_gather; every device computes only
+    its LOCAL experts' contributions, and a psum over the EP group combines
+    them — no all_to_all needed at one-token scale."""
+    mc = cfg.moe
+    b = x.shape[0]
+    dm = x.shape[-1]
+    ep_axes = ctx.ep_axes or ((ctx.axis,) if ctx.axis else ())
+    ep = 1
+    for a in ep_axes:
+        ep = ep * lax.axis_size(a)
+    e = mc.num_experts
+    e_loc = max(e // ep, 1)
+
+    h = layers.rms_norm(x, p["norm"], eps)
+    ht = h.reshape(b, dm)
+    # gather tokens across the data portion of the EP group (tokens are
+    # already replicated over the model axis)
+    gather_axes = tuple(a for a in ep_axes if a != ctx.axis)
+    for a in gather_axes:
+        ht = lax.all_gather(ht, a, axis=0, tiled=True)
+    t = ht.shape[0]
+
+    logits = jnp.einsum("td,de->te", ht.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = lax.top_k(probs, mc.top_k)
+    gate = gate / jnp.clip(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # rank of this device inside the EP group -> which experts are local
+    ep_rank = jnp.zeros((), jnp.int32)
+    for a in ep_axes:
+        ep_rank = ep_rank * lax.axis_size(a) + lax.axis_index(a)
+    e_start = ep_rank * e_loc
+
+    flat_e = eidx.reshape(-1)
+    local_e = flat_e - e_start
+    is_local = (local_e >= 0) & (local_e < e_loc)
+    local_e = jnp.clip(local_e, 0, e_loc - 1)
+    # statistical capacity (§Perf iteration, deepseek decode): buckets sized
+    # ~8x the mean per-expert load instead of t*k — cuts the batched expert
+    # GEMMs ~e/8-fold.  Overflow probability is a Poisson tail (negligible);
+    # any overflow drops, matching training-time capacity semantics.
+    cap = int(min(t * mc.top_k, max(32, (t * mc.top_k * 8) // e)))
+    src = jnp.repeat(jnp.arange(t), mc.top_k)
+    oh = jax.nn.one_hot(jnp.where(is_local, local_e, e_loc), e_loc + 1,
+                        dtype=jnp.int32)[:, :e_loc]      # [t*k, e_loc]
+    pos = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
+    keep = is_local & (pos >= 0) & (pos < cap)
+    slot = jnp.clip(pos, 0, cap - 1)
+
+    disp = jnp.zeros((e_loc, cap, dm), ht.dtype)
+    disp = disp.at[local_e, slot].add(jnp.where(keep[:, None], ht[src], 0))
+    a1 = jnp.einsum("ecd,edf->ecf", disp, p["w1"])
+    a3 = jnp.einsum("ecd,edf->ecf", disp, p["w3"])
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(a1) * a3, p["w2"])
+
+    vals = out[local_e, slot]
+    vals = jnp.where(keep[:, None], vals, 0)
+    comb = jax.ops.segment_sum(vals * gate.reshape(-1)[:, None], src,
+                               num_segments=t)
+    for a in ep_axes:
+        comb = lax.psum(comb, a)
+    # keep this data shard's rows (gather order: axis-major blocks)
+    if gather_axes:
+        # sequential all_gathers make the LAST gathered axis outermost
+        my_off = jnp.zeros((), jnp.int32)
+        blk = t
+        for a in reversed(gather_axes):
+            blk = blk // lax.axis_size(a)
+            my_off = my_off + lax.axis_index(a) * blk
+        comb = lax.dynamic_slice_in_dim(comb, my_off, b, axis=0)
+    y = comb.reshape(b, 1, dm).astype(x.dtype)
+
+    if mc.num_shared_experts:
+        sh = {"norm": p["norm"], **{k: v for k, v in p["shared"].items()}}
+        y = y + ffn_decode(sh, x, ctx, eps)
+    return y

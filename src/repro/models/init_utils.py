@@ -1,0 +1,94 @@
+"""Canonical-init helpers: TP-layout-consistent parameter construction.
+
+Contiguous column sharding of packed projections must slice WHOLE per-device
+blocks, and padded dims must be ZERO so padding never changes the function —
+this is what makes a checkpoint reshardable across TP degrees (tp=8 and
+tp=16 runs compute the same function).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def zero_pad_cols(w: Array, to: int) -> Array:
+    """Pad the last dim with zeros up to ``to`` columns."""
+    if w.shape[-1] == to:
+        return w
+    pad = [(0, 0)] * (w.ndim - 1) + [(0, to - w.shape[-1])]
+    return jnp.pad(w, pad)
+
+
+def zero_pad_rows(w: Array, to: int) -> Array:
+    if w.shape[0] == to:
+        return w
+    pad = [(0, to - w.shape[0])] + [(0, 0)] * (w.ndim - 1)
+    return jnp.pad(w, pad)
+
+
+def interleave_heads(w: Array, n_heads: int, head_dim: int, tp: int,
+                     pad_heads_to: int) -> Array:
+    """[D, H*dh] canonical head-major columns -> zero-padded to
+    ``pad_heads_to`` heads (pads distributed so each TP shard gets
+    heads_pad/tp whole heads, canonical heads in order)."""
+    d = w.shape[0]
+    w = w.reshape(d, n_heads, head_dim)
+    if pad_heads_to != n_heads:
+        w = jnp.pad(w, ((0, 0), (0, pad_heads_to - n_heads), (0, 0)))
+    return w.reshape(d, pad_heads_to * head_dim)
+
+
+def replicate_kv_heads(w: Array, n_kv: int, head_dim: int, tp: int,
+                       pad_kv_to: int) -> Array:
+    """[D, Hkv*dh] canonical -> replicated layout when Hkv < TP: padded kv
+    head p serves the TP shard p and maps to canonical head p*Hkv//TP (so
+    each shard's kv group matches its q heads)."""
+    d = w.shape[0]
+    w = w.reshape(d, n_kv, head_dim)
+    if pad_kv_to == n_kv:
+        return w.reshape(d, n_kv * head_dim)
+    if n_kv < tp:
+        idx = jnp.arange(pad_kv_to) * n_kv // pad_kv_to
+        w = w[:, idx]
+    else:
+        w = jnp.pad(w, ((0, 0), (0, pad_kv_to - n_kv), (0, 0)))
+    return w.reshape(d, pad_kv_to * head_dim)
+
+
+def pack_qkv(wq: Array, wk: Array, wv: Array, tp: int) -> Array:
+    """Interleave per-device blocks: [dev0: q|k|v | dev1: q|k|v | ...] so a
+    contiguous column shard holds exactly its own q,k,v."""
+    d = wq.shape[0]
+    ql = wq.shape[1] // tp
+    kl = wk.shape[1] // tp
+    vl = wv.shape[1] // tp
+    parts = []
+    for i in range(tp):
+        parts += [wq[:, i * ql:(i + 1) * ql],
+                  wk[:, i * kl:(i + 1) * kl],
+                  wv[:, i * vl:(i + 1) * vl]]
+    return jnp.concatenate(parts, axis=1)
+
+
+def unpack_qkv_local(qkv_local: Array, ql: int, kl: int, vl: int):
+    """Inverse of pack_qkv on ONE device's shard (last dim = ql+kl+vl)."""
+    q = qkv_local[..., :ql]
+    k = qkv_local[..., ql:ql + kl]
+    v = qkv_local[..., ql + kl:]
+    return q, k, v
+
+
+def pack_pair(wa: Array, wb: Array, tp: int) -> Array:
+    """Interleave two equally-shaped column-sharded weights per device:
+    [dev0: a|b | dev1: a|b | ...] so one contiguous shard holds its own
+    (a, b) halves — enables ONE AllGather-GEMM for parallel projections."""
+    al = wa.shape[1] // tp
+    bl = wb.shape[1] // tp
+    parts = []
+    for i in range(tp):
+        parts += [wa[:, i * al:(i + 1) * al], wb[:, i * bl:(i + 1) * bl]]
+    return jnp.concatenate(parts, axis=1)

@@ -1,0 +1,177 @@
+"""Shared layers: norms, rotary embeddings, embedding / LM-head seams.
+
+Everything here runs INSIDE shard_map with sequence-sharded activations
+(Megatron-SP): x is [B, S/TP, D] between blocks.  The vocabulary-parallel
+embedding + LM head are two of the paper's TP seams (the LM head's
+AllGather-GEMM is the single largest GEMM in most of the assigned archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import overlap
+from repro.parallel.sharding import TPContext
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def init_rms_norm(d: int, dtype=jnp.bfloat16):
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [B, S, H, Dh]; positions: [B, S] absolute token positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions_3d: Array, theta: float,
+                sections: Tuple[int, int, int] = None) -> Array:
+    """Qwen2-VL multimodal RoPE: head_dim/2 freq slots are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+    positions_3d: [3, B, S].  For pure text all three ids are equal (falls
+    back to standard RoPE)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    if sections is None:
+        t = half // 2
+        hw = (half - t) // 2
+        sections = (t, hw, half - t - hw)
+    freqs = rope_freqs(dh, theta)                       # [half]
+    sec_ids = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos = positions_3d[sec_ids]                         # [half, B, S] gathered per slot
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary-parallel embedding (Megatron): table sharded on vocab over TP.
+# ---------------------------------------------------------------------------
+def embed_lookup(table: Array, tokens: Array, ctx: TPContext,
+                 vocab_global: int, scatter_seq: bool = True) -> Array:
+    """Megatron vocab-parallel embedding.  table: [V/TP, D] local shard;
+    tokens: [B, S] REPLICATED over the TP axis.  Out-of-shard tokens
+    contribute 0; the combining collective is a ReduceScatter along the
+    sequence (producing the sequence-sharded activation directly — the
+    embedding's RS seam) or a psum when ``scatter_seq=False`` (decode)."""
+    v_loc = table.shape[0]
+    start = ctx.tp_index() * v_loc
+    local_ids = tokens - start
+    in_shard = (local_ids >= 0) & (local_ids < v_loc)
+    local_ids = jnp.clip(local_ids, 0, v_loc - 1)
+    x = table[local_ids]
+    x = jnp.where(in_shard[..., None], x, 0)
+    if ctx.axis is not None and ctx.tp > 1:
+        if scatter_seq:
+            x = lax.psum_scatter(x, ctx.axis, scatter_dimension=x.ndim - 2,
+                                 tiled=True)
+        else:
+            x = lax.psum(x, ctx.axis)
+    return x
+
+
+def lm_head_logits(x: Array, table: Array, ctx: TPContext) -> Array:
+    """x: [B, S/TP, D] -> logits [B, S, V/TP] via the AllGather-GEMM seam.
+    (The LM head is the biggest single GEMM: FLUX prologue fusion applies.)"""
+    return overlap.ag_matmul(x, table.T, ctx.axis, ctx.mode, ctx.comm_chunks)
+
+
+def vocab_parallel_xent(logits: Array, labels: Array, ctx: TPContext,
+                        vocab_global: int, vocab_real: Optional[int] = None
+                        ) -> Array:
+    """Cross-entropy over vocab-sharded logits [B, S, V/TP], labels [B, S]
+    (full sequence).  Uses the Megatron vocab-parallel log-softmax (psum of
+    max and of exp-sums over the TP axis).  Returns per-token loss [B, S].
+    ``vocab_real`` masks the padded vocab tail out of the partition function
+    (padding stays function-preserving)."""
+    v_loc = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if vocab_real is not None and vocab_real < vocab_global:
+        col = ctx.tp_index() * v_loc + jnp.arange(v_loc)
+        lf = jnp.where(col < vocab_real, lf, -1e30)
+    # stability shift only — exact to treat as constant (and pmax has no
+    # differentiation rule, so stop the gradient BEFORE it)
+    mx = lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    if ctx.axis is not None and ctx.tp > 1:
+        mx = lax.pmax(mx, ctx.axis)
+    ex = jnp.exp(lf - mx)
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+    if ctx.axis is not None and ctx.tp > 1:
+        denom = lax.psum(denom, ctx.axis)
+    start = ctx.tp_index() * v_loc
+    local_ids = labels - start
+    in_shard = (local_ids >= 0) & (local_ids < v_loc)
+    local_ids = jnp.clip(local_ids, 0, v_loc - 1)
+    tgt = jnp.take_along_axis(lf, local_ids[..., None], axis=-1)[..., 0]
+    tgt = jnp.where(in_shard, tgt, 0.0)
+    if ctx.axis is not None and ctx.tp > 1:
+        tgt = lax.psum(tgt, ctx.axis)
+    return jnp.log(denom[..., 0]) + mx[..., 0] - tgt
+
+
+# ---------------------------------------------------------------------------
+# Sequence-shard utilities
+# ---------------------------------------------------------------------------
+def seq_positions(batch: int, s_local: int, ctx: TPContext,
+                  offset: int = 0) -> Array:
+    """Absolute positions of this device's sequence shard: [B, S/TP]."""
+    base = ctx.tp_index() * s_local + offset
+    pos = base + jnp.arange(s_local, dtype=jnp.int32)
+    return jnp.broadcast_to(pos, (batch, s_local))
+
+
+def shift_tokens_right(x: Array, ctx: TPContext) -> Array:
+    """x_{t-1} for a sequence-sharded [B, S/TP, D] tensor: shifts within the
+    shard and pulls the boundary column from the left neighbor (ppermute of
+    ONE token — the token-shift seam of RWKV)."""
+    if ctx.axis is None or ctx.tp == 1:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    last = x[:, -1:, :]
+    n = ctx.tp
+    prev = lax.ppermute(last, ctx.axis, [(i, (i + 1) % n) for i in range(n)])
+    # rank 0's incoming boundary is garbage (wrapped) -> zero it
+    is_first = (ctx.tp_index() == 0)
+    prev = jnp.where(is_first, jnp.zeros_like(prev), prev)
+    return jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+
+
+def shift_tokens_left(x: Array, ctx: TPContext) -> Array:
+    """x_{t+1} for a sequence-sharded [B, S/TP, D] tensor (zero at the end)."""
+    if ctx.axis is None or ctx.tp == 1:
+        return jnp.pad(x, ((0, 0), (0, 1), (0, 0)))[:, 1:]
+    first = x[:, :1, :]
+    n = ctx.tp
+    nxt = lax.ppermute(first, ctx.axis, [(i, (i - 1) % n) for i in range(n)])
+    is_last = (ctx.tp_index() == n - 1)
+    nxt = jnp.where(is_last, jnp.zeros_like(nxt), nxt)
+    return jnp.concatenate([x[:, 1:, :], nxt], axis=1)

@@ -1,0 +1,205 @@
+"""Mamba-1 selective-scan mixer (Jamba's SSM layers), TP over channels.
+
+TP mapping (DESIGN.md §5): in_proj column-parallel (AllGather-GEMM seam),
+conv + selective scan channel-local, x_proj row-parallel (GEMM+AllReduce
+seam — B/C/dt are shared across channel shards), out_proj row-parallel
+(GEMM-ReduceScatter seam).  The scan itself carries no TP collective.
+
+The scan is CHUNKED: lax.scan over sequence chunks carrying the [B, C_loc,
+d_state] state, associative_scan within a chunk — O(S·chunk) memory, exact.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import overlap
+from repro.models import layers
+from repro.parallel.sharding import TPContext, ceil_mult
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig, tp: int):
+    mc = cfg.mamba
+    d_in = ceil_mult(mc.expand * cfg.d_model, tp * 128)
+    dt_rank = mc.dt_rank or max(cfg.d_model // 16, 8)
+    return d_in, dt_rank, mc.d_state, mc.d_conv
+
+
+def init_mamba(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16,
+               fuse_xz: bool = False) -> Dict:
+    d_in, dt_rank, d_state, d_conv = _dims(cfg, tp)
+    dm = cfg.d_model
+    d_in_loc = d_in // tp
+    ks = jax.random.split(key, 6)
+    std = dm ** -0.5
+    from repro.models import init_utils as iu
+    d_can = cfg.mamba.expand * cfg.d_model          # canonical channel count
+    k_in_x, k_in_z = jax.random.split(ks[5])
+    w_in_x = iu.zero_pad_cols(
+        jax.random.normal(k_in_x, (dm, d_can)) * std, d_in).astype(dtype)
+    w_in_z = iu.zero_pad_cols(
+        jax.random.normal(k_in_z, (dm, d_can)) * std, d_in).astype(dtype)
+    inproj = ({"w_in_xz": iu.pack_pair(w_in_x, w_in_z, tp)} if fuse_xz
+              else {"w_in_x": w_in_x, "w_in_z": w_in_z})
+    return {
+        # separate (or per-device packed) x/z in-projections, column-sharded
+        # over TP with channel-consistent local splits; padded channels ZERO
+        **inproj,
+        "conv": iu.zero_pad_cols(
+            jax.random.normal(ks[1], (d_conv, d_can)) * 0.1, d_in).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        # x_proj is ROW-sharded over channels (input d_in): output replicated
+        "w_x": iu.zero_pad_rows(
+            jax.random.normal(ks[2], (d_can, dt_rank + 2 * d_state))
+            * d_can ** -0.5, d_in).astype(dtype),
+        "w_dt": iu.zero_pad_cols(
+            jax.random.normal(ks[3], (dt_rank, d_can)) * dt_rank ** -0.5,
+            d_in).astype(dtype),
+        "dt_bias": jnp.full((d_in,), -4.6, dtype),       # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, d_state))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": iu.zero_pad_rows(
+            jax.random.normal(ks[4], (d_can, dm)) * d_can ** -0.5,
+            d_in).astype(dtype),
+        "norm": layers.init_rms_norm(dm, dtype),
+    }
+
+
+def _local(p: Dict, name: str, ctx: TPContext, axis: int) -> Array:
+    """Channel-sharded parameters arrive pre-sharded via shard_map specs;
+    helpers below assume they are already local."""
+    return p[name]
+
+
+def _selective_scan_chunk(x, dt, b_in, c_in, a, h0):
+    """One chunk: x,dt: [B,L,C]; b_in,c_in: [B,L,N]; a: [C,N]; h0: [B,C,N].
+    Returns (y [B,L,C], h_final).  Associative scan over L in fp32."""
+    dta = jnp.einsum("blc,cn->blcn", dt, a)              # dt*A  (negative)
+    decay = jnp.exp(dta)                                 # [B,L,C,N]
+    inp = jnp.einsum("blc,bln->blcn", dt * x, b_in)      # dt*x*B
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    dec_s, inp_s = lax.associative_scan(combine, (decay, inp), axis=1)
+    h = dec_s * h0[:, None] + inp_s                      # [B,L,C,N]
+    y = jnp.einsum("blcn,bln->blc", h, c_in)
+    return y, h[:, -1]
+
+
+def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
+                chunk: int = 256, with_cache: bool = False):
+    """x: [B, S/TP, D] -> [B, S/TP, D]."""
+    d_in, dt_rank, d_state, d_conv = _dims(cfg, ctx.tp)
+    d_in_loc = d_in // ctx.tp
+    b, s_loc, dm = x.shape
+    s = s_loc * ctx.tp
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    if "w_in_xz" in p:
+        xz = overlap.ag_matmul(h, p["w_in_xz"], ctx.axis, ctx.mode,
+                               ctx.comm_chunks)
+        xs_raw, z = jnp.split(xz, 2, axis=-1)
+    else:
+        xs_raw = overlap.ag_matmul(h, p["w_in_x"], ctx.axis, ctx.mode,
+                                   ctx.comm_chunks)
+        z = overlap.ag_matmul(h, p["w_in_z"], ctx.axis, ctx.mode,
+                              ctx.comm_chunks)
+
+    # causal depthwise conv along the (gathered) sequence
+    xpad = jnp.pad(xs_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(xpad[:, i:i + s] * p["conv"][i] for i in range(d_conv))
+    xs = jax.nn.silu(conv + p["conv_b"])
+
+    # x_proj: row-parallel GEMM + AllReduce (B/C/dt shared across shards)
+    xdb = overlap.matmul_ar(xs, p["w_x"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    dt_low, b_in, c_in = jnp.split(xdb, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rc->bsc", dt_low, p["w_dt"])
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"])                             # [C_loc, N]
+
+    # chunked scan over the sequence
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nck = s // chunk
+    xs32 = xs.astype(jnp.float32)
+    b32, c32 = b_in.astype(jnp.float32), c_in.astype(jnp.float32)
+
+    def step(hprev, i):
+        sl = lambda t: lax.dynamic_slice_in_dim(t, i * chunk, chunk, axis=1)
+        y, hnew = _selective_scan_chunk(sl(xs32), sl(dt), sl(b32), sl(c32),
+                                        a, hprev)
+        return hnew, y
+
+    h0 = jnp.zeros((b, d_in_loc, d_state), jnp.float32)
+    hfin, ys = lax.scan(step, h0, jnp.arange(nck))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d_in_loc)
+
+    y = y + xs32 * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = overlap.matmul_rs(y, p["w_out"], ctx.axis, ctx.mode,
+                            ctx.comm_chunks)
+    if with_cache:
+        # conv cache stores the last d_conv-1 PRE-conv projected inputs
+        conv_tail = xs_raw[:, s - (d_conv - 1):, :]
+        return out, {"conv": conv_tail.astype(x.dtype), "ssm": hfin}
+    return out
+
+
+def mamba_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
+                 cfg: ModelConfig) -> Tuple[Array, Dict]:
+    """Single-token state update.  cache = {conv: [B, d_conv-1, C_loc],
+    ssm: [B, C_loc, N]}.  O(1) in sequence length (long_500k path)."""
+    d_in, dt_rank, d_state, d_conv = _dims(cfg, ctx.tp)
+    b = x.shape[0]
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    if "w_in_xz" in p:
+        xz = jnp.einsum("bsd,df->bsf", h, p["w_in_xz"])[:, 0]
+        xs, z = jnp.split(xz, 2, axis=-1)
+    else:
+        xs = jnp.einsum("bsd,df->bsf", h, p["w_in_x"])[:, 0]  # local, no comm
+        z = jnp.einsum("bsd,df->bsf", h, p["w_in_z"])[:, 0]   # [B, C_loc]
+
+    hist = jnp.concatenate([cache["conv"], xs[:, None]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv"]) + p["conv_b"]
+    xs = jax.nn.silu(conv)
+    new_conv = hist[:, 1:]
+
+    xdb = overlap.matmul_ar(xs[:, None], p["w_x"], ctx.axis, ctx.mode,
+                            ctx.comm_chunks)[:, 0]
+    dt_low, b_in, c_in = jnp.split(xdb, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("br,rc->bc", dt_low, p["w_dt"])
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"])
+
+    xs32 = xs.astype(jnp.float32)
+    decay = jnp.exp(jnp.einsum("bc,cn->bcn", dt, a))
+    hnew = cache["ssm"] * decay + jnp.einsum(
+        "bc,bn->bcn", dt * xs32, b_in.astype(jnp.float32))
+    y = jnp.einsum("bcn,bn->bc", hnew, c_in.astype(jnp.float32))
+    y = y + xs32 * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)[:, None]
+    out = overlap.matmul_ar(y, p["w_out"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    return out, {"conv": new_conv, "ssm": hnew}
+
+
+def mamba_cache_spec(cfg: ModelConfig, tp: int, batch_local: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    d_in, dt_rank, d_state, d_conv = _dims(cfg, tp)
+    d_in_loc = d_in // tp
+    return {
+        "conv": jax.ShapeDtypeStruct((batch_local, d_conv - 1, d_in_loc), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch_local, d_in_loc, d_state),
+                                    jnp.float32),
+    }

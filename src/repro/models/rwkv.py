@@ -1,0 +1,247 @@
+"""RWKV-6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+TP mapping: heads (time-mix) / hidden (channel-mix) sharded over the model
+axis; the WKV recurrence itself is head-local (no TP collective — partial
+FLUX applicability, DESIGN.md §5).  Projections use the overlap seams.
+
+WKV6 recurrence per head (state S: [dh_k, dh_v]):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+computed CHUNKWISE (flash-linear-attention style): within a chunk the
+quadratic form with decay-ratio masking; across chunks the state carries.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import overlap
+from repro.models import layers
+from repro.parallel.sharding import TPContext, ceil_mult
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig, tp: int):
+    rc = cfg.rwkv
+    dh = rc.head_dim
+    n_heads = ceil_mult(cfg.d_model // dh, tp)          # padded to TP
+    d_attn = n_heads * dh
+    return n_heads, dh, d_attn
+
+
+def init_rwkv_time(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16) -> Dict:
+    rc = cfg.rwkv
+    dm = cfg.d_model
+    n_heads, dh, d_attn = _dims(cfg, tp)
+    from repro.models import init_utils as iu
+    ks = jax.random.split(key, 10)
+    std = dm ** -0.5
+    d_can = (cfg.d_model // dh) * dh                 # canonical head columns
+    zc = lambda k, shape, s: iu.zero_pad_cols(
+        jax.random.normal(k, shape) * s, d_attn)
+    return {
+        # token-shift mix coefficients (per projection)
+        "mu": (jax.random.uniform(ks[0], (5, dm))).astype(dtype),
+        "w_r": zc(ks[1], (dm, d_can), std).astype(dtype),
+        "w_k": zc(ks[2], (dm, d_can), std).astype(dtype),
+        "w_v": zc(ks[3], (dm, d_can), std).astype(dtype),
+        "w_g": zc(ks[4], (dm, d_can), std).astype(dtype),
+        # data-dependent decay: low-rank lora on top of a per-channel base
+        "w_dec1": (jax.random.normal(ks[5], (dm, rc.decay_lora))
+                   * std).astype(dtype),
+        "w_dec2": zc(ks[6], (rc.decay_lora, d_can),
+                     rc.decay_lora ** -0.5).astype(dtype),
+        "dec_base": jnp.full((d_attn,), -6.0, jnp.float32),
+        "u_bonus": iu.zero_pad_cols(
+            (jax.random.normal(ks[7], (d_can,)) * 0.1)[None], d_attn)[0],
+        "w_o": iu.zero_pad_rows(
+            jax.random.normal(ks[8], (d_can, dm)) * d_can ** -0.5,
+            d_attn).astype(dtype),
+        "ln_x": layers.init_rms_norm(dh, dtype),     # per-head group norm
+        "norm": layers.init_rms_norm(dm, dtype),
+    }
+
+
+def init_rwkv_channel(key, cfg: ModelConfig, tp: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    dm = cfg.d_model
+    ffp = ceil_mult(cfg.d_ff, tp * 128)
+    from repro.models import init_utils as iu
+    ks = jax.random.split(key, 4)
+    std = dm ** -0.5
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, dm))).astype(dtype),
+        "w_k": iu.zero_pad_cols(
+            jax.random.normal(ks[1], (dm, cfg.d_ff)) * std, ffp).astype(dtype),
+        "w_v": iu.zero_pad_rows(
+            jax.random.normal(ks[2], (cfg.d_ff, dm)) * cfg.d_ff ** -0.5,
+            ffp).astype(dtype),
+        "w_r": (jax.random.normal(ks[3], (dm, dm)) * std).astype(dtype),
+        "norm": layers.init_rms_norm(dm, dtype),
+    }
+
+
+def _wkv_chunk(r, k, v, logw, u, s0):
+    """One chunk, one head batch: r,k,v: [B,H,L,dh]; logw: [B,H,L,dh] (<=0);
+    u: [H,dh]; s0: [B,H,dh,dh].  Returns (y [B,H,L,dh], s_final)."""
+    _, _, L, dh = r.shape
+    cw = jnp.cumsum(logw, axis=2)                        # cumulative log decay
+    # inter-chunk: y_t += (r_t * exp(cw_{t-1})) @ S_prev ; cw_{t-1} = cw_t - logw_t
+    r_dec = r * jnp.exp(cw - logw)
+    y = jnp.einsum("bhld,bhde->bhle", r_dec, s0)
+    # intra-chunk: A[t,s] = sum_d r[t,d] k[s,d] exp(cw_{t-1,d} - cw_{s,d}) (s<t)
+    #              diag  : r·(u⊙k)
+    kd = k * jnp.exp(-cw)                                # k / prod decay up to s
+    att = jnp.einsum("bhld,bhmd->bhlm", r_dec, kd)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    att = jnp.where(mask, att, 0.0)
+    diag = jnp.einsum("bhld,bhld->bhl", r, u[None, :, None, :] * k)
+    y = y + jnp.einsum("bhlm,bhme->bhle", att, v)
+    y = y + diag[..., None] * v
+    # state update: S_new = diag(exp(cw_L)) S_prev + sum_t exp(cw_L - cw_t) k_t v_t^T
+    wtot = jnp.exp(cw[:, :, -1])                         # [B,H,dh]
+    k_rem = k * jnp.exp(cw[:, :, -1:] - cw)
+    s_new = s0 * wtot[..., None] + jnp.einsum("bhld,bhle->bhde", k_rem, v)
+    return y, s_new
+
+
+def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
+                    chunk: int = 64, with_cache: bool = False):
+    """x: [B, S/TP, D] -> [B, S/TP, D]."""
+    n_heads, dh, d_attn = _dims(cfg, ctx.tp)
+    hl = n_heads // ctx.tp
+    b, s_loc, dm = x.shape
+    s = s_loc * ctx.tp
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    # token shift needs x_{t-1}: boundary ppermute on the shard, then gather
+    prev = layers.shift_tokens_right(h, ctx)
+    if ctx.axis is not None and ctx.tp > 1:
+        hg = lax.all_gather(h, ctx.axis, axis=1, tiled=True)
+        pg = lax.all_gather(prev, ctx.axis, axis=1, tiled=True)
+    else:
+        hg, pg = h, prev
+    delta = pg - hg
+
+    def mixed(i):
+        return hg + delta * p["mu"][i]
+
+    # projections: local column shards (hg already gathered; the gather IS
+    # the AG seam, amortized over the 5 projections)
+    r = jnp.einsum("bsd,df->bsf", mixed(0), p["w_r"])
+    kk = jnp.einsum("bsd,df->bsf", mixed(1), p["w_k"])
+    vv = jnp.einsum("bsd,df->bsf", mixed(2), p["w_v"])
+    g = jnp.einsum("bsd,df->bsf", mixed(3), p["w_g"])
+    dec_low = jnp.einsum("bsd,dr->bsr", mixed(4), p["w_dec1"])
+    dec = jnp.einsum("bsr,rf->bsf", jnp.tanh(dec_low), p["w_dec2"])
+    logw = -jnp.exp(p["dec_base"] + dec.astype(jnp.float32))  # [B,S,F] (<0)
+
+    def heads(t):
+        return t.reshape(b, s, hl, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    r_, k_, v_, w_ = heads(r), heads(kk), heads(vv), heads(logw)
+    # u_bonus / dec_base are head-sharded over TP -> already local here
+    u_loc = p["u_bonus"].reshape(hl, dh)
+
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nck = s // chunk
+
+    def step(state, i):
+        sl = lambda t: lax.dynamic_slice_in_dim(t, i * chunk, chunk, axis=2)
+        y, snew = _wkv_chunk(sl(r_), sl(k_), sl(v_), sl(w_), u_loc, state)
+        return snew, y
+
+    s0 = jnp.zeros((b, hl, dh, dh), jnp.float32)
+    sfin, ys = lax.scan(step, s0, jnp.arange(nck))
+    y = jnp.moveaxis(ys, 0, 2).reshape(b, hl, s, dh)     # [B,hl,S,dh]
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, hl * dh).astype(x.dtype)
+
+    # per-head group norm (pad heads stay zero -> TP-layout invariant)
+    y = layers.rms_norm(y.reshape(b, s, hl, dh), p["ln_x"],
+                        cfg.norm_eps).reshape(b, s, hl * dh)
+    y = y * jax.nn.silu(g)
+    out = overlap.matmul_rs(y, p["w_o"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    if with_cache:
+        return out, {"state": sfin, "last": hg[:, -1]}
+    return out
+
+
+def rwkv_channel_train(p: Dict, x: Array, ctx: TPContext,
+                       cfg: ModelConfig, with_cache: bool = False):
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    prev = layers.shift_tokens_right(h, ctx)
+    delta = prev - h
+    xk = h + delta * p["mu"][0]
+    xr = h + delta * p["mu"][1]
+    k = overlap.ag_matmul(xk, p["w_k"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    k = jnp.square(jax.nn.relu(k))
+    kv = overlap.matmul_rs(k, p["w_v"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    # receptance gate: replicated square weight, computed on the seq-shard
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"])
+    out = jax.nn.sigmoid(r) * kv
+    if with_cache:
+        # last (global) token's normed input: gather the final shard's tail
+        if ctx.axis is not None and ctx.tp > 1:
+            hg_last = lax.all_gather(h[:, -1:], ctx.axis, axis=1,
+                                     tiled=True)[:, -1]
+        else:
+            hg_last = h[:, -1]
+        return out, {"last": hg_last}
+    return out
+
+
+def rwkv_time_decode(p: Dict, x: Array, cache: Dict, ctx: TPContext,
+                     cfg: ModelConfig) -> Tuple[Array, Dict]:
+    """cache = {state: [B, hl, dh, dh] f32, last: [B, D]} — O(1) decode."""
+    n_heads, dh, d_attn = _dims(cfg, ctx.tp)
+    hl = n_heads // ctx.tp
+    b = x.shape[0]
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)[:, 0]  # [B, D]
+    prev = cache["last"]
+    delta = prev - h
+
+    def mixed(i):
+        return h + delta * p["mu"][i]
+
+    r = mixed(0) @ p["w_r"]
+    kk = mixed(1) @ p["w_k"]
+    vv = mixed(2) @ p["w_v"]
+    g = mixed(3) @ p["w_g"]
+    dec = jnp.tanh(mixed(4) @ p["w_dec1"]) @ p["w_dec2"]
+    logw = -jnp.exp(p["dec_base"] + dec.astype(jnp.float32))
+
+    hd = lambda t: t.reshape(b, hl, dh).astype(jnp.float32)
+    r_, k_, v_, w_ = hd(r), hd(kk), hd(vv), hd(logw)
+    u_loc = p["u_bonus"].reshape(hl, dh)
+
+    s_prev = cache["state"]
+    kv = jnp.einsum("bhd,bhe->bhde", k_, v_)
+    y = jnp.einsum("bhd,bhde->bhe", r_, s_prev + u_loc[None, :, :, None] * kv)
+    s_new = s_prev * jnp.exp(w_)[..., None] + kv
+
+    y = y.reshape(b, 1, hl, dh).astype(x.dtype)
+    y = layers.rms_norm(y, p["ln_x"], cfg.norm_eps).reshape(b, 1, hl * dh)
+    y = y * jax.nn.silu(g.reshape(b, 1, hl * dh))
+    out = overlap.matmul_ar(y, p["w_o"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    return out, {"state": s_new, "last": h}
+
+
+def rwkv_channel_decode(p: Dict, x: Array, cache: Dict, ctx: TPContext,
+                        cfg: ModelConfig) -> Tuple[Array, Dict]:
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)[:, 0]
+    prev = cache["last"]
+    delta = prev - h
+    xk = (h + delta * p["mu"][0])[:, None]
+    xr = (h + delta * p["mu"][1])[:, None]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["w_k"])))
+    kv = overlap.matmul_ar(k, p["w_v"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"])
+    return jax.nn.sigmoid(r) * kv, {"last": h}

@@ -1,0 +1,277 @@
+"""Serving paths: prefill (cache-building forward) and single-token decode.
+
+Cache layout is GLOBAL (shard_map slices it): per layer-position trees whose
+shapes come from ``cache_specs``.  Decode is the paper's vLLM-style TP
+pattern: replicated activations, local-head attention over the sharded KV
+cache, row-parallel output GEMM + AllReduce (the FLUX decode seam).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ATTN, DENSE_FFN, MLA, MAMBA, MOE_FFN, RWKV,
+                                ModelConfig, ParallelConfig)
+from repro.models import attention, ffn, layers, mamba, rwkv
+from repro.models.model import (_maybe_gather_zero3, expanded_pattern,
+                                n_periods, zero3_flags)
+from repro.parallel.sharding import (TPContext, ceil_mult, pad_kv_heads,
+                                     pad_heads, pad_vocab)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (global shapes + PartitionSpecs)
+# ---------------------------------------------------------------------------
+def _mixer_cache_spec(kind: str, cfg: ModelConfig, par: ParallelConfig,
+                      batch: int, s_max: int, dp_axes: Tuple[str, ...]):
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    tp = par.tp
+    if kind == ATTN:
+        hkv = pad_kv_heads(cfg.num_kv_heads, tp)
+        dh = cfg.resolved_head_dim
+        sds = {"k": jax.ShapeDtypeStruct((batch, s_max, hkv, dh), jnp.bfloat16),
+               "v": jax.ShapeDtypeStruct((batch, s_max, hkv, dh), jnp.bfloat16)}
+        spec = {"k": P(dp, None, "model", None), "v": P(dp, None, "model", None)}
+        return sds, spec
+    if kind == MLA:
+        m = cfg.mla
+        sds = {"c": jax.ShapeDtypeStruct((batch, s_max, m.kv_lora_rank),
+                                         jnp.bfloat16),
+               "kr": jax.ShapeDtypeStruct((batch, s_max, m.qk_rope_head_dim),
+                                          jnp.bfloat16)}
+        spec = {"c": P(dp, None, None), "kr": P(dp, None, None)}
+        return sds, spec
+    if kind == MAMBA:
+        d_in, _, d_state, d_conv = mamba._dims(cfg, tp)
+        sds = {"conv": jax.ShapeDtypeStruct((batch, d_conv - 1, d_in),
+                                            jnp.bfloat16),
+               "ssm": jax.ShapeDtypeStruct((batch, d_in, d_state),
+                                           jnp.float32)}
+        spec = {"conv": P(dp, None, "model"), "ssm": P(dp, "model", None)}
+        return sds, spec
+    if kind == RWKV:
+        n_heads, dh, _ = rwkv._dims(cfg, tp)
+        sds = {"state": jax.ShapeDtypeStruct((batch, n_heads, dh, dh),
+                                             jnp.float32),
+               "last": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.bfloat16)}
+        spec = {"state": P(dp, "model", None, None), "last": P(dp, None)}
+        return sds, spec
+    raise ValueError(kind)
+
+
+def _ffn_cache_spec(kind: str, cfg: ModelConfig, par: ParallelConfig,
+                    batch: int, dp_axes: Tuple[str, ...]):
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    if kind == RWKV:
+        return ({"last": jax.ShapeDtypeStruct((batch, cfg.d_model),
+                                              jnp.bfloat16)},
+                {"last": P(dp, None)})
+    return {}, {}
+
+
+def cache_specs(cfg: ModelConfig, par: ParallelConfig, batch: int, s_max: int,
+                dp_axes: Tuple[str, ...] = ("data",)):
+    """Returns (ShapeDtypeStruct tree, PartitionSpec tree) for the full-model
+    cache: {"lead": [...], "periods": [stacked per pattern position]}."""
+    pat = expanded_pattern(cfg)
+    lead = cfg.leading_dense_layers
+    reps = n_periods(cfg)
+
+    def one(kind_pair):
+        msds, mspec = _mixer_cache_spec(kind_pair[0], cfg, par, batch, s_max,
+                                        dp_axes)
+        fsds, fspec = _ffn_cache_spec(kind_pair[1], cfg, par, batch, dp_axes)
+        return ({"mixer": msds, "ffn": fsds},
+                {"mixer": mspec, "ffn": fspec})
+
+    sds: Dict[str, Any] = {"lead": [], "periods": []}
+    spec: Dict[str, Any] = {"lead": [], "periods": []}
+    for i in range(lead):
+        s_, p_ = one(pat[i])
+        sds["lead"].append(s_)
+        spec["lead"].append(p_)
+    for kp in cfg.pattern:
+        s_, p_ = one(kp)
+        s_ = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((reps, *x.shape), x.dtype), s_)
+        p_ = jax.tree.map(lambda sp: P(*([None] + list(sp))), p_,
+                          is_leaf=lambda x: isinstance(x, P))
+        sds["periods"].append(s_)
+        spec["periods"].append(p_)
+    return sds, spec
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def _mixer_decode(kind: str, p: Dict, x: Array, cache: Dict, pos, ctx,
+                  cfg: ModelConfig):
+    if kind == ATTN:
+        return attention.gqa_decode(p, x, cache, pos, ctx, cfg)
+    if kind == MLA:
+        return attention.mla_decode(p, x, cache, pos, ctx, cfg)
+    if kind == MAMBA:
+        return mamba.mamba_decode(p, x, cache, pos, ctx, cfg)
+    if kind == RWKV:
+        return rwkv.rwkv_time_decode(p, x, cache, ctx, cfg)
+    raise ValueError(kind)
+
+
+def _ffn_decode(kind: str, p: Dict, x: Array, cache: Dict, ctx,
+                cfg: ModelConfig):
+    if kind == DENSE_FFN:
+        return ffn.ffn_decode(p, x, ctx, cfg.norm_eps), cache
+    if kind == MOE_FFN:
+        return ffn.moe_decode(p, x, ctx, cfg), cache
+    if kind == RWKV:
+        return rwkv.rwkv_channel_decode(p, x, cache, ctx, cfg)
+    raise ValueError(kind)
+
+
+def _block_decode(kind_pair, lp: Dict, lc: Dict, x: Array, pos, ctx, cfg,
+                  par: ParallelConfig, z3=None):
+    lp = _maybe_gather_zero3(lp, par, z3)
+    dy, mc = _mixer_decode(kind_pair[0], lp["mixer"], x, lc["mixer"], pos,
+                           ctx, cfg)
+    x = x + dy
+    dy, fc = _ffn_decode(kind_pair[1], lp["ffn"], x, lc["ffn"], ctx, cfg)
+    return x + dy, {"mixer": mc, "ffn": fc}
+
+
+def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
+                ctx: TPContext, cfg: ModelConfig, par: ParallelConfig):
+    """One greedy decode step.  tokens: [B_loc, 1] int32; pos: scalar int32
+    (current write position).  Returns (next_token [B_loc,1], new caches)."""
+    v_pad = pad_vocab(cfg.vocab_size, par.tp)
+    x = layers.embed_lookup(params["embed"], tokens, ctx, v_pad,
+                            scatter_seq=False)
+    x = x.astype(cfg.compute_dtype)
+
+    pat = expanded_pattern(cfg)
+    z3 = zero3_flags(cfg, par)
+    new_caches: Dict[str, Any] = {"lead": [], "periods": None}
+    for i in range(cfg.leading_dense_layers):
+        x, nc = _block_decode(pat[i], params["lead"][i], caches["lead"][i],
+                              x, pos, ctx, cfg, par,
+                              z3["lead"][i] if z3["lead"] else None)
+        new_caches["lead"].append(nc)
+
+    def period_body(x, xs):
+        stacked_p, stacked_c = xs
+        ncs = []
+        for p_i, kp in enumerate(cfg.pattern):
+            x, nc = _block_decode(kp, stacked_p[p_i], stacked_c[p_i], x, pos,
+                                  ctx, cfg, par,
+                                  z3["periods"][p_i] if z3["periods"] else None)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    x, stacked_new = lax.scan(
+        period_body, x, (tuple(params["periods"]), tuple(caches["periods"])))
+    new_caches["periods"] = list(stacked_new)
+
+    h = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])  # [B,1,V/TP] local
+    nxt = vocab_parallel_argmax(logits[:, -1], ctx, v_pad, cfg.vocab_size)
+    return nxt[:, None], new_caches
+
+
+def vocab_parallel_argmax(logits_loc: Array, ctx: TPContext,
+                          v_pad: int, vocab_real: Optional[int] = None
+                          ) -> Array:
+    """Greedy sampling over vocab-sharded logits [B, V/TP] -> [B] int32."""
+    v_loc = logits_loc.shape[-1]
+    if vocab_real is not None and vocab_real < v_pad:
+        col = ctx.tp_index() * v_loc + jnp.arange(v_loc)
+        logits_loc = jnp.where(col < vocab_real, logits_loc, -jnp.inf)
+    loc_idx = jnp.argmax(logits_loc, axis=-1)
+    loc_val = jnp.take_along_axis(logits_loc, loc_idx[:, None], axis=-1)[:, 0]
+    if ctx.axis is None or ctx.tp == 1:
+        return loc_idx.astype(jnp.int32)
+    glob_idx = loc_idx + ctx.tp_index() * v_loc
+    vals = lax.all_gather(loc_val, ctx.axis, axis=-1)     # [B, TP]
+    idxs = lax.all_gather(glob_idx, ctx.axis, axis=-1)    # [B, TP]
+    best = jnp.argmax(vals, axis=-1)
+    return jnp.take_along_axis(idxs, best[:, None], axis=-1)[:, 0].astype(
+        jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+def _mixer_prefill(kind: str, p, x, ctx, cfg):
+    if kind == ATTN:
+        return attention.gqa_train(p, x, ctx, cfg, with_cache=True)
+    if kind == MLA:
+        return attention.mla_train(p, x, ctx, cfg, with_cache=True)
+    if kind == MAMBA:
+        return mamba.mamba_train(p, x, ctx, cfg, with_cache=True)
+    if kind == RWKV:
+        return rwkv.rwkv_time_train(p, x, ctx, cfg, with_cache=True)
+    raise ValueError(kind)
+
+
+def _ffn_prefill(kind: str, p, x, ctx, cfg):
+    if kind == DENSE_FFN:
+        return ffn.ffn_train(p, x, ctx, cfg.norm_eps), {}
+    if kind == MOE_FFN:
+        y, _ = ffn.moe_train(p, x, ctx, cfg)
+        return y, {}
+    if kind == RWKV:
+        return rwkv.rwkv_channel_train(p, x, ctx, cfg, with_cache=True)
+    raise ValueError(kind)
+
+
+def _block_prefill(kind_pair, lp, x, ctx, cfg, par, z3=None):
+    lp = _maybe_gather_zero3(lp, par, z3)
+    dy, mc = _mixer_prefill(kind_pair[0], lp["mixer"], x, ctx, cfg)
+    x = x + dy
+    dy, fc = _ffn_prefill(kind_pair[1], lp["ffn"], x, ctx, cfg)
+    return x + dy, {"mixer": mc, "ffn": fc}
+
+
+def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
+                 par: ParallelConfig):
+    """Full-sequence prefill: returns (next_token [B_loc,1], caches)."""
+    v_pad = pad_vocab(cfg.vocab_size, par.tp)
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = layers.embed_lookup(params["embed"], batch["tokens"], ctx, v_pad)
+    x = x.astype(cfg.compute_dtype)
+
+    pat = expanded_pattern(cfg)
+    z3 = zero3_flags(cfg, par)
+    caches: Dict[str, Any] = {"lead": [], "periods": None}
+    for i in range(cfg.leading_dense_layers):
+        x, nc = _block_prefill(pat[i], params["lead"][i], x, ctx, cfg, par,
+                               z3["lead"][i] if z3["lead"] else None)
+        caches["lead"].append(nc)
+
+    def period_body(x, stacked_p):
+        ncs = []
+        for p_i, kp in enumerate(cfg.pattern):
+            x, nc = _block_prefill(kp, stacked_p[p_i], x, ctx, cfg, par,
+                                   z3["periods"][p_i] if z3["periods"] else None)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    x, stacked_caches = lax.scan(period_body, x, tuple(params["periods"]))
+    caches["periods"] = list(stacked_caches)
+
+    h = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # only the LAST position's logits are needed for the next token
+    if ctx.axis is not None and ctx.tp > 1:
+        h_last = lax.all_gather(h[:, -1:], ctx.axis, axis=1, tiled=True)[:, -1:]
+    else:
+        h_last = h[:, -1:]
+    logits = jnp.einsum("bsd,vd->bsv", h_last, params["embed"])
+    nxt = vocab_parallel_argmax(logits[:, -1], ctx, v_pad, cfg.vocab_size)
+    return nxt[:, None], caches

@@ -1,0 +1,31 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, base_lr: float, warmup: int, total: int,
+           min_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = base_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5
+                     * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def wsd(step, *, base_lr: float, warmup: int, total: int,
+        decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): flat plateau, sharp final decay."""
+    s = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = base_lr * s / max(warmup, 1)
+    stable = jnp.full_like(s, base_lr)
+    prog = jnp.clip((s - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+    decay = base_lr * (min_ratio ** prog)      # exponential anneal
+    out = jnp.where(s < warmup, warm, jnp.where(s < decay_start, stable, decay))
+    return out
+
+
+def get_schedule(name: str):
+    return {"cosine": cosine, "wsd": wsd}[name]

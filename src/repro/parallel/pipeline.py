@@ -1,0 +1,72 @@
+"""Pipeline parallelism (GPipe-style) over the pod axis.
+
+At 1000+ nodes the pod axis can be reinterpreted as pipeline stages: each
+stage holds a contiguous slice of layers; microbatches stream through via
+``ppermute`` boundary transfers.  This composes with the TP/SP seams inside
+each stage (paper §7: "Flux can be applied in addition").
+
+The schedule is GPipe (fill-drain): with M microbatches and P stages the
+bubble fraction is (P-1)/(M+P-1); the boundary transfer per microbatch is a
+[B_micro, S/TP, D] activation — tiny next to the in-stage TP rings, and
+XLA overlaps it with the next microbatch's compute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def pipeline_forward(stage_fn: Callable[[Array, int], Array], x: Array,
+                     axis: str, num_microbatches: int) -> Array:
+    """Run ``stage_fn`` (this device's layer slice) as one stage of a GPipe
+    pipeline over mesh axis ``axis``.
+
+    x: [B_loc, S, D] — the stage-0 input (other stages ignore their x).
+    Returns the LAST stage's output (valid on the last stage; callers
+    typically psum-select or ppermute it back).
+    """
+    p = lax.axis_size(axis)
+    stage = lax.axis_index(axis)
+    b = x.shape[0]
+    assert b % num_microbatches == 0
+    mb = b // num_microbatches
+    micro = x.reshape(num_microbatches, mb, *x.shape[1:])
+
+    fwd_perm = [(i, i + 1) for i in range(p - 1)]
+
+    n_ticks = num_microbatches + p - 1
+    out = jnp.zeros_like(micro)
+
+    def tick(carry, t):
+        buf, out = carry
+        # which microbatch enters stage 0 at this tick
+        idx = jnp.clip(t, 0, num_microbatches - 1)
+        inject = lax.dynamic_index_in_dim(micro, idx, axis=0, keepdims=False)
+        x_in = jnp.where(stage == 0, inject, buf)
+        active = (t - stage >= 0) & (t - stage < num_microbatches)
+        y = stage_fn(x_in, t)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # emit at the last stage
+        mb_idx = jnp.clip(t - (p - 1), 0, num_microbatches - 1)
+        emit = (stage == p - 1) & active
+        out = lax.dynamic_update_index_in_dim(
+            out, jnp.where(emit, y, lax.dynamic_index_in_dim(
+                out, mb_idx, axis=0, keepdims=False)),
+            mb_idx, axis=0)
+        # forward the activation to the next stage
+        buf = lax.ppermute(y, axis, fwd_perm) if p > 1 else y
+        return (buf, out), None
+
+    buf0 = jnp.zeros((mb, *x.shape[1:]), x.dtype)
+    (_, out), _ = lax.scan(tick, (buf0, out), jnp.arange(n_ticks))
+    return out.reshape(b, *x.shape[1:])
+
+
+def bubble_fraction(num_microbatches: int, stages: int) -> float:
+    return (stages - 1) / (num_microbatches + stages - 1)

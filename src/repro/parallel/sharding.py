@@ -1,0 +1,77 @@
+"""Parallelism context + helpers threaded through the model code.
+
+All model code runs inside ``jax.shard_map``; ``TPContext`` carries the mesh
+axis names and the FLUX overlap settings so every TP seam in every
+architecture routes through ``repro.core.overlap``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class TPContext:
+    """How the current shard_map region is parallelized.
+
+    axis      : TP/SP mesh axis name (None -> single device / no TP)
+    dp_axes   : data-parallel axes (batch sharding; grad sync)
+    ep_axes   : expert-parallel axes for MoE dispatch
+    mode      : overlap mode for the TP seams (xla | decomposed | flux)
+    """
+    axis: Optional[str] = None
+    dp_axes: Tuple[str, ...] = ()
+    ep_axes: Tuple[str, ...] = ()
+    mode: str = "decomposed"
+    comm_chunks: int = 0
+    use_kernels: bool = False        # Pallas fused kernels on hot paths
+    #                                  (MLA decode; interpret on CPU)
+
+    @property
+    def tp(self) -> int:
+        return 1 if self.axis is None else lax.axis_size(self.axis)
+
+    @property
+    def ep(self) -> int:
+        n = 1
+        for a in self.ep_axes:
+            n *= lax.axis_size(a)
+        return n
+
+    def tp_index(self):
+        if self.axis is None:
+            return 0
+        return lax.axis_index(self.axis)
+
+
+def ceil_mult(x: int, m: int) -> int:
+    """Round x up to a multiple of m."""
+    return ((x + m - 1) // m) * m
+
+
+def pad_heads(num_heads: int, tp: int) -> int:
+    """Heads padded so TP divides them (padding waste shows up honestly in
+    the roofline's MODEL_FLOPS/HLO_FLOPS ratio)."""
+    if num_heads == 0:
+        return 0
+    return ceil_mult(num_heads, tp)
+
+
+def pad_kv_heads(num_kv_heads: int, tp: int) -> int:
+    """KV heads: replicate up to TP when fewer than TP, else pad to multiple."""
+    if num_kv_heads == 0:
+        return 0
+    if num_kv_heads < tp:
+        return tp
+    return ceil_mult(num_kv_heads, tp)
+
+
+def pad_ff(d_ff: int, tp: int, align: int = 128) -> int:
+    return ceil_mult(d_ff, tp * align)
+
+
+def pad_vocab(vocab: int, tp: int, align: int = 128) -> int:
+    return ceil_mult(vocab, tp * align)

@@ -1,0 +1,33 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; multi-device tests run in subprocesses that
+set --xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess_devices(code: str, n_devices: int = 4,
+                           timeout: int = 900) -> str:
+    """Run ``code`` in a fresh python with n forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_PALLAS_INTERPRET"] = "1"
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:{out.stdout[-4000:]}\n"
+            f"STDERR:{out.stderr[-4000:]}")
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess_devices

@@ -1,0 +1,208 @@
+"""Mode-equivalence of the FLUX overlap ops (the paper's correctness
+invariant): xla == decomposed == flux for all shapes/dtypes, values and
+gradients — plus hypothesis property tests on the single-device fallback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import overlap
+
+
+# ---------------------------------------------------------------------------
+# single-device fallback == plain einsum (hypothesis over shapes)
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 3), s=st.integers(1, 8), d=st.integers(1, 16),
+       f=st.integers(1, 16))
+def test_ag_matmul_single_device(b, s, d, f):
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, f))
+    for mode in overlap.VALID_MODES:
+        out = overlap.ag_matmul(x, w, None, mode)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(jnp.einsum("bsd,df->bsf", x, w)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 3), s=st.integers(1, 8), d=st.integers(1, 16),
+       f=st.integers(1, 16))
+def test_matmul_rs_single_device(b, s, d, f):
+    y = jax.random.normal(jax.random.PRNGKey(0), (b, s, f))
+    w = jax.random.normal(jax.random.PRNGKey(1), (f, d))
+    for mode in overlap.VALID_MODES:
+        out = overlap.matmul_rs(y, w, None, mode)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(jnp.einsum("bsf,fd->bsd", y, w)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grad_single_device():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+
+    def loss(mode):
+        return lambda xx, ww: jnp.sum(
+            overlap.matmul_rs(jax.nn.gelu(
+                overlap.ag_matmul(xx, ww, None, mode)), ww.T, None, mode) ** 2)
+
+    gx_ref, gw_ref = jax.grad(loss("xla"), argnums=(0, 1))(x, w)
+    for mode in ("decomposed", "flux"):
+        gx, gw = jax.grad(loss(mode), argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# multi-device equivalence (4 virtual devices, subprocess)
+# ---------------------------------------------------------------------------
+_MODE_EQ = r"""
+import functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import overlap
+
+mesh = Mesh(np.array(jax.devices()), ("model",))
+B, S, D, F = 2, 512, 256, 512
+x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
+w1 = jax.random.normal(jax.random.PRNGKey(1), (D, F)) / D**0.5
+w2 = jax.random.normal(jax.random.PRNGKey(2), (F, D)) / F**0.5
+
+def seam(mode, chunks=0):
+    @jax.jit
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(P(None, "model", None), P(None, "model"),
+                                 P("model", None)),
+                       out_specs=P(None, "model", None), check_vma=False)
+    def f(xs, w1s, w2s):
+        y = overlap.ag_matmul(xs, w1s, "model", mode, chunks)
+        y = jax.nn.gelu(y)
+        return overlap.matmul_rs(y, w2s, "model", mode, chunks)
+    return np.asarray(f(x, w1, w2))
+
+ref = seam("xla")
+for mode, chunks in [("decomposed", 0), ("decomposed", 8), ("decomposed", 16),
+                     ("flux", 0)]:
+    out = seam(mode, chunks)
+    err = np.abs(out - ref).max()
+    assert err < 1e-3, (mode, chunks, err)
+
+# gradients
+def loss(mode):
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(P(None, "model", None), P(None, "model"),
+                                 P("model", None)),
+                       out_specs=P(), check_vma=False)
+    def f(xs, w1s, w2s):
+        y = overlap.ag_matmul(xs, w1s, "model", mode)
+        z = overlap.matmul_rs(jax.nn.gelu(y), w2s, "model", mode)
+        return jax.lax.psum(jnp.sum(z * z), "model")
+    return lambda a, b, c: f(a, b, c)
+
+g_ref = jax.jit(jax.grad(loss("xla"), argnums=(0, 1, 2)))(x, w1, w2)
+for mode in ["decomposed", "flux"]:
+    g = jax.jit(jax.grad(loss(mode), argnums=(0, 1, 2)))(x, w1, w2)
+    for a, b in zip(g, g_ref):
+        err = np.abs(np.asarray(a) - np.asarray(b)).max()
+        rel = err / (np.abs(np.asarray(b)).max() + 1e-9)
+        assert rel < 1e-3, (mode, rel)
+
+# matmul_ar (decode seam)
+y = jax.random.normal(jax.random.PRNGKey(3), (B, 4, F))
+@jax.jit
+@functools.partial(jax.shard_map, mesh=mesh,
+                   in_specs=(P(None, None, "model"), P("model", None)),
+                   out_specs=P(None, None, None), check_vma=False)
+def ar_dec(ys, ws):
+    return overlap.matmul_ar(ys, ws, "model", "decomposed")
+@jax.jit
+@functools.partial(jax.shard_map, mesh=mesh,
+                   in_specs=(P(None, None, "model"), P("model", None)),
+                   out_specs=P(None, None, None), check_vma=False)
+def ar_ref(ys, ws):
+    return overlap.matmul_ar(ys, ws, "model", "xla")
+err = np.abs(np.asarray(ar_dec(y, w2)) - np.asarray(ar_ref(y, w2))).max()
+assert err < 1e-3, err
+print("MODE_EQ_OK")
+"""
+
+
+def test_mode_equivalence_4dev(subproc):
+    out = subproc(_MODE_EQ, n_devices=4)
+    assert "MODE_EQ_OK" in out
+
+
+_Q8 = r"""
+import functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import overlap
+
+mesh = Mesh(np.array(jax.devices()), ("model",))
+B, S, D, F = 2, 256, 256, 512
+x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
+w = jax.random.normal(jax.random.PRNGKey(1), (D, F)) / D**0.5
+
+def run(mode):
+    @jax.jit
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(P(None, "model", None), P(None, "model")),
+                       out_specs=P(None, None, "model"), check_vma=False)
+    def f(xs, ws):
+        return overlap.ag_matmul(xs, ws, "model", mode)
+    return np.asarray(f(x, w))
+
+ref = run("xla")
+q8 = run("xla_q8")
+rel = np.abs(q8 - ref).max() / np.abs(ref).max()
+# int8 block quantization: ~0.8% relative error budget
+assert rel < 2e-2, rel
+assert rel > 1e-5  # it IS lossy — guard against silently testing the exact path
+print("Q8_OK", rel)
+"""
+
+
+def test_q8_gather_accuracy(subproc):
+    out = subproc(_Q8, n_devices=4)
+    assert "Q8_OK" in out
+
+
+_BIDIR = r"""
+import functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import overlap
+
+mesh = Mesh(np.array(jax.devices()), ("model",))
+B, S, D, F = 2, 256, 128, 256
+x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
+w1 = jax.random.normal(jax.random.PRNGKey(1), (D, F)) / D**0.5
+w2 = jax.random.normal(jax.random.PRNGKey(2), (F, D)) / F**0.5
+
+def seam(mode):
+    @jax.jit
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(P(None, "model", None), P(None, "model"),
+                                 P("model", None)),
+                       out_specs=P(None, "model", None), check_vma=False)
+    def f(xs, w1s, w2s):
+        y = overlap.ag_matmul(xs, w1s, "model", mode)
+        return overlap.matmul_rs(jax.nn.gelu(y), w2s, "model", mode)
+    return np.asarray(f(x, w1, w2))
+
+ref = seam("xla")
+out = seam("decomposed_bidir")
+assert np.abs(out - ref).max() < 1e-3
+print("BIDIR_OK")
+"""
+
+
+def test_bidirectional_ring(subproc):
+    assert "BIDIR_OK" in subproc(_BIDIR, n_devices=4)
