@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 gate: compat grep-lint + full correctness suite.
+#
+# Usage:  scripts/verify.sh [extra pytest args]
+#
+# Runs on CPU CI machines (no TPU): kernels execute in Pallas interpret mode
+# (REPRO_PALLAS_INTERPRET=1).  Every PR must pass this before review.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== compat grep-lint (drifted JAX symbols must live in repro/compat) =="
+if grep -rn --include='*.py' -E \
+     'jax\.shard_map|jax\.experimental\.shard_map|CompilerParams|jax\.experimental\.pallas import tpu|lax\.axis_size' \
+     src/ | grep -v '^src/repro/compat/'; then
+  echo "FAIL: drifted JAX symbols used outside src/repro/compat/ (see above);" >&2
+  echo "      import them through repro.compat instead." >&2
+  exit 1
+fi
+echo "ok"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q "$@"

@@ -1,0 +1,169 @@
+"""Pallas TPU portability: compiler params, memory spaces, DMA helpers.
+
+Drift handled here:
+  - ``pltpu.TPUCompilerParams`` (0.4.x) was renamed ``pltpu.CompilerParams``;
+    field sets also differ between generations, so
+    ``pallas_compiler_params`` filters kwargs to what the installed class
+    accepts instead of exploding on a newer-generation knob.
+  - HBM ("ANY"-space) scratch buffers: callable ``pl.ANY(shape, dtype)`` on
+    newer JAX, only ``pltpu.ANY(shape, dtype)`` on 0.4.x
+    (``pl.ANY`` there is a plain enum member and not callable).
+  - ``interpret=`` defaults: CPU CI machines have no Mosaic toolchain, so
+    every kernel defaults to interpret mode unless a real TPU backend is
+    present; ``REPRO_PALLAS_INTERPRET`` overrides in both directions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import os
+import warnings
+from typing import Any, Callable, Optional
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# --------------------------------------------------------------------------
+# compiler params
+# --------------------------------------------------------------------------
+_COMPILER_PARAMS_CLS = (getattr(pltpu, "CompilerParams", None)
+                        or getattr(pltpu, "TPUCompilerParams"))
+_CP_FIELDS = {f.name for f in dataclasses.fields(_COMPILER_PARAMS_CLS)}
+
+
+def pallas_compiler_params(**kwargs):
+    """Build the installed generation's TPU compiler-params object.
+
+    Accepts the union of knobs across generations
+    (``dimension_semantics``, ``collective_id``, ``vmem_limit_bytes``, ...)
+    and drops — with a warning — any the installed class does not know, so
+    kernels can be written once against the newest surface.
+    """
+    kept = {k: v for k, v in kwargs.items() if k in _CP_FIELDS}
+    dropped = sorted(set(kwargs) - set(kept))
+    if dropped:
+        warnings.warn(
+            f"compat.pallas_compiler_params: {_COMPILER_PARAMS_CLS.__name__} "
+            f"on this JAX does not support {dropped}; dropping", stacklevel=2)
+    return _COMPILER_PARAMS_CLS(**kept)
+
+
+# --------------------------------------------------------------------------
+# pallas_call with portable defaults
+# --------------------------------------------------------------------------
+def interpret_default() -> bool:
+    """Mosaic lowering needs a TPU toolchain; interpret everywhere else.
+    ``REPRO_PALLAS_INTERPRET`` (1/0) force-overrides the backend probe."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def fused_collective_kernels_composable() -> bool:
+    """Can several remote-DMA (ring) Pallas kernels share one jitted program?
+
+    On real TPUs (Mosaic lowering): always.  In interpret mode on older JAX,
+    ``make_async_remote_copy`` discharges into ``all_gather``/``argmax``
+    collectives nested inside the kernel's ``pl.when`` conditionals; XLA
+    CPU's sharding propagation then hard-crashes (``Array::Reshape`` check
+    failure, observed on jax 0.4.37) once certain pairs of such kernels
+    appear in the same program — a single kernel per program compiles and
+    runs correctly.  Callers composing fused kernels (e.g. the flux overlap
+    seams) must fall back to a collective-equivalent path when this returns
+    False.
+    """
+    from repro.compat._version import jax_at_least
+    if not interpret_default():
+        return True
+    return jax_at_least(0, 6)
+
+
+_PALLAS_CALL_PARAMS = frozenset(inspect.signature(pl.pallas_call).parameters)
+
+
+def pallas_call(kernel: Callable, *, interpret: Optional[bool] = None,
+                compiler_params: Any = None, **kwargs):
+    """``pl.pallas_call`` with version-portable defaults.
+
+    - ``interpret=None`` resolves via :func:`interpret_default` so every
+      kernel runs on CPU CI without each call site re-implementing the probe.
+    - ``compiler_params`` may be a plain dict of knobs; it is routed through
+      :func:`pallas_compiler_params` to the installed params class.
+    - kwargs the installed ``pl.pallas_call`` does not know (e.g.
+      ``cost_estimate`` on very old releases) are dropped with a warning
+      rather than raising.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if isinstance(compiler_params, dict):
+        compiler_params = pallas_compiler_params(**compiler_params)
+    if compiler_params is not None:
+        kwargs["compiler_params"] = compiler_params
+    unsupported = [k for k in kwargs
+                   if k not in _PALLAS_CALL_PARAMS and kwargs[k] is not None]
+    for k in unsupported:
+        warnings.warn(f"compat.pallas_call: pl.pallas_call on this JAX does "
+                      f"not support {k!r}; dropping", stacklevel=2)
+    kwargs = {k: v for k, v in kwargs.items()
+              if k in _PALLAS_CALL_PARAMS and v is not None}
+    return pl.pallas_call(kernel, interpret=interpret, **kwargs)
+
+
+def cost_estimate(*, flops: int, bytes_accessed: int,
+                  transcendentals: int = 0):
+    """Portable ``pl.CostEstimate`` (None when the release predates it)."""
+    ce_cls = getattr(pl, "CostEstimate", None)
+    if ce_cls is None:
+        return None
+    return ce_cls(flops=flops, bytes_accessed=bytes_accessed,
+                  transcendentals=transcendentals)
+
+
+# --------------------------------------------------------------------------
+# memory spaces & scratch shapes
+# --------------------------------------------------------------------------
+#: VMEM scratch allocator: ``VMEM(shape, dtype)`` (stable across generations).
+VMEM = pltpu.VMEM
+#: SMEM memory space (BlockSpec ``memory_space=`` and scratch allocator).
+SMEM = pltpu.SMEM
+#: "ANY" (compiler-placed / HBM) memory space for ``pl.BlockSpec``.
+ANY = getattr(pl, "ANY", None)
+if ANY is None:                                      # pragma: no cover
+    ANY = pltpu.ANY
+
+
+def hbm_scratch(shape: tuple, dtype):
+    """HBM-resident scratch buffer spec (``scratch_shapes=`` entry).
+
+    Newer JAX spells this ``pl.ANY(shape, dtype)``; on 0.4.x only the TPU
+    enum ``pltpu.ANY`` is callable.
+    """
+    for space in (getattr(pltpu, "ANY", None), getattr(pl, "ANY", None)):
+        if callable(space):
+            return space(shape, dtype)
+    raise NotImplementedError(
+        "no callable ANY/HBM memory space on this JAX; cannot allocate "
+        "HBM scratch for fused collective kernels")
+
+
+# --------------------------------------------------------------------------
+# async-copy / semaphore (in-kernel DMA) helpers
+# --------------------------------------------------------------------------
+def _require(name: str):
+    obj = getattr(pltpu, name, None)
+    if obj is None:                                  # pragma: no cover
+        raise NotImplementedError(
+            f"pltpu.{name} is unavailable on this JAX; the fused "
+            f"communication kernels need it")
+    return obj
+
+
+SemaphoreType = _require("SemaphoreType")
+#: DMA-semaphore scratch spec (``scratch_shapes=`` entry).
+DMA_SEM = SemaphoreType.DMA
+make_async_copy = _require("make_async_copy")
+make_async_remote_copy = _require("make_async_remote_copy")
+#: ``device_id_type=`` value for logical (mesh-coordinate) addressing.
+LOGICAL_DEVICE_ID = _require("DeviceIdType").LOGICAL

@@ -1,0 +1,35 @@
+"""Installed-JAX version detection for the portability layer."""
+from __future__ import annotations
+
+import jax
+
+#: Oldest JAX generation the shim is written against.
+MIN_JAX = (0, 4, 30)
+#: Newest JAX the shim has been exercised on (CI pin).
+MAX_TESTED_JAX = (0, 4, 37)
+
+
+def _parse(version: str) -> tuple:
+    parts = []
+    for piece in version.split(".")[:3]:
+        digits = "".join(ch for ch in piece if ch.isdigit())
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts)
+
+
+JAX_VERSION = _parse(jax.__version__)
+
+
+def jax_at_least(*version: int) -> bool:
+    """True when the installed JAX is at least ``version`` (e.g. (0, 5))."""
+    return JAX_VERSION >= tuple(version)
+
+
+def version_summary() -> str:
+    """One-line provenance string for logs and error messages."""
+    lo = ".".join(map(str, MIN_JAX))
+    hi = ".".join(map(str, MAX_TESTED_JAX))
+    return (f"jax {jax.__version__} (compat range: {lo} .. {hi}; "
+            f"newer releases resolved best-effort)")

@@ -16,7 +16,7 @@ Three implementations of the two Megatron-TP seams, selectable per call:
                          semaphore waits instead of spin-signals, swizzled tile
                          walk.  See ``repro/kernels/``.
 
-All ops must be called inside ``jax.shard_map``; ``axis`` names the TP mesh
+All ops must be called inside ``compat.shard_map``; ``axis`` names the TP mesh
 axis.  Every op is differentiable via custom_vjp, and the backward pass uses
 the *interchanged* overlapped op (AG <-> RS), exactly as in the paper §2.1.
 
@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 Array = jax.Array
 
 # *_q8 variants quantize the gathered ACTIVATION to int8 with per-128-block
@@ -48,7 +50,7 @@ VALID_MODES = ("xla", "decomposed", "flux", "xla_q8", "decomposed_q8",
 def _axis_size(axis: Optional[str]) -> int:
     if axis is None:
         return 1
-    return lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
 def _axis_index(axis: str) -> Array:
@@ -73,7 +75,7 @@ def _matmul_rs_xla(y: Array, w: Array, axis: str) -> Array:
 # mode="decomposed": chunked ppermute ring (medium-grained; TE analogue)
 # ---------------------------------------------------------------------------
 def _ring_perm(axis: str, reverse: bool = False):
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
     if reverse:
         return [(i, (i - 1) % n) for i in range(n)]
     return [(i, (i + 1) % n) for i in range(n)]
@@ -83,7 +85,7 @@ def _ag_matmul_decomposed(x: Array, w: Array, axis: str, comm_chunks: int) -> Ar
     """AllGather-GEMM as a ring of shard hops, each hop's GEMM issued as soon
     as its shard lands.  ``comm_chunks`` sub-divides each shard so the ring
     moves smaller messages (finer overlap granularity, more hops)."""
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     s_shard = x.shape[-2]
     sub = max(1, comm_chunks // n) if comm_chunks else 1
@@ -118,7 +120,7 @@ def _matmul_rs_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Ar
     chunk that the ring needs next, adds the partial arriving from its left
     neighbor, and forwards.  The chunk GEMMs interleave with the hops (paper
     Fig. 3, medium-grained)."""
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     seq = y.shape[-2]
     assert seq % n == 0, f"seq {seq} not divisible by TP {n}"
@@ -142,7 +144,7 @@ def _matmul_rs_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Ar
 def _matmul_ar_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Array:
     """Decode-path GEMM+AllReduce, chunked along the contraction dim so each
     partial psum overlaps with the next chunk's GEMM."""
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
     k = y.shape[-1]
     chunks = comm_chunks if comm_chunks else n
     chunks = max(1, min(chunks, k))
@@ -166,7 +168,7 @@ def _matmul_ar_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Ar
 # half-volume rings halves the per-link traffic -> ~2x on ring-bound seams.
 # ---------------------------------------------------------------------------
 def _ag_matmul_bidir(x: Array, w: Array, axis: str, comm_chunks: int) -> Array:
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     s_shard = x.shape[-2]
     half = s_shard // 2
@@ -193,7 +195,7 @@ def _ag_matmul_bidir(x: Array, w: Array, axis: str, comm_chunks: int) -> Array:
 
 
 def _matmul_rs_bidir(y: Array, w: Array, axis: str, comm_chunks: int) -> Array:
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     seq = y.shape[-2]
     s_shard = seq // n
@@ -286,6 +288,15 @@ def ag_matmul(x: Array, w: Array, axis: Optional[str] = None,
     return _ag_matmul_impl(x, w, axis, mode, comm_chunks)
 
 
+def _flux_available() -> bool:
+    """Flux seams compose several remote-DMA kernels into one jitted program
+    (fwd AG + bwd RS, or both MLP seams); on JAX generations where the
+    interpret-mode DMA discharge cannot compose (see
+    ``compat.fused_collective_kernels_composable``) fall back to the
+    decomposed ring — same numerics, ``ppermute``-based."""
+    return compat.fused_collective_kernels_composable()
+
+
 def _ag_matmul_impl(x, w, axis, mode, comm_chunks):
     assert mode in VALID_MODES, mode
     if axis is None or _axis_size(axis) == 1:
@@ -293,7 +304,9 @@ def _ag_matmul_impl(x, w, axis, mode, comm_chunks):
     if mode == "xla":
         return _ag_matmul_xla(x, w, axis)
     if mode == "flux":
-        return _ag_matmul_flux(x, w, axis)
+        if _flux_available():
+            return _ag_matmul_flux(x, w, axis)
+        return _ag_matmul_decomposed(x, w, axis, comm_chunks)
     if mode.endswith("_q8"):
         return _ag_matmul_q8(x, w, axis, mode[:-3], comm_chunks)
     if mode == "decomposed_bidir":
@@ -340,7 +353,9 @@ def _matmul_rs_impl(y, w, axis, mode, comm_chunks):
     if mode == "xla":
         return _matmul_rs_xla(y, w, axis)
     if mode == "flux":
-        return _matmul_rs_flux(y, w, axis)
+        if _flux_available():
+            return _matmul_rs_flux(y, w, axis)
+        return _matmul_rs_decomposed(y, w, axis, comm_chunks)
     if mode == "decomposed_bidir":
         return _matmul_rs_bidir(y, w, axis, comm_chunks)
     return _matmul_rs_decomposed(y, w, axis, comm_chunks)

@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _ag_gemm_kernel(a_ref, b_ref, o_ref,           # HBM: [M_sh,K], [K,N], [n*M_sh,N]
@@ -52,7 +53,7 @@ def _ag_gemm_kernel(a_ref, b_ref, o_ref,           # HBM: [M_sh,K], [K,N], [n*M_
     # ---- step 0 bootstrap: stage the local shard into its A_agg slot -------
     @pl.when((step == 0) & first_inner)
     def _preset_local():
-        cp = pltpu.make_async_copy(a_ref, a_agg.at[me], local_sem)
+        cp = compat.make_async_copy(a_ref, a_agg.at[me], local_sem)
         cp.start()
         cp.wait()
 
@@ -63,24 +64,24 @@ def _ag_gemm_kernel(a_ref, b_ref, o_ref,           # HBM: [M_sh,K], [K,N], [n*M_
         def _wait_arrival():
             # WaitSignal: the DMA landing in slot `owner` was issued by the
             # upstream neighbor during its previous step.
-            pltpu.make_async_remote_copy(
+            compat.make_async_remote_copy(
                 src_ref=a_agg.at[owner], dst_ref=a_agg.at[owner],
                 send_sem=send_sem, recv_sem=recv_sem,
-                device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+                device_id=nbr, device_id_type=compat.LOGICAL_DEVICE_ID,
             ).wait_recv()
 
         @pl.when(step < n_dev - 1)
         def _forward():
-            pltpu.make_async_remote_copy(
+            compat.make_async_remote_copy(
                 src_ref=a_agg.at[owner], dst_ref=a_agg.at[owner],
                 send_sem=send_sem, recv_sem=recv_sem,
-                device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+                device_id=nbr, device_id_type=compat.LOGICAL_DEVICE_ID,
             ).start()
 
     # ---- MXU block matmul over the current shard ---------------------------
-    ca = pltpu.make_async_copy(
+    ca = compat.make_async_copy(
         a_agg.at[owner, pl.ds(mi * bm, bm), pl.ds(ki * bk, bk)], a_vmem, copy_a)
-    cb = pltpu.make_async_copy(
+    cb = compat.make_async_copy(
         b_ref.at[pl.ds(ki * bk, bk), pl.ds(ni * bn, bn)], b_vmem, copy_b)
     ca.start(); cb.start(); ca.wait(); cb.wait()
 
@@ -95,7 +96,7 @@ def _ag_gemm_kernel(a_ref, b_ref, o_ref,           # HBM: [M_sh,K], [K,N], [n*M_
     def _epilogue():
         # swizzled output coordinate: rows of the shard we currently hold
         o_vmem[...] = acc_ref[...].astype(o_vmem.dtype)
-        co = pltpu.make_async_copy(
+        co = compat.make_async_copy(
             o_vmem, o_ref.at[pl.ds(owner * n_m * bm + mi * bm, bm),
                              pl.ds(ni * bn, bn)], copy_o)
         co.start(); co.wait()
@@ -104,17 +105,17 @@ def _ag_gemm_kernel(a_ref, b_ref, o_ref,           # HBM: [M_sh,K], [K,N], [n*M_
     @pl.when((step < n_dev - 1) & (mi == n_m - 1) & (ni == n_n - 1)
              & (ki == n_k - 1))
     def _drain_send():
-        pltpu.make_async_remote_copy(
+        compat.make_async_remote_copy(
             src_ref=a_agg.at[owner], dst_ref=a_agg.at[owner],
             send_sem=send_sem, recv_sem=recv_sem,
-            device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+            device_id=nbr, device_id_type=compat.LOGICAL_DEVICE_ID,
         ).wait_send()
 
 
 def ag_gemm(a_shard: jax.Array, b_local: jax.Array, *, axis_name: str,
             n_dev: int, bm: int = 256, bk: int = 512, bn: int = 256,
             reverse: bool = False, out_dtype=None,
-            interpret: bool = False, collective_id: int = 0) -> jax.Array:
+            interpret: bool | None = None, collective_id: int = 0) -> jax.Array:
     """C[n*M_sh, N_local] = AllGather(A_shard) @ B_local, fused. Call inside
     shard_map; A row-sharded over ``axis_name``, B column-sharded."""
     m_sh, k = a_shard.shape
@@ -128,23 +129,23 @@ def ag_gemm(a_shard: jax.Array, b_local: jax.Array, *, axis_name: str,
     kernel = functools.partial(
         _ag_gemm_kernel, axis_name=axis_name, n_dev=n_dev, reverse=reverse,
         bm=bm, bk=bk, bn=bn)
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
-                  pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY),
+                  pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct((n_dev * m_sh, n), out_dtype),
         scratch_shapes=[
-            pl.ANY((n_dev, m_sh, k), a_shard.dtype),   # A_agg (HBM)
-            pltpu.VMEM((bm, bn), jnp.float32),          # accumulator
-            pltpu.VMEM((bm, bk), a_shard.dtype),
-            pltpu.VMEM((bk, bn), b_local.dtype),
-            pltpu.VMEM((bm, bn), out_dtype),
-            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+            compat.hbm_scratch((n_dev, m_sh, k), a_shard.dtype),   # A_agg (HBM)
+            compat.VMEM((bm, bn), jnp.float32),          # accumulator
+            compat.VMEM((bm, bk), a_shard.dtype),
+            compat.VMEM((bk, bn), b_local.dtype),
+            compat.VMEM((bm, bn), out_dtype),
+            compat.DMA_SEM, compat.DMA_SEM,
+            compat.DMA_SEM, compat.DMA_SEM,
+            compat.DMA_SEM, compat.DMA_SEM,
         ],
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
+        compiler_params=compat.pallas_compiler_params(collective_id=collective_id),
         interpret=interpret,
     )(a_shard, b_local)

@@ -12,7 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 NEG_INF = -1e30
 
@@ -72,7 +73,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, scale: float | None = None,
                     bq: int = 512, bkv: int = 512, kv_offset: int = 0,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q: [B, Hq, Sq, D]; k,v: [B, Hkv, Skv, D] with Hq % Hkv == 0.
     ``kv_offset``: absolute position of q[0] relative to k[0] minus (Sq-1)
     offsetting — used when q is a suffix of a longer kv (chunked prefill)."""
@@ -98,14 +99,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     grid = (b * hq, sq // bq, skv // bkv)
     # causal halves the useful score/PV work; K/V stream once per q-block row
     causal_frac = 0.5 if causal else 1.0
-    cost = pl.CostEstimate(
+    cost = compat.cost_estimate(
         flops=int(4 * b * hq * sq * skv * d * causal_frac),
         bytes_accessed=int(q.nbytes
                            + (k.nbytes + v.nbytes) * (sq // bq) * causal_frac
                            + q.nbytes),
         transcendentals=int(b * hq * sq * skv * causal_frac),
     )
-    out = pl.pallas_call(
+    out = compat.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           bq=bq, bkv=bkv, seq_kv=skv, kv_offset=kv_offset),
         grid=grid,
@@ -117,11 +118,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out_specs=pl.BlockSpec((1, bq, d), lambda h, qi, kj: (h, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
+            compat.VMEM((bq, 1), jnp.float32),
+            compat.VMEM((bq, 1), jnp.float32),
+            compat.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         cost_estimate=cost,
         interpret=interpret,

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M/n,N]
@@ -47,10 +48,10 @@ def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M
     m_sh = n_m * bm
 
     # ---- contraction: accumulate A[owner rows] @ B for this tile ------------
-    ca = pltpu.make_async_copy(
+    ca = compat.make_async_copy(
         a_ref.at[pl.ds(owner * m_sh + mi * bm, bm), pl.ds(ki * bk, bk)],
         a_vmem, copy_a)
-    cb = pltpu.make_async_copy(
+    cb = compat.make_async_copy(
         b_ref.at[pl.ds(ki * bk, bk), pl.ds(ni * bn, bn)], b_vmem, copy_b)
     ca.start(); cb.start(); ca.wait(); cb.wait()
 
@@ -68,13 +69,13 @@ def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M
         def _fold_incoming():
             # WaitSignal for THIS tile of the in-flight buffer, then fuse the
             # reduction into the accumulator (FLUX "Reduce branch").
-            pltpu.make_async_remote_copy(
+            compat.make_async_remote_copy(
                 src_ref=ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
                 dst_ref=ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
                 send_sem=send_sem, recv_sem=recv_sem,
-                device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+                device_id=nbr, device_id_type=compat.LOGICAL_DEVICE_ID,
             ).wait_recv()
-            inc = pltpu.make_async_copy(
+            inc = compat.make_async_copy(
                 ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
                 stage, copy_a)
             inc.start(); inc.wait()
@@ -83,15 +84,15 @@ def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M
         @pl.when(step < n_dev - 1)
         def _forward_tile():
             stage[...] = acc_ref[...].astype(stage.dtype)
-            st = pltpu.make_async_copy(
+            st = compat.make_async_copy(
                 stage, ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
                 copy_o)
             st.start(); st.wait()
-            pltpu.make_async_remote_copy(
+            compat.make_async_remote_copy(
                 src_ref=ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
                 dst_ref=ws.at[step + 1, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
                 send_sem=send_sem, recv_sem=recv_sem,
-                device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+                device_id=nbr, device_id_type=compat.LOGICAL_DEVICE_ID,
             ).start()
 
         @pl.when(step == n_dev - 1)
@@ -99,7 +100,7 @@ def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M
             # final step computes OUR shard (owner == me): write the reduced
             # tile straight to the output — epilogue fusion, no extra pass.
             o_stage[...] = acc_ref[...].astype(o_stage.dtype)
-            co = pltpu.make_async_copy(
+            co = compat.make_async_copy(
                 o_stage, o_ref.at[pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)], copy_o)
             co.start(); co.wait()
 
@@ -107,18 +108,18 @@ def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M
         # the semaphore balances by kernel exit.
         @pl.when(step > 0)
         def _drain_prev_send():
-            pltpu.make_async_remote_copy(
+            compat.make_async_remote_copy(
                 src_ref=ws.at[step - 1, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
                 dst_ref=ws.at[step, pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)],
                 send_sem=send_sem, recv_sem=recv_sem,
-                device_id=nbr, device_id_type=pltpu.DeviceIdType.LOGICAL,
+                device_id=nbr, device_id_type=compat.LOGICAL_DEVICE_ID,
             ).wait_send()
 
 
 def gemm_rs(a_local: jax.Array, b_local: jax.Array, *, axis_name: str,
             n_dev: int, bm: int = 256, bk: int = 512, bn: int = 256,
             reverse: bool = False, out_dtype=None, partial_dtype=None,
-            interpret: bool = False, collective_id: int = 1) -> jax.Array:
+            interpret: bool | None = None, collective_id: int = 1) -> jax.Array:
     """out[M/n, N] = ReduceScatter_m(A_local @ B_local), fused.  Call inside
     shard_map; A column(K)-sharded, B row(K)-sharded over ``axis_name``."""
     m, k_sh = a_local.shape
@@ -135,24 +136,24 @@ def gemm_rs(a_local: jax.Array, b_local: jax.Array, *, axis_name: str,
     kernel = functools.partial(
         _gemm_rs_kernel, axis_name=axis_name, n_dev=n_dev, reverse=reverse,
         bm=bm, bk=bk, bn=bn)
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
-                  pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        in_specs=[pl.BlockSpec(memory_space=compat.ANY),
+                  pl.BlockSpec(memory_space=compat.ANY)],
+        out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct((m_sh, n), out_dtype),
         scratch_shapes=[
-            pl.ANY((n_dev, m_sh, n), partial_dtype),    # in-flight partials
-            pltpu.VMEM((bm, bn), jnp.float32),          # accumulator
-            pltpu.VMEM((bm, bk), a_local.dtype),
-            pltpu.VMEM((bk, bn), b_local.dtype),
-            pltpu.VMEM((bm, bn), partial_dtype),        # stage/cast buffer
-            pltpu.VMEM((bm, bn), out_dtype),            # output cast buffer
-            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
+            compat.hbm_scratch((n_dev, m_sh, n), partial_dtype),    # in-flight partials
+            compat.VMEM((bm, bn), jnp.float32),          # accumulator
+            compat.VMEM((bm, bk), a_local.dtype),
+            compat.VMEM((bk, bn), b_local.dtype),
+            compat.VMEM((bm, bn), partial_dtype),        # stage/cast buffer
+            compat.VMEM((bm, bn), out_dtype),            # output cast buffer
+            compat.DMA_SEM, compat.DMA_SEM,
+            compat.DMA_SEM, compat.DMA_SEM,
+            compat.DMA_SEM,
         ],
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
+        compiler_params=compat.pallas_compiler_params(collective_id=collective_id),
         interpret=interpret,
     )(a_local, b_local)

@@ -12,7 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
@@ -32,8 +33,10 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
 
 def matmul(a: jax.Array, b: jax.Array, *,
            bm: int = 256, bk: int = 512, bn: int = 256,
-           out_dtype=None, interpret: bool = False) -> jax.Array:
-    """C = A @ B with fp32 accumulation.  A: [M, K], B: [K, N]."""
+           out_dtype=None, interpret: bool | None = None) -> jax.Array:
+    """C = A @ B with fp32 accumulation.  A: [M, K], B: [K, N].
+    ``interpret=None`` resolves via ``compat.interpret_default()`` (interpret
+    mode on CPU CI, Mosaic on real TPUs)."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -43,7 +46,7 @@ def matmul(a: jax.Array, b: jax.Array, *,
     out_dtype = out_dtype or a.dtype
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
-    return pl.pallas_call(
+    return compat.pallas_call(
         functools.partial(_matmul_kernel, n_k=n_k),
         grid=grid,
         in_specs=[
@@ -52,8 +55,8 @@ def matmul(a: jax.Array, b: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.VMEM((bm, bn), jnp.float32)],
+        compiler_params=compat.pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

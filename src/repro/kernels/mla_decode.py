@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 NEG_INF = -1e30
 
@@ -66,7 +67,7 @@ def _mla_kernel(valid_ref,                     # SMEM [1]: valid length
 def mla_decode_attention(q_eff: jax.Array, q_rope: jax.Array,
                          c_cache: jax.Array, kr_cache: jax.Array,
                          valid_len: jax.Array, *, scale: float,
-                         bs: int = 512, interpret: bool = False) -> jax.Array:
+                         bs: int = 512, interpret: bool | None = None) -> jax.Array:
     """q_eff: [B, H, R]; q_rope: [B, H, Dr]; c_cache: [B, S, R];
     kr_cache: [B, S, Dr]; valid_len: scalar int32 (positions < valid attend).
     Returns ctx over the latent: [B, H, R] fp32."""
@@ -77,17 +78,17 @@ def mla_decode_attention(q_eff: jax.Array, q_rope: jax.Array,
     while s % bs:
         bs //= 2
     grid = (b, s // bs)
-    cost = pl.CostEstimate(
+    cost = compat.cost_estimate(
         flops=int(2 * b * h * s * (2 * r + dr)),
         bytes_accessed=int(c_cache.nbytes + kr_cache.nbytes
                            + q_eff.nbytes + q_rope.nbytes + b * h * r * 4),
         transcendentals=int(b * h * s),
     )
-    out = pl.pallas_call(
+    out = compat.pallas_call(
         functools.partial(_mla_kernel, bs=bs, scale=scale),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=compat.SMEM),
             pl.BlockSpec((1, h, r), lambda bi, sj: (bi, 0, 0)),
             pl.BlockSpec((1, h, dr), lambda bi, sj: (bi, 0, 0)),
             pl.BlockSpec((1, bs, r), lambda bi, sj: (bi, sj, 0)),
@@ -96,11 +97,11 @@ def mla_decode_attention(q_eff: jax.Array, q_rope: jax.Array,
         out_specs=pl.BlockSpec((1, h, r), lambda bi, sj: (bi, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((h, 1), jnp.float32),
-            pltpu.VMEM((h, 1), jnp.float32),
-            pltpu.VMEM((h, r), jnp.float32),
+            compat.VMEM((h, 1), jnp.float32),
+            compat.VMEM((h, 1), jnp.float32),
+            compat.VMEM((h, r), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         cost_estimate=cost,
         interpret=interpret,

@@ -5,25 +5,18 @@ selection (CPU container -> interpret; real TPU -> Mosaic), and padding.
 """
 from __future__ import annotations
 
-import functools
-import os
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
+from repro import compat
 from repro.kernels import ag_gemm as _ag
 from repro.kernels import gemm_rs as _rs
 from repro.kernels import matmul as _mm
 
-
-def _interpret_default() -> bool:
-    """Mosaic lowering needs a TPU toolchain; interpret everywhere else."""
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+# interpret-mode selection lives in the portability layer (one probe for
+# every kernel); kept importable under the old private name.
+_interpret_default = compat.interpret_default
 
 
 def pick_block(dim: int, pref: int) -> int:
@@ -63,7 +56,7 @@ def ag_matmul_fused(a_shard: jax.Array, b_local: jax.Array, *, axis_name: str,
                     interpret: Optional[bool] = None, **kw) -> jax.Array:
     """Fused AllGather-GEMM (call inside shard_map)."""
     interpret = _interpret_default() if interpret is None else interpret
-    n_dev = n_dev or lax.axis_size(axis_name)
+    n_dev = n_dev or compat.axis_size(axis_name)
     if n_dev == 1:
         return matmul(a_shard, b_local, interpret=interpret)
     bm, bk, bn = plan_blocks(a_shard.shape[0], a_shard.shape[1],
@@ -79,7 +72,7 @@ def matmul_rs_fused(a_local: jax.Array, b_local: jax.Array, *, axis_name: str,
                     interpret: Optional[bool] = None, **kw) -> jax.Array:
     """Fused GEMM-ReduceScatter (call inside shard_map)."""
     interpret = _interpret_default() if interpret is None else interpret
-    n_dev = n_dev or lax.axis_size(axis_name)
+    n_dev = n_dev or compat.axis_size(axis_name)
     if n_dev == 1:
         return matmul(a_local, b_local, interpret=interpret)
     m_sh = a_local.shape[0] // n_dev

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.analysis import jaxpr_cost as JC
 from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ParallelConfig,
                                 ShapeConfig, get_config, shape_applicable)
@@ -134,7 +135,7 @@ def build_train(cfg, shape, par, mesh):
             dp_axis="data", pod_axis=pod_axis, grad_compress=par.grad_compress)
         return params, opt, loss
 
-    sm = jax.shard_map(step_fn_inner, mesh=mesh,
+    sm = compat.shard_map(step_fn_inner, mesh=mesh,
                        in_specs=(pspecs, opt_specs, bspec, P()),
                        out_specs=(pspecs, opt_specs, P()),
                        check_vma=False)
@@ -160,7 +161,7 @@ def build_decode(cfg, shape, par, mesh):
     def fn(params, caches, tokens, pos):
         return S.decode_step(params, caches, tokens, pos, ctx, cfg, par)
 
-    sm = jax.shard_map(fn, mesh=mesh,
+    sm = compat.shard_map(fn, mesh=mesh,
                        in_specs=(pspecs, cache_spec, P(dp, None), P()),
                        out_specs=(P(dp, None), cache_spec),
                        check_vma=False)
@@ -188,7 +189,7 @@ def build_prefill(cfg, shape, par, mesh):
     def fn(params, batch):
         return S.prefill_step(params, batch, ctx, cfg, par)
 
-    sm = jax.shard_map(fn, mesh=mesh,
+    sm = compat.shard_map(fn, mesh=mesh,
                        in_specs=(pspecs, bspec),
                        out_specs=(P(dp, None), cache_spec),
                        check_vma=False)
@@ -302,7 +303,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t1
             mem = compiled.memory_analysis()
-            ca = compiled.cost_analysis() or {}
+            ca = compat.cost_analysis(compiled)
             hlo = compiled.as_text()
         result.update({
             "lower_s": round(t_lower, 2),

@@ -166,8 +166,7 @@ def gqa_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         from repro.kernels.flash_attention import flash_attention
         attn = flash_attention(
             q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-            v.transpose(0, 2, 1, 3), causal=True,
-            interpret=jax.default_backend() != "tpu")
+            v.transpose(0, 2, 1, 3), causal=True)
     else:
         attn = blocked_attention(q.transpose(0, 2, 1, 3),
                                  k.transpose(0, 2, 1, 3),
@@ -371,8 +370,7 @@ def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
         from repro.kernels.mla_decode import mla_decode_attention
         ctx_lat = mla_decode_attention(
             q_eff[:, 0], q_rope[:, 0].astype(jnp.float32), c_cache, r_cache,
-            jnp.asarray(pos + 1, jnp.int32), scale=dqk ** -0.5,
-            interpret=jax.default_backend() != "tpu")[:, None]
+            jnp.asarray(pos + 1, jnp.int32), scale=dqk ** -0.5)[:, None]
     else:
         s_max = c_cache.shape[1]
         scores = (jnp.einsum("bohr,bsr->bhos", q_eff,

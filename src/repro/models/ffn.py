@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core import overlap
 from repro.models import layers
@@ -132,7 +133,7 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     ep_axes = ctx.ep_axes or ((ctx.axis,) if ctx.axis else ())
     ep = 1
     for a in ep_axes:
-        ep = ep * lax.axis_size(a)
+        ep = ep * compat.axis_size(a)
     e = mc.num_experts
     e_loc = max(e // ep, 1)
 
@@ -151,7 +152,7 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     me = jnp.mean(probs, axis=0)
     ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], e), axis=0)
     for ax in ((ctx.axis,) if ctx.axis else ()) + tuple(ctx.dp_axes):
-        if lax.axis_size(ax) > 1:
+        if compat.axis_size(ax) > 1:
             me = lax.pmean(me, ax)
             ce = lax.pmean(ce, ax)
     aux = e * jnp.sum(me * ce)
@@ -213,7 +214,7 @@ def _all_to_all_grouped(buf: Array, ep_axes: Tuple[str, ...]) -> Array:
         return lax.all_to_all(buf, ep_axes[0], split_axis=0, concat_axis=0,
                               tiled=True)
     # multi-axis: split dim 0 as (a0, a1, ...) and a2a per axis sequentially
-    sizes = [lax.axis_size(a) for a in ep_axes]
+    sizes = [compat.axis_size(a) for a in ep_axes]
     out = buf
     n = buf.shape[0]
     # reshape [ep, ...] -> [s0, s1, ...rest] and exchange one axis at a time
@@ -236,7 +237,7 @@ def moe_decode(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     ep_axes = ctx.ep_axes or ((ctx.axis,) if ctx.axis else ())
     ep = 1
     for a in ep_axes:
-        ep = ep * lax.axis_size(a)
+        ep = ep * compat.axis_size(a)
     e = mc.num_experts
     e_loc = max(e // ep, 1)
 
@@ -257,7 +258,7 @@ def moe_decode(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     # rank of this device inside the EP group -> which experts are local
     ep_rank = jnp.zeros((), jnp.int32)
     for a in ep_axes:
-        ep_rank = ep_rank * lax.axis_size(a) + lax.axis_index(a)
+        ep_rank = ep_rank * compat.axis_size(a) + lax.axis_index(a)
     e_start = ep_rank * e_loc
 
     flat_e = eidx.reshape(-1)
@@ -294,7 +295,7 @@ def moe_decode(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         my_off = jnp.zeros((), jnp.int32)
         blk = t
         for a in reversed(gather_axes):
-            blk = blk // lax.axis_size(a)
+            blk = blk // compat.axis_size(a)
             my_off = my_off + lax.axis_index(a) * blk
         comb = lax.dynamic_slice_in_dim(comb, my_off, b, axis=0)
     y = comb.reshape(b, 1, dm).astype(x.dtype)

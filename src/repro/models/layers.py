@@ -1,6 +1,7 @@
 """Shared layers: norms, rotary embeddings, embedding / LM-head seams.
 
-Everything here runs INSIDE shard_map with sequence-sharded activations
+Everything here runs INSIDE ``compat.shard_map`` (see ``repro/compat``)
+with sequence-sharded activations
 (Megatron-SP): x is [B, S/TP, D] between blocks.  The vocabulary-parallel
 embedding + LM head are two of the paper's TP seams (the LM head's
 AllGather-GEMM is the single largest GEMM in most of the assigned archs).

@@ -73,7 +73,8 @@ def init_mamba(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16,
 
 
 def _local(p: Dict, name: str, ctx: TPContext, axis: int) -> Array:
-    """Channel-sharded parameters arrive pre-sharded via shard_map specs;
+    """Channel-sharded parameters arrive pre-sharded via ``compat.shard_map``
+    specs;
     helpers below assume they are already local."""
     return p[name]
 

@@ -6,7 +6,8 @@ positions inside a period are python-unrolled (heterogeneous: Jamba's
 mamba/attn interleave, DeepSeek's dense-lead + MoE).
 
 Parameters are GLOBAL arrays; ``param_specs`` returns the matching
-PartitionSpec tree; all forward code runs inside shard_map and sees local
+PartitionSpec tree; all forward code runs inside ``compat.shard_map``
+(the JAX-version-portable wrapper in ``repro/compat``) and sees local
 shards.  ``zero3`` additionally shards big weights over the data axis and
 gathers them per-layer (the paper §2.1's "easily prefetched" AllGather
 pattern — ZeRO-3/FSDP).

@@ -1,6 +1,7 @@
 """Serving paths: prefill (cache-building forward) and single-token decode.
 
-Cache layout is GLOBAL (shard_map slices it): per layer-position trees whose
+Cache layout is GLOBAL (``compat.shard_map`` slices it): per layer-position
+trees whose
 shapes come from ``cache_specs``.  Decode is the paper's vLLM-style TP
 pattern: replicated activations, local-head attention over the sharded KV
 cache, row-parallel output GEMM + AllReduce (the FLUX decode seam).

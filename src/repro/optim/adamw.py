@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 Array = jax.Array
 
 
@@ -81,7 +83,7 @@ def _sharddable(p: Array, n: int) -> bool:
 
 
 def _dp_shard(x: Array, axis: str) -> Array:
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
     if not _sharddable(x, n):
         return x
     sh = x.shape[0] // n
@@ -107,7 +109,7 @@ def pod_allreduce(g: Array, pod_axis: Optional[str],
         return g
     if not compress:
         return lax.pmean(g, pod_axis)
-    n = lax.axis_size(pod_axis)
+    n = compat.axis_size(pod_axis)
     q, scale = _quantize_int8(g)
     qs = lax.all_gather(q, pod_axis)
     ss = lax.all_gather(scale, pod_axis)
@@ -171,7 +173,7 @@ def adamw_update(params: Dict, grads: Dict, opt: Dict, cfg: AdamWConfig,
                  grad_compress: bool = False) -> Tuple[Dict, Dict]:
     dp_rep = dp_replicated_tree(specs)
     model_rep = model_replicated_tree(specs)
-    dp_n = lax.axis_size(dp_axis) if dp_axis is not None else 1
+    dp_n = compat.axis_size(dp_axis) if dp_axis is not None else 1
 
     # ---- phase 1: sync ------------------------------------------------------
     def sync(g, rep):
@@ -195,7 +197,7 @@ def adamw_update(params: Dict, grads: Dict, opt: Dict, cfg: AdamWConfig,
         if rep_dp and dp_n > 1 and not _sharddable(p, dp_n):
             s = s / dp_n
         if rep_m:
-            s = s / lax.axis_size("model")
+            s = s / compat.axis_size("model")
         return s
 
     # note: model-sharded leaves are NOT psum'd over 'model' here; instead

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 Array = jax.Array
 
 
@@ -31,7 +33,7 @@ def pipeline_forward(stage_fn: Callable[[Array, int], Array], x: Array,
     Returns the LAST stage's output (valid on the last stage; callers
     typically psum-select or ppermute it back).
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     stage = lax.axis_index(axis)
     b = x.shape[0]
     assert b % num_microbatches == 0

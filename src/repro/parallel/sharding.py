@@ -1,6 +1,6 @@
 """Parallelism context + helpers threaded through the model code.
 
-All model code runs inside ``jax.shard_map``; ``TPContext`` carries the mesh
+All model code runs inside ``compat.shard_map``; ``TPContext`` carries the mesh
 axis names and the FLUX overlap settings so every TP seam in every
 architecture routes through ``repro.core.overlap``.
 """
@@ -11,6 +11,8 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 from jax import lax
+
+from repro import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,13 +34,13 @@ class TPContext:
 
     @property
     def tp(self) -> int:
-        return 1 if self.axis is None else lax.axis_size(self.axis)
+        return 1 if self.axis is None else compat.axis_size(self.axis)
 
     @property
     def ep(self) -> int:
         n = 1
         for a in self.ep_axes:
-            n *= lax.axis_size(a)
+            n *= compat.axis_size(a)
         return n
 
     def tp_index(self):

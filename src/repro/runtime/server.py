@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import model as M
 from repro.models import serve as S
@@ -70,7 +71,7 @@ class Server:
         def fn(params, caches, tokens, pos):
             return S.decode_step(params, caches, tokens, pos, ctx, cfg, par)
 
-        sm = jax.shard_map(
+        sm = compat.shard_map(
             fn, mesh=self.mesh,
             in_specs=(self.pspecs, self.cache_specs, P(dp_spec, None), P()),
             out_specs=(P(dp_spec, None), self.cache_specs),

@@ -22,6 +22,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.data.pipeline import DataConfig, batch_at
@@ -98,7 +99,7 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
                    "grad_count": opt["count"].astype(jnp.float32)}
         return params, opt, metrics
 
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         step_fn, mesh=mesh,
         in_specs=(param_spec_tree, opt_specs, bspecs, P()),
         out_specs=(param_spec_tree, opt_specs, {"loss": P(), "lr": P(),
@@ -139,9 +140,11 @@ class Trainer:
             shardings = jax.tree.map(
                 lambda s: NamedSharding(self.mesh, s), self.pspecs,
                 is_leaf=lambda x: isinstance(x, P))
-            params = jax.jit(
+            # sharded_init (not jit+out_shardings): init values must not
+            # depend on the mesh layout — see compat.sharded_init.
+            params = compat.sharded_init(
                 functools.partial(M.init_model, cfg=self.cfg, par=self.par),
-                out_shardings=shardings)(jax.random.PRNGKey(self.tc.seed))
+                shardings)(jax.random.PRNGKey(self.tc.seed))
             params_eval = jax.eval_shape(
                 lambda: M.init_model(jax.random.PRNGKey(0), self.cfg, self.par))
             opt_specs = adamw.opt_state_specs(self.pspecs, params_eval,

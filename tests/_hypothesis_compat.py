@@ -1,0 +1,90 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The tier-1 suite must collect and pass on machines without hypothesis
+installed (the CI container does not ship it).  When the real package is
+available we re-export it untouched; otherwise a minimal deterministic
+stand-in runs each ``@given`` test over a fixed-seed sample of the strategy
+space — weaker than real property testing (no shrinking, no coverage-guided
+generation) but it keeps the properties exercised instead of skipped.
+
+Usage in tests::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import random
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A draw rule: ``rng -> value``."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 — mimics the ``hypothesis.strategies`` module
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=8):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elem.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Accepts (and mostly ignores) real-hypothesis knobs like
+        ``deadline``; only ``max_examples`` is honoured."""
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        """Keyword-only ``@given``: runs the test over ``max_examples``
+        deterministic draws (seed 0) per strategy."""
+        def deco(fn):
+            sig = inspect.signature(fn)
+            passthrough = [p for name, p in sig.parameters.items()
+                           if name not in strats]
+
+            def runner(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(getattr(runner, "_max_examples",
+                                       _DEFAULT_MAX_EXAMPLES)):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            # pytest must only see the fixture params, not the drawn ones
+            runner.__signature__ = sig.replace(parameters=passthrough)
+            return runner
+        return deco

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.analysis import jaxpr_cost as JC
@@ -65,6 +65,7 @@ import functools
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.analysis import jaxpr_cost as JC
 
 mesh = Mesh(np.array(jax.devices()).reshape(1, 4), ("data", "model"))
@@ -74,7 +75,7 @@ def f(x):
     z = jax.lax.psum(y, "model")                             # operand 128*16*4
     return jax.lax.psum_scatter(z, "model", scatter_dimension=0, tiled=True)
 
-sm = jax.shard_map(f, mesh=mesh, in_specs=P("model", None),
+sm = shard_map(f, mesh=mesh, in_specs=P("model", None),
                    out_specs=P("model", None), check_vma=False)
 x = jax.ShapeDtypeStruct((128, 16), jnp.float32)
 jaxpr = jax.make_jaxpr(jax.jit(sm))(x)

@@ -9,6 +9,7 @@ import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, ParallelConfig, get_smoke_config
+from repro.compat import shard_map
 from repro.models import model as M
 from repro.models import serve as S
 from repro.optim import adamw
@@ -48,7 +49,7 @@ def test_forward_smoke(arch):
     batch = _batch(cfg, key)
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(specs, _bspecs(cfg)), out_specs=P(),
                        check_vma=False)
     def loss_fn(p, b):
@@ -102,7 +103,7 @@ def test_decode_step_smoke(arch):
     pspecs = M.param_specs(cfg, par, params)
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(pspecs, cache_spec, P("data", None), P()),
                        out_specs=(P("data", None), cache_spec),
                        check_vma=False)
@@ -134,7 +135,7 @@ def test_prefill_matches_decode(arch):
     cache_sds, cache_spec = S.cache_specs(cfg, par, b, s, dp_axes=("data",))
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(pspecs, {"tokens": P("data", None)}),
                        out_specs=(P("data", None), cache_spec),
                        check_vma=False)
@@ -142,7 +143,7 @@ def test_prefill_matches_decode(arch):
         return S.prefill_step(p, batch, ctx, cfg, par)
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(pspecs, cache_spec, P("data", None), P()),
                        out_specs=(P("data", None), cache_spec),
                        check_vma=False)

@@ -59,6 +59,7 @@ import functools
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.kernels import ops as kops
 
 mesh = Mesh(np.array(jax.devices()), ("tp",))
@@ -71,7 +72,7 @@ for (M, K, N, dtype, reverse) in [
     B = jax.random.normal(jax.random.PRNGKey(1), (K, N), dtype)
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P("tp", None), P(None, "tp")),
                        out_specs=P(None, "tp"), check_vma=False)
     def ag(a, b):
@@ -84,7 +85,7 @@ for (M, K, N, dtype, reverse) in [
     assert err < tol, ("ag", M, K, N, dtype, err)
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(None, "tp"), P("tp", None)),
                        out_specs=P("tp", None), check_vma=False)
     def rs(a, b):

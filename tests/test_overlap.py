@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import overlap
 
@@ -65,6 +65,7 @@ import functools
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.core import overlap
 
 mesh = Mesh(np.array(jax.devices()), ("model",))
@@ -75,7 +76,7 @@ w2 = jax.random.normal(jax.random.PRNGKey(2), (F, D)) / F**0.5
 
 def seam(mode, chunks=0):
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(None, "model", None), P(None, "model"),
                                  P("model", None)),
                        out_specs=P(None, "model", None), check_vma=False)
@@ -94,7 +95,7 @@ for mode, chunks in [("decomposed", 0), ("decomposed", 8), ("decomposed", 16),
 
 # gradients
 def loss(mode):
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(None, "model", None), P(None, "model"),
                                  P("model", None)),
                        out_specs=P(), check_vma=False)
@@ -115,13 +116,13 @@ for mode in ["decomposed", "flux"]:
 # matmul_ar (decode seam)
 y = jax.random.normal(jax.random.PRNGKey(3), (B, 4, F))
 @jax.jit
-@functools.partial(jax.shard_map, mesh=mesh,
+@functools.partial(shard_map, mesh=mesh,
                    in_specs=(P(None, None, "model"), P("model", None)),
                    out_specs=P(None, None, None), check_vma=False)
 def ar_dec(ys, ws):
     return overlap.matmul_ar(ys, ws, "model", "decomposed")
 @jax.jit
-@functools.partial(jax.shard_map, mesh=mesh,
+@functools.partial(shard_map, mesh=mesh,
                    in_specs=(P(None, None, "model"), P("model", None)),
                    out_specs=P(None, None, None), check_vma=False)
 def ar_ref(ys, ws):
@@ -142,6 +143,7 @@ import functools
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.core import overlap
 
 mesh = Mesh(np.array(jax.devices()), ("model",))
@@ -151,7 +153,7 @@ w = jax.random.normal(jax.random.PRNGKey(1), (D, F)) / D**0.5
 
 def run(mode):
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(None, "model", None), P(None, "model")),
                        out_specs=P(None, None, "model"), check_vma=False)
     def f(xs, ws):
@@ -178,6 +180,7 @@ import functools
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.core import overlap
 
 mesh = Mesh(np.array(jax.devices()), ("model",))
@@ -188,7 +191,7 @@ w2 = jax.random.normal(jax.random.PRNGKey(2), (F, D)) / F**0.5
 
 def seam(mode):
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(None, "model", None), P(None, "model"),
                                  P("model", None)),
                        out_specs=P(None, "model", None), check_vma=False)

@@ -7,6 +7,7 @@ import functools
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.parallel.pipeline import pipeline_forward, bubble_fraction
 
 P_STAGES = 4
@@ -17,7 +18,7 @@ x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
 w = jax.random.normal(jax.random.PRNGKey(1), (P_STAGES, D, D)) * 0.3
 
 @jax.jit
-@functools.partial(jax.shard_map, mesh=mesh,
+@functools.partial(shard_map, mesh=mesh,
                    in_specs=(P(None, None, None), P("pod", None, None)),
                    out_specs=P(None, None, None), check_vma=False)
 def piped(xx, ww):

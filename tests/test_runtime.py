@@ -8,10 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.compat import shard_map
 from repro.configs.base import ParallelConfig, get_smoke_config
 from repro.data.pipeline import DataConfig, DataStream, batch_at
 from repro.optim import adamw, schedule
@@ -188,7 +189,7 @@ def test_adamw_single_device_matches_reference():
     cfg = adamw.AdamWConfig(lr=1e-1, weight_decay=0.0, grad_clip=1e9)
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(specs, specs,
                                  {"mu": specs, "nu": specs, "count": P()}),
                        out_specs=(specs,

@@ -8,6 +8,7 @@ import dataclasses, functools
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 from repro.configs.base import get_smoke_config, ParallelConfig
 from repro.models import model as M
 from repro.parallel.sharding import TPContext
@@ -47,7 +48,7 @@ def run(tp, mode):
         bs = {"tokens": P("data", None), "labels": P("data", None)}
 
     @jax.jit
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(specs, bs),
+    @functools.partial(shard_map, mesh=mesh, in_specs=(specs, bs),
                        out_specs=P(), check_vma=False)
     def loss_fn(p, b):
         return jax.lax.pmean(M.forward_loss(p, b, ctx, cfg, par), ("data",))
