@@ -1,12 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 gate: compat grep-lint + full correctness suite.
 #
-# Usage:  scripts/verify.sh [extra pytest args]
+# Usage:  scripts/verify.sh [--fast] [extra pytest args]
+#
+#   --fast   skip the multi-device subprocess sweeps (tests marked
+#            ``multidev`` — everything that spawns a fresh python with
+#            forced host devices).  Quick iteration tier; the FULL suite
+#            remains the default and the PR gate.
 #
 # Runs on CPU CI machines (no TPU): kernels execute in Pallas interpret mode
 # (REPRO_PALLAS_INTERPRET=1).  Every PR must pass this before review.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+FAST=0
+if [[ "${1:-}" == "--fast" ]]; then
+  FAST=1
+  shift
+fi
 
 export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -22,4 +33,8 @@ fi
 echo "ok"
 
 echo "== tier-1 test suite =="
-python -m pytest -x -q "$@"
+if [[ "$FAST" == 1 ]]; then
+  python -m pytest -x -q -m "not multidev" "$@"
+else
+  python -m pytest -x -q "$@"
+fi

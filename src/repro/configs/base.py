@@ -131,8 +131,10 @@ class ParallelConfig:
     zero3: bool = False              # FSDP-style param gather per layer
     pp: int = 1                      # pipeline stages (reinterprets pod axis)
     remat: str = "none"              # none | selective | full
-    overlap_mode: str = "decomposed" # xla | decomposed | flux
+    overlap_mode: str = "decomposed" # default seam mode (overlap.VALID_MODES)
     comm_chunks: int = 0             # 0 -> auto (=tp); medium-grained chunking
+    plan_profile: Optional[str] = None  # tuned per-seam profile JSON
+    #                                  (repro.tuning; stale files are ignored)
     grad_compress: bool = False      # int8 cross-pod gradient all-reduce
     seq_shard_attn: bool = False     # shard sequence (ring attn) when heads don't divide
     fuse_w13: bool = False           # fuse parallel input projections (w1|w3,

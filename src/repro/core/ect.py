@@ -86,6 +86,11 @@ def model_collective_time(shard_bytes: float, n_dev: int,
     return mult * (n_dev - 1) * shard_bytes / (ICI_BW * links)
 
 
+# int8 gather payload relative to bf16: 1 byte/elt + one fp32 scale per
+# 128-block (ZeRO++-style; see overlap._Q8_BLOCK)
+_Q8_BYTES_FACTOR = (1.0 + 4.0 / 128.0) / 2.0
+
+
 def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
                   mode: str, dtype_bytes: int = 2,
                   comm_chunks: int = 0) -> Dict[str, float]:
@@ -93,25 +98,41 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
 
     seam="ag": C = AllGather_m(A[m/n,k]) @ B[k,n/n]   (per-device n_local=n/n_dev)
     seam="rs": C = RS_m(A[m,k/n] @ B[k/n,n])
-    Returns dict(overall, gemm, comm, exposed).
+    seam="ar": C = AllReduce(A[m,k/n] @ B[k/n,n])     (decode row-parallel)
+    Modes: the ``overlap.VALID_MODES`` set — ``*_q8`` scales the AG payload
+    by the int8+scales factor, ``decomposed_bidir`` rides both full-duplex
+    link directions (2 links).  Returns dict(overall, gemm, comm, exposed).
     """
+    base = mode[:-3] if mode.endswith("_q8") else mode
+    links = 2 if mode == "decomposed_bidir" else 1
+    if base == "decomposed_bidir":
+        base = "decomposed"
     if seam == "ag":
         gemm = model_gemm_time(m, n // n_dev, k, dtype_bytes)
         comm_bytes = (m // n_dev) * k * dtype_bytes
-        comm = model_collective_time(comm_bytes, n_dev, "ag")
-    else:
+        if mode.endswith("_q8"):          # int8 payload rides the gather
+            comm_bytes *= _Q8_BYTES_FACTOR
+        comm = model_collective_time(comm_bytes, n_dev, "ag", links=links)
+    elif seam == "rs":
         gemm = model_gemm_time(m, n, k // n_dev, dtype_bytes)
         comm_bytes = (m // n_dev) * n * dtype_bytes
-        comm = model_collective_time(comm_bytes, n_dev, "rs")
+        comm = model_collective_time(comm_bytes, n_dev, "rs", links=links)
+    else:                                 # ar: full [m, n] output all-reduced
+        gemm = model_gemm_time(m, n, k // n_dev, dtype_bytes)
+        comm_bytes = m * n * dtype_bytes
+        comm = model_collective_time(comm_bytes, n_dev, "ar", links=links)
 
     launch_overhead = 5e-6          # per extra kernel launch (GPU-ish; the
     #                                 paper's "scheduling overheads" §2.2)
-    if mode == "xla":               # serial: collective fully exposed
+    if base == "xla":               # serial: collective fully exposed
         overall = gemm + comm
-    elif mode == "decomposed":      # medium-grained: per-chunk pipeline with
-        # split-GEMM inefficiency (chunk rows = m/chunks) + launch overheads
+    elif base == "decomposed":      # medium-grained: per-chunk pipeline with
+        # split-GEMM inefficiency (chunk rows = m/chunks) + launch overheads.
+        # AR chunks the CONTRACTION dim (m stays whole — see
+        # overlap._matmul_ar_decomposed), so it pays no m-split penalty.
         chunks = max(comm_chunks or n_dev, 1)
-        penalty = gemm_efficiency(m) / gemm_efficiency(max(m // chunks, 1))
+        penalty = (1.0 if seam == "ar" else
+                   gemm_efficiency(m) / gemm_efficiency(max(m // chunks, 1)))
         g = gemm * penalty + launch_overhead * chunks
         if seam == "rs":
             # the inter-chunk adds serialize the split GEMMs (paper §2.2

@@ -81,10 +81,12 @@ def _ring_perm(axis: str, reverse: bool = False):
     return [(i, (i + 1) % n) for i in range(n)]
 
 
-def _ag_matmul_decomposed(x: Array, w: Array, axis: str, comm_chunks: int) -> Array:
+def _ag_matmul_decomposed(x: Array, w: Array, axis: str, comm_chunks: int,
+                          reverse: bool = False) -> Array:
     """AllGather-GEMM as a ring of shard hops, each hop's GEMM issued as soon
     as its shard lands.  ``comm_chunks`` sub-divides each shard so the ring
-    moves smaller messages (finer overlap granularity, more hops)."""
+    moves smaller messages (finer overlap granularity, more hops);
+    ``reverse`` flips the ring direction (the paper's pull/push knob)."""
     n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     s_shard = x.shape[-2]
@@ -103,19 +105,22 @@ def _ag_matmul_decomposed(x: Array, w: Array, axis: str, comm_chunks: int) -> Ar
         for j, b in enumerate(bufs):
             out_chunks.append((step, j, jnp.einsum("...sd,df->...sf", b, w)))
         if step < n - 1:
-            bufs = [lax.ppermute(b, axis, _ring_perm(axis)) for b in bufs]
+            bufs = [lax.ppermute(b, axis, _ring_perm(axis, reverse))
+                    for b in bufs]
 
-    # Assemble: at step k we held the shard of rank (me - k) mod n.
+    # Assemble: at step k we held the shard of rank (me -+ k) mod n
+    # (forward ring receives from the left neighbor, reverse from the right).
     sub_len = s_shard // sub
     y = jnp.zeros((*x.shape[:-2], s_shard * n, w.shape[-1]), out_chunks[0][2].dtype)
     for step, j, chunk in out_chunks:
-        owner = (me - step) % n
+        owner = (me + step) % n if reverse else (me - step) % n
         start = owner * s_shard + j * sub_len
         y = lax.dynamic_update_slice_in_dim(y, chunk, start, axis=y.ndim - 2)
     return y
 
 
-def _matmul_rs_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Array:
+def _matmul_rs_decomposed(y: Array, w: Array, axis: str, comm_chunks: int,
+                          reverse: bool = False) -> Array:
     """GEMM-ReduceScatter ring: at step s each device computes ONLY the output
     chunk that the ring needs next, adds the partial arriving from its left
     neighbor, and forwards.  The chunk GEMMs interleave with the hops (paper
@@ -131,13 +136,17 @@ def _matmul_rs_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Ar
         return jnp.einsum("...sf,fd->...sd", ys, w)
 
     # Ring reduce-scatter: the buffer created by device d at step 0 is for
-    # owner (d + n-1); after each rightward hop the holder adds its own
-    # partial for that owner: c(d, s) = (d + n-1 - s) mod n.  After n-1 hops
-    # the buffer for owner X lands on device X with all n partials summed.
-    acc = chunk_partial((me + n - 1) % n)
+    # owner (d + n-1) (forward) / (d - (n-1)) (reverse); after each hop the
+    # holder adds its own partial for that owner.  After n-1 hops the buffer
+    # for owner X lands on device X with all n partials summed.
+    def owner_at(s):
+        return ((me - (n - 1 - s)) % n if reverse
+                else (me + n - 1 - s) % n)
+
+    acc = chunk_partial(owner_at(0))
     for s in range(1, n):
-        acc = lax.ppermute(acc, axis, _ring_perm(axis))
-        acc = acc + chunk_partial((me + n - 1 - s) % n)
+        acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
+        acc = acc + chunk_partial(owner_at(s))
     return acc
 
 
@@ -241,19 +250,61 @@ def _q8_decode(q: Array, scale: Array, dtype) -> Array:
     return (xb * scale[..., None]).reshape(*q.shape).astype(dtype)
 
 
-def _ag_matmul_q8(x: Array, w: Array, axis: str, base: str,
-                  comm_chunks: int) -> Array:
-    q, s = _q8_encode(x)
-    qf = lax.all_gather(q, axis, axis=q.ndim - 2, tiled=True)
-    sf = lax.all_gather(s, axis, axis=s.ndim - 2, tiled=True)
-    full = _q8_decode(qf, sf, x.dtype)
-    return jnp.einsum("...sd,df->...sf", full, w)
+def _ag_matmul_q8(x: Array, w: Array, axis: str, base: str, comm_chunks: int,
+                  reverse: bool = False) -> Array:
+    """Int8-gathered AG-GEMM.  ``base`` selects the transport: ``xla`` issues
+    one monolithic all_gather of the quantized payload; ``decomposed`` rides
+    the chunked ppermute ring so the per-hop dequant+GEMMs overlap with the
+    hops exactly like the fp ring (the int8 payload additionally halves the
+    ring bytes)."""
+    q, sc = _q8_encode(x)
+    if base != "decomposed":
+        qf = lax.all_gather(q, axis, axis=q.ndim - 2, tiled=True)
+        sf = lax.all_gather(sc, axis, axis=sc.ndim - 2, tiled=True)
+        full = _q8_decode(qf, sf, x.dtype)
+        return jnp.einsum("...sd,df->...sf", full, w)
+
+    n = compat.axis_size(axis)
+    me = lax.axis_index(axis)
+    s_shard = x.shape[-2]
+    sub = max(1, comm_chunks // n) if comm_chunks else 1
+    sub = min(sub, s_shard)
+    while s_shard % sub:
+        sub -= 1
+    q_pieces = jnp.split(q, sub, axis=-2) if sub > 1 else [q]
+    s_pieces = jnp.split(sc, sub, axis=-2) if sub > 1 else [sc]
+
+    sub_len = s_shard // sub
+    y = jnp.zeros((*x.shape[:-2], s_shard * n, w.shape[-1]),
+                  jnp.result_type(x.dtype, w.dtype))
+    bufs = list(zip(q_pieces, s_pieces))
+    for step in range(n):
+        owner = (me + step) % n if reverse else (me - step) % n
+        for j, (bq, bs) in enumerate(bufs):
+            piece = _q8_decode(bq, bs, x.dtype)
+            chunk = jnp.einsum("...sd,df->...sf", piece, w)
+            start = owner * s_shard + j * sub_len
+            y = lax.dynamic_update_slice_in_dim(y, chunk, start,
+                                                axis=y.ndim - 2)
+        if step < n - 1:
+            bufs = [(lax.ppermute(bq, axis, _ring_perm(axis, reverse)),
+                     lax.ppermute(bs, axis, _ring_perm(axis, reverse)))
+                    for bq, bs in bufs]
+    return y
 
 
 # ---------------------------------------------------------------------------
 # mode="flux": fused Pallas kernels (see repro/kernels/)
 # ---------------------------------------------------------------------------
-def _ag_matmul_flux(x: Array, w: Array, axis: str) -> Array:
+def _blocks_kw(blocks) -> dict:
+    if blocks is None:
+        return {}
+    bm, bk, bn = blocks
+    return {"bm": bm, "bk": bk, "bn": bn}
+
+
+def _ag_matmul_flux(x: Array, w: Array, axis: str, reverse: bool = False,
+                    blocks=None) -> Array:
     from repro.kernels import ops as kops
     # Kernels operate on [m_shard, k] @ [k, n] 2-D operands and gather along
     # m in SHARD-MAJOR order.  Move the (sharded) sequence dim to the front so
@@ -262,18 +313,21 @@ def _ag_matmul_flux(x: Array, w: Array, axis: str) -> Array:
     lead = x.shape[:-2]
     xt = jnp.moveaxis(x, -2, 0)                        # [S/N, *lead, D]
     x2 = xt.reshape((-1, x.shape[-1]))                 # [(S/N)*B_flat, D]
-    y2 = kops.ag_matmul_fused(x2, w, axis_name=axis)   # [S*B_flat, F/N]
+    y2 = kops.ag_matmul_fused(x2, w, axis_name=axis, reverse=reverse,
+                              **_blocks_kw(blocks))    # [S*B_flat, F/N]
     yt = y2.reshape((x.shape[-2] * n, *lead, w.shape[-1]))
     return jnp.moveaxis(yt, 0, -2)                     # [*lead, S, F/N]
 
 
-def _matmul_rs_flux(y: Array, w: Array, axis: str) -> Array:
+def _matmul_rs_flux(y: Array, w: Array, axis: str, reverse: bool = False,
+                    blocks=None) -> Array:
     from repro.kernels import ops as kops
     n = _axis_size(axis)
     lead = y.shape[:-2]
     yt = jnp.moveaxis(y, -2, 0)                        # [S, *lead, F/N]
     y2 = yt.reshape((-1, y.shape[-1]))
-    o2 = kops.matmul_rs_fused(y2, w, axis_name=axis)   # [S/N * B_flat, D]
+    o2 = kops.matmul_rs_fused(y2, w, axis_name=axis, reverse=reverse,
+                              **_blocks_kw(blocks))    # [S/N * B_flat, D]
     ot = o2.reshape((y.shape[-2] // n, *lead, w.shape[-1]))
     return jnp.moveaxis(ot, 0, -2)                     # [*lead, S/N, D]
 
@@ -281,11 +335,15 @@ def _matmul_rs_flux(y: Array, w: Array, axis: str) -> Array:
 # ---------------------------------------------------------------------------
 # Public, differentiable API
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
 def ag_matmul(x: Array, w: Array, axis: Optional[str] = None,
-              mode: str = "decomposed", comm_chunks: int = 0) -> Array:
-    """(AllGather along seq) @ w, overlapped per ``mode``."""
-    return _ag_matmul_impl(x, w, axis, mode, comm_chunks)
+              mode: str = "decomposed", comm_chunks: int = 0,
+              reverse: bool = False,
+              blocks: Optional[Tuple[int, int, int]] = None) -> Array:
+    """(AllGather along seq) @ w, overlapped per ``mode``.  ``reverse`` flips
+    the ring direction (pull/push analogue); ``blocks`` overrides the fused
+    kernel's (bm, bk, bn) tile preference (None -> auto)."""
+    return _ag_matmul_impl(x, w, axis, mode, comm_chunks, reverse, blocks)
 
 
 def _flux_available() -> bool:
@@ -297,7 +355,8 @@ def _flux_available() -> bool:
     return compat.fused_collective_kernels_composable()
 
 
-def _ag_matmul_impl(x, w, axis, mode, comm_chunks):
+def _ag_matmul_impl(x, w, axis, mode, comm_chunks, reverse=False,
+                    blocks=None):
     assert mode in VALID_MODES, mode
     if axis is None or _axis_size(axis) == 1:
         return jnp.einsum("...sd,df->...sf", x, w)
@@ -305,23 +364,25 @@ def _ag_matmul_impl(x, w, axis, mode, comm_chunks):
         return _ag_matmul_xla(x, w, axis)
     if mode == "flux":
         if _flux_available():
-            return _ag_matmul_flux(x, w, axis)
-        return _ag_matmul_decomposed(x, w, axis, comm_chunks)
+            return _ag_matmul_flux(x, w, axis, reverse, blocks)
+        return _ag_matmul_decomposed(x, w, axis, comm_chunks, reverse)
     if mode.endswith("_q8"):
-        return _ag_matmul_q8(x, w, axis, mode[:-3], comm_chunks)
+        return _ag_matmul_q8(x, w, axis, mode[:-3], comm_chunks, reverse)
     if mode == "decomposed_bidir":
         return _ag_matmul_bidir(x, w, axis, comm_chunks)
-    return _ag_matmul_decomposed(x, w, axis, comm_chunks)
+    return _ag_matmul_decomposed(x, w, axis, comm_chunks, reverse)
 
 
-def _ag_matmul_fwd(x, w, axis, mode, comm_chunks):
-    return _ag_matmul_impl(x, w, axis, mode, comm_chunks), (x, w)
+def _ag_matmul_fwd(x, w, axis, mode, comm_chunks, reverse, blocks):
+    return _ag_matmul_impl(x, w, axis, mode, comm_chunks, reverse,
+                           blocks), (x, w)
 
 
-def _ag_matmul_bwd(axis, mode, comm_chunks, res, g):
+def _ag_matmul_bwd(axis, mode, comm_chunks, reverse, blocks, res, g):
     x, w = res
-    # dX: GEMM + ReduceScatter — the interchanged overlapped op.
-    dx = _matmul_rs_impl(g, w.T, axis, mode, comm_chunks)
+    # dX: GEMM + ReduceScatter — the interchanged overlapped op (blocks are
+    # tuned for the forward shape; let the transposed op auto-plan its own).
+    dx = _matmul_rs_impl(g, w.T, axis, mode, comm_chunks, reverse)
     # dW: contraction over gathered tokens (the re-gather is unavoidable —
     # a "sequence-partial + psum" variant was tried and REFUTED: each
     # device's g covers different weight columns, so shard-partials cannot
@@ -337,14 +398,17 @@ def _ag_matmul_bwd(axis, mode, comm_chunks, res, g):
 ag_matmul.defvjp(_ag_matmul_fwd, _ag_matmul_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
 def matmul_rs(y: Array, w: Array, axis: Optional[str] = None,
-              mode: str = "decomposed", comm_chunks: int = 0) -> Array:
+              mode: str = "decomposed", comm_chunks: int = 0,
+              reverse: bool = False,
+              blocks: Optional[Tuple[int, int, int]] = None) -> Array:
     """ReduceScatter_seq(y @ w), overlapped per ``mode``."""
-    return _matmul_rs_impl(y, w, axis, mode, comm_chunks)
+    return _matmul_rs_impl(y, w, axis, mode, comm_chunks, reverse, blocks)
 
 
-def _matmul_rs_impl(y, w, axis, mode, comm_chunks):
+def _matmul_rs_impl(y, w, axis, mode, comm_chunks, reverse=False,
+                    blocks=None):
     assert mode in VALID_MODES, mode
     if mode.endswith("_q8"):
         mode = mode[:-3]     # RS partials keep full precision (they SUM)
@@ -354,21 +418,22 @@ def _matmul_rs_impl(y, w, axis, mode, comm_chunks):
         return _matmul_rs_xla(y, w, axis)
     if mode == "flux":
         if _flux_available():
-            return _matmul_rs_flux(y, w, axis)
-        return _matmul_rs_decomposed(y, w, axis, comm_chunks)
+            return _matmul_rs_flux(y, w, axis, reverse, blocks)
+        return _matmul_rs_decomposed(y, w, axis, comm_chunks, reverse)
     if mode == "decomposed_bidir":
         return _matmul_rs_bidir(y, w, axis, comm_chunks)
-    return _matmul_rs_decomposed(y, w, axis, comm_chunks)
+    return _matmul_rs_decomposed(y, w, axis, comm_chunks, reverse)
 
 
-def _matmul_rs_fwd(y, w, axis, mode, comm_chunks):
-    return _matmul_rs_impl(y, w, axis, mode, comm_chunks), (y, w)
+def _matmul_rs_fwd(y, w, axis, mode, comm_chunks, reverse, blocks):
+    return _matmul_rs_impl(y, w, axis, mode, comm_chunks, reverse,
+                           blocks), (y, w)
 
 
-def _matmul_rs_bwd(axis, mode, comm_chunks, res, g):
+def _matmul_rs_bwd(axis, mode, comm_chunks, reverse, blocks, res, g):
     y, w = res
     # dY: AllGather + GEMM — interchanged overlapped op.
-    dy = _ag_matmul_impl(g, w.T, axis, mode, comm_chunks)
+    dy = _ag_matmul_impl(g, w.T, axis, mode, comm_chunks, reverse)
     if axis is None or _axis_size(axis) == 1:
         gf = g
     else:

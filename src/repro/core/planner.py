@@ -3,20 +3,23 @@
 FLUX tunes CUTLASS template parameters, pull/push, and communication tile
 size per (GEMM shape, dtype, GPU arch, interconnect).  Our knobs:
 
-  - mode          : xla | decomposed | flux
+  - mode          : overlap.VALID_MODES (xla | decomposed | flux | *_q8 |
+                    decomposed_bidir)
   - comm_chunks   : ring sub-chunking (paper §4.3 "communication tile size")
   - ring reverse  : ring direction (paper's pull/push analogue)
   - (bm, bk, bn)  : MXU block shape — never a function of N_TP (paper §4.4:
                     "regular tiling of GEMM in Flux is not bound to the
                     number of tensor parallelism")
 
-Tuning is analytic-first (napkin-math roofline via core.ect.model_overlap),
-optionally refined by measurement on real hardware (measure=True).
+Tuning is analytic-first (napkin-math roofline via core.ect.model_overlap);
+``measure=True`` delegates to the measured sweep in ``repro.tuning.autotune``
+(timed jit runs on the real devices).  The richer subsystem — candidate
+spaces over the full mode set, persistent JSON profiles, per-seam PlanSets —
+lives in ``repro.tuning``; this module remains the lightweight analytic core.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Dict, Optional, Tuple
 
 from repro.core import ect
@@ -30,6 +33,8 @@ class Plan:
     blocks: Tuple[int, int, int]
     predicted_overall_s: float
     predicted_overlap_eff: float
+    measured_s: float = 0.0
+    source: str = "analytic"         # analytic | measured
 
 
 _CACHE: Dict[tuple, Plan] = {}
@@ -37,11 +42,48 @@ _CACHE: Dict[tuple, Plan] = {}
 
 def plan_seam(seam: str, m: int, n: int, k: int, n_dev: int,
               dtype_bytes: int = 2, allow_flux: bool = True,
-              measure: bool = False) -> Plan:
-    """Pick the best strategy for one TP seam."""
-    key = (seam, m, n, k, n_dev, dtype_bytes, allow_flux)
+              measure: bool = False,
+              reverse: Optional[bool] = None) -> Plan:
+    """Pick the best strategy for one TP seam.
+
+    ``reverse`` pins the ring direction (None lets the tuner choose; the
+    analytic roofline is direction-symmetric on a torus so it keeps the
+    pinned value or False).  The cache is keyed by ring direction too — a
+    plan tuned for one direction must never answer for the other.
+    """
+    key = (seam, m, n, k, n_dev, dtype_bytes, allow_flux, bool(measure),
+           reverse)
     if key in _CACHE:
         return _CACHE[key]
+
+    if measure:
+        from repro.tuning import autotune
+        # q8 modes are lossy: never auto-selected here (opt in via
+        # autotune.tune_seam(allow_q8=True) directly)
+        res = autotune.tune_seam(seam, m, n, k, n_dev,
+                                 dtype_bytes=dtype_bytes,
+                                 allow_flux=allow_flux, allow_q8=False,
+                                 measure=True)
+        sp = res.plan
+        if reverse is not None and sp.reverse != reverse:
+            # pinned direction: keep the best candidate matching it
+            rows = [r for r in res.table if r["reverse"] == reverse]
+            if rows:
+                best = min(rows, key=lambda r: r["measured_s"])
+                sp = dataclasses.replace(
+                    sp, mode=best["mode"], comm_chunks=best["comm_chunks"],
+                    reverse=best["reverse"],
+                    blocks=(tuple(best["blocks"]) if best["blocks"]
+                            else sp.blocks),
+                    measured_s=best["measured_s"],
+                    predicted_s=best["predicted_s"])
+        plan = Plan(mode=sp.mode, comm_chunks=sp.comm_chunks,
+                    reverse=sp.reverse, blocks=tuple(sp.blocks),
+                    predicted_overall_s=sp.predicted_s,
+                    predicted_overlap_eff=0.0,
+                    measured_s=sp.measured_s, source="measured")
+        _CACHE[key] = plan
+        return plan
 
     candidates = []
     modes = ["xla", "decomposed"] + (["flux"] if allow_flux else [])
@@ -61,8 +103,8 @@ def plan_seam(seam: str, m: int, n: int, k: int, n_dev: int,
     else:
         blocks = plan_blocks(max(m // n_dev, 1), max(k // n_dev, 1), n)
 
-    plan = Plan(mode=mode, comm_chunks=chunks, reverse=False, blocks=blocks,
-                predicted_overall_s=overall,
+    plan = Plan(mode=mode, comm_chunks=chunks, reverse=bool(reverse),
+                blocks=blocks, predicted_overall_s=overall,
                 predicted_overlap_eff=est["overlap_eff"])
     _CACHE[key] = plan
     return plan

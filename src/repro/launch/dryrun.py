@@ -85,13 +85,15 @@ BF16_MOMENT_ARCHS = {"deepseek_v3_671b"}
 
 
 def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False,
-                overlap_mode: str = "decomposed", opt: str = ""):
+                overlap_mode: str = "decomposed", opt: str = "",
+                plan_profile: str = None):
     """Public entry: (cfg, shape, par, mesh) for a cell."""
     import dataclasses as _dc
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     par = production_parallel(cfg, multi_pod=multi_pod, kind=shape.kind,
-                              overlap_mode=overlap_mode)
+                              overlap_mode=overlap_mode,
+                              plan_profile=plan_profile)
     for name in [o for o in opt.split("+") if o]:
         par = _dc.replace(par, **OPT_SETS[name])
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -221,7 +223,8 @@ def reanalyze_cell(path: str) -> None:
         result["arch"], result["shape"],
         multi_pod=result["mesh"] != "pod16x16",
         overlap_mode=result.get("overlap_mode", "decomposed"),
-        opt=result.get("opt", ""))
+        opt=result.get("opt", ""),
+        plan_profile=result.get("plan_profile") or None)
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     with mesh:
         fnw, argsw = BUILDERS[shape.kind](cfg, shape, par, mesh)
@@ -262,6 +265,7 @@ def reanalyze_cell(path: str) -> None:
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              overlap_mode: str = "decomposed", force: bool = False,
              out_dir: Optional[str] = None, opt: str = "",
+             plan_profile: str = None,
              extra_tag: str = "") -> Dict[str, Any]:
     out_dir = out_dir or OUT_DIR
     os.makedirs(out_dir, exist_ok=True)
@@ -280,10 +284,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     cfg, shape, par, mesh = input_specs(arch, shape_name,
                                         multi_pod=multi_pod,
-                                        overlap_mode=overlap_mode, opt=opt)
+                                        overlap_mode=overlap_mode, opt=opt,
+                                        plan_profile=plan_profile)
     result: Dict[str, Any] = {
         "arch": arch, "shape": shape_name, "mesh": mesh_tag,
         "overlap_mode": overlap_mode, "kind": shape.kind, "opt": opt,
+        "plan_profile": plan_profile or "",
         "chips": int(np.prod(mesh.devices.shape)),
     }
     if not shape_applicable(cfg, shape):
@@ -383,6 +389,8 @@ def main() -> None:
                     choices=["xla", "decomposed", "flux", "xla_q8",
                              "decomposed_q8", "decomposed_bidir"])
     ap.add_argument("--opt", default="", help="named opt set(s), '+'-joined")
+    ap.add_argument("--plan-profile", default=None,
+                    help="tuned per-seam plan JSON (repro.tuning)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--reanalyze", action="store_true",
                     help="retrace + refresh analyzer fields of cached cells "
@@ -413,7 +421,8 @@ def main() -> None:
         tag = f"{'2x16x16' if mp else '16x16'} {a} {s}"
         try:
             r = run_cell(a, s, multi_pod=mp, overlap_mode=args.mode,
-                         opt=args.opt, force=args.force)
+                         opt=args.opt, plan_profile=args.plan_profile,
+                         force=args.force)
             if "skipped" in r:
                 print(f"[skip] {tag}: {r['skipped']}")
             elif "error" in r:

@@ -8,8 +8,11 @@ from repro.configs.base import ModelConfig, ParallelConfig
 
 def production_parallel(cfg: ModelConfig, *, multi_pod: bool = False,
                         kind: str = "train",
-                        overlap_mode: str = "decomposed") -> ParallelConfig:
-    """ParallelConfig for the (2,)16x16 meshes, sized per arch family."""
+                        overlap_mode: str = "decomposed",
+                        plan_profile: str = None) -> ParallelConfig:
+    """ParallelConfig for the (2,)16x16 meshes, sized per arch family.
+    ``plan_profile`` points at a tuned per-seam plan JSON (repro.tuning);
+    stale or mesh-mismatched profiles fall back to ``overlap_mode``."""
     pods = 2 if multi_pod else 1
     big = cfg.name in ("deepseek_v3_671b", "qwen15_110b", "qwen2_vl_72b",
                        "gpt3_175b", "llama4_scout_17b_a16e", "jamba_v01_52b")
@@ -24,5 +27,6 @@ def production_parallel(cfg: ModelConfig, *, multi_pod: bool = False,
         zero3=zero3,
         remat=remat,
         overlap_mode=overlap_mode,
+        plan_profile=plan_profile,
         grad_compress=multi_pod,        # compress the slow cross-pod hop
     )

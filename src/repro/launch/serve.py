@@ -23,13 +23,16 @@ def main() -> None:
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--mode", default="decomposed")
+    ap.add_argument("--plan-profile", default=None,
+                    help="tuned per-seam profile JSON (repro.tuning)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    par = ParallelConfig(tp=args.tp, dp=args.dp, overlap_mode=args.mode)
+    par = ParallelConfig(tp=args.tp, dp=args.dp, overlap_mode=args.mode,
+                         plan_profile=args.plan_profile)
     mesh = make_mesh(1, args.dp, args.tp)
     params = M.init_model(jax.random.PRNGKey(0), cfg, par)
 

@@ -28,8 +28,16 @@ def main() -> None:
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--pods", type=int, default=1)
-    ap.add_argument("--mode", default="decomposed",
-                    choices=["xla", "decomposed", "flux"])
+    from repro.core.overlap import VALID_MODES
+    ap.add_argument("--mode", default="decomposed", choices=list(VALID_MODES))
+    ap.add_argument("--comm-chunks", type=int, default=0,
+                    help="ring sub-chunking (0 = auto)")
+    ap.add_argument("--plan-profile", default=None,
+                    help="tuned per-seam profile JSON (repro.tuning)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune every seam before training and save the "
+                         "profile to experiments/plans/ (measured on real "
+                         "devices, roofline fallback otherwise)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--schedule", default=None,
                     help="cosine|wsd (default: per-arch)")
@@ -44,10 +52,22 @@ def main() -> None:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     par = ParallelConfig(tp=args.tp, dp=args.dp, pods=args.pods,
                          overlap_mode=args.mode, zero3=args.zero3,
+                         comm_chunks=args.comm_chunks,
+                         plan_profile=args.plan_profile,
                          grad_compress=args.grad_compress,
                          ep_over_dp=(cfg.moe is not None
                                      and cfg.moe.num_experts > 16),
                          fuse_w13=True)
+    if args.autotune and args.tp > 1:
+        import os
+        from repro.tuning import PlanRegistry, autotune_model, default_plans_dir
+        path = args.plan_profile or os.path.join(
+            default_plans_dir(), f"{args.arch}_tp{args.tp}.json")
+        reg = PlanRegistry.open(path, n_dev=args.tp)
+        autotune_model(cfg, par, tokens_per_dp=args.batch * args.seq // args.dp,
+                       registry=reg, save_path=path)
+        par = dataclasses.replace(par, plan_profile=path)
+        logging.info("autotuned seam plans -> %s", path)
     mesh = make_mesh(args.pods, args.dp, args.tp)
 
     schedule = args.schedule or (

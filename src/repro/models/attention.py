@@ -141,8 +141,10 @@ def gqa_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     b, s_loc, _ = x.shape
     s = s_loc * tp
 
+    ag = ctx.plan("attn_ag")
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
-    qkv = overlap.ag_matmul(h, p["wqkv"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    qkv = overlap.ag_matmul(h, p["wqkv"], ctx.axis, ag.mode, ag.comm_chunks,
+                            ag.reverse, ag.blocks)
     if "bqkv" in p:
         qkv = qkv + p["bqkv"]
     q, k, v = jnp.split(qkv, [hl * d.dh, (hl + hkvl) * d.dh], axis=-1)
@@ -171,9 +173,10 @@ def gqa_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         attn = blocked_attention(q.transpose(0, 2, 1, 3),
                                  k.transpose(0, 2, 1, 3),
                                  v.transpose(0, 2, 1, 3))
+    rs = ctx.plan("attn_rs")
     attn = attn.transpose(0, 2, 1, 3).reshape(b, s, hl * d.dh)
-    out = overlap.matmul_rs(attn, p["wo"], ctx.axis, ctx.mode,
-                            ctx.comm_chunks)
+    out = overlap.matmul_rs(attn, p["wo"], ctx.axis, rs.mode, rs.comm_chunks,
+                            rs.reverse, rs.blocks)
     if with_cache:
         return out, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
     return out
@@ -220,7 +223,8 @@ def gqa_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     attn = jnp.einsum("bhgos,bshd->bohgd", w, cv.astype(jnp.float32))
     attn = attn.reshape(b, 1, hl * d.dh).astype(x.dtype)
 
-    out = overlap.matmul_ar(attn, p["wo"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    ar = ctx.plan("decode_ar")
+    out = overlap.matmul_ar(attn, p["wo"], ctx.axis, ar.mode, ar.comm_chunks)
     return out, {"k": ck, "v": cv}
 
 
@@ -287,10 +291,12 @@ def mla_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
                                  cfg.rope_theta)[:, :, 0, :]
 
     # head up-projections: the FLUX AllGather-GEMM seams
-    q = overlap.ag_matmul(q_lat, p["w_uq"], ctx.axis, ctx.mode,
-                          ctx.comm_chunks).reshape(b, s, hl, dqk)
-    kv = overlap.ag_matmul(kv_lat, p["w_ukv"], ctx.axis, ctx.mode,
-                           ctx.comm_chunks)
+    ag = ctx.plan("attn_ag")
+    q = overlap.ag_matmul(q_lat, p["w_uq"], ctx.axis, ag.mode,
+                          ag.comm_chunks, ag.reverse,
+                          ag.blocks).reshape(b, s, hl, dqk)
+    kv = overlap.ag_matmul(kv_lat, p["w_ukv"], ctx.axis, ag.mode,
+                           ag.comm_chunks, ag.reverse, ag.blocks)
     kv = kv.reshape(b, s, hl, m.qk_nope_head_dim + m.v_head_dim)
     k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
 
@@ -309,9 +315,10 @@ def mla_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     attn = blocked_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                              v.transpose(0, 2, 1, 3),
                              scale=dqk ** -0.5)
+    rs = ctx.plan("attn_rs")
     attn = attn.transpose(0, 2, 1, 3).reshape(b, s, hl * m.v_head_dim)
-    out = overlap.matmul_rs(attn, p["w_o"], ctx.axis, ctx.mode,
-                            ctx.comm_chunks)
+    out = overlap.matmul_rs(attn, p["w_o"], ctx.axis, rs.mode, rs.comm_chunks,
+                            rs.reverse, rs.blocks)
     if with_cache:
         if ctx.axis is not None and ctx.tp > 1:
             c_full = lax.all_gather(kv_lat, ctx.axis, axis=1, tiled=True)
@@ -383,9 +390,10 @@ def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
         ctx_lat = jnp.einsum("bhos,bsr->bohr", w,
                              c_cache.astype(jnp.float32))
     attn = jnp.einsum("bohr,rhd->bohd", ctx_lat, w_uv.astype(jnp.float32))
+    ar = ctx.plan("decode_ar")
     attn = attn.reshape(b, 1, hl * m.v_head_dim).astype(x.dtype)
-    out = overlap.matmul_ar(attn, p["w_o"], ctx.axis, ctx.mode,
-                            ctx.comm_chunks)
+    out = overlap.matmul_ar(attn, p["w_o"], ctx.axis, ar.mode,
+                            ar.comm_chunks)
     return out, {"c": c_cache, "kr": r_cache}
 
 

@@ -104,7 +104,9 @@ def embed_lookup(table: Array, tokens: Array, ctx: TPContext,
 def lm_head_logits(x: Array, table: Array, ctx: TPContext) -> Array:
     """x: [B, S/TP, D] -> logits [B, S, V/TP] via the AllGather-GEMM seam.
     (The LM head is the biggest single GEMM: FLUX prologue fusion applies.)"""
-    return overlap.ag_matmul(x, table.T, ctx.axis, ctx.mode, ctx.comm_chunks)
+    hp = ctx.plan("head_ag")
+    return overlap.ag_matmul(x, table.T, ctx.axis, hp.mode, hp.comm_chunks,
+                             hp.reverse, hp.blocks)
 
 
 def vocab_parallel_xent(logits: Array, labels: Array, ctx: TPContext,

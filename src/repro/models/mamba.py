@@ -107,14 +107,16 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     if "w_in_xz" in p:
-        xz = overlap.ag_matmul(h, p["w_in_xz"], ctx.axis, ctx.mode,
-                               ctx.comm_chunks)
+        ag = ctx.plan("attn_ag")
+        xz = overlap.ag_matmul(h, p["w_in_xz"], ctx.axis, ag.mode,
+                               ag.comm_chunks, ag.reverse, ag.blocks)
         xs_raw, z = jnp.split(xz, 2, axis=-1)
     else:
-        xs_raw = overlap.ag_matmul(h, p["w_in_x"], ctx.axis, ctx.mode,
-                                   ctx.comm_chunks)
-        z = overlap.ag_matmul(h, p["w_in_z"], ctx.axis, ctx.mode,
-                              ctx.comm_chunks)
+        ag = ctx.plan("attn_ag")
+        xs_raw = overlap.ag_matmul(h, p["w_in_x"], ctx.axis, ag.mode,
+                                   ag.comm_chunks, ag.reverse, ag.blocks)
+        z = overlap.ag_matmul(h, p["w_in_z"], ctx.axis, ag.mode,
+                              ag.comm_chunks, ag.reverse, ag.blocks)
 
     # causal depthwise conv along the (gathered) sequence
     xpad = jnp.pad(xs_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))
@@ -122,7 +124,8 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     xs = jax.nn.silu(conv + p["conv_b"])
 
     # x_proj: row-parallel GEMM + AllReduce (B/C/dt shared across shards)
-    xdb = overlap.matmul_ar(xs, p["w_x"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    ar = ctx.plan("decode_ar")
+    xdb = overlap.matmul_ar(xs, p["w_x"], ctx.axis, ar.mode, ar.comm_chunks)
     dt_low, b_in, c_in = jnp.split(xdb, [dt_rank, dt_rank + d_state], axis=-1)
     dt = jax.nn.softplus(jnp.einsum("bsr,rc->bsc", dt_low, p["w_dt"])
                          + p["dt_bias"].astype(jnp.float32))
@@ -148,8 +151,9 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
 
     y = y + xs32 * p["d_skip"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = overlap.matmul_rs(y, p["w_out"], ctx.axis, ctx.mode,
-                            ctx.comm_chunks)
+    rs = ctx.plan("attn_rs")
+    out = overlap.matmul_rs(y, p["w_out"], ctx.axis, rs.mode, rs.comm_chunks,
+                            rs.reverse, rs.blocks)
     if with_cache:
         # conv cache stores the last d_conv-1 PRE-conv projected inputs
         conv_tail = xs_raw[:, s - (d_conv - 1):, :]
@@ -177,8 +181,9 @@ def mamba_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     xs = jax.nn.silu(conv)
     new_conv = hist[:, 1:]
 
-    xdb = overlap.matmul_ar(xs[:, None], p["w_x"], ctx.axis, ctx.mode,
-                            ctx.comm_chunks)[:, 0]
+    ar = ctx.plan("decode_ar")
+    xdb = overlap.matmul_ar(xs[:, None], p["w_x"], ctx.axis, ar.mode,
+                            ar.comm_chunks)[:, 0]
     dt_low, b_in, c_in = jnp.split(xdb, [dt_rank, dt_rank + d_state], axis=-1)
     dt = jax.nn.softplus(jnp.einsum("br,rc->bc", dt_low, p["w_dt"])
                          + p["dt_bias"].astype(jnp.float32))
@@ -191,7 +196,7 @@ def mamba_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     y = jnp.einsum("bcn,bn->bc", hnew, c_in.astype(jnp.float32))
     y = y + xs32 * p["d_skip"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)[:, None]
-    out = overlap.matmul_ar(y, p["w_out"], ctx.axis, ctx.mode, ctx.comm_chunks)
+    out = overlap.matmul_ar(y, p["w_out"], ctx.axis, ar.mode, ar.comm_chunks)
     return out, {"conv": new_conv, "ssm": hnew}
 
 

@@ -347,8 +347,10 @@ def _apply_ffn(kind: str, p: Dict, x: Array, ctx: TPContext,
 
 
 def _block(kind_pair, lp: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
-           par: ParallelConfig, z3=None) -> Tuple[Array, Array]:
+           par: ParallelConfig, z3=None,
+           layer: Optional[int] = None) -> Tuple[Array, Array]:
     lp = _maybe_gather_zero3(lp, par, z3)
+    ctx = ctx.with_layer(layer)        # per-layer plan overrides resolve here
     mixer_kind, ffn_kind = kind_pair
     x = x + _apply_mixer(mixer_kind, lp["mixer"], x, ctx, cfg)
     dy, aux = _apply_ffn(ffn_kind, lp["ffn"], x, ctx, cfg)
@@ -360,15 +362,19 @@ def backbone(params: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     """x: [B, S/TP, D] -> (hidden [B, S/TP, D], aux_loss)."""
     pat = expanded_pattern(cfg)
     z3 = zero3_flags(cfg, par)
+    lead = cfg.leading_dense_layers
     aux_total = jnp.zeros((), jnp.float32)
-    for i in range(cfg.leading_dense_layers):
+    for i in range(lead):
         x, aux = _block(pat[i], params["lead"][i], x, ctx, cfg, par,
-                        z3["lead"][i] if z3["lead"] else None)
+                        z3["lead"][i] if z3["lead"] else None, layer=i)
         aux_total = aux_total + aux
 
     def block_with_flags(pos, lp, x):
         flags = z3["periods"][pos] if z3["periods"] else None
-        return _block(cfg.pattern[pos], lp, x, ctx, cfg, par, flags)
+        # scanned periods share one trace: the layer slot is the PATTERN
+        # position (offset past the unrolled lead), not the repetition index
+        return _block(cfg.pattern[pos], lp, x, ctx, cfg, par, flags,
+                      layer=lead + pos)
 
     remat_block = jax.checkpoint(
         block_with_flags, static_argnums=(0,)) if par.remat != "none" \

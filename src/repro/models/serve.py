@@ -137,8 +137,9 @@ def _ffn_decode(kind: str, p: Dict, x: Array, cache: Dict, ctx,
 
 
 def _block_decode(kind_pair, lp: Dict, lc: Dict, x: Array, pos, ctx, cfg,
-                  par: ParallelConfig, z3=None):
+                  par: ParallelConfig, z3=None, layer=None):
     lp = _maybe_gather_zero3(lp, par, z3)
+    ctx = ctx.with_layer(layer)
     dy, mc = _mixer_decode(kind_pair[0], lp["mixer"], x, lc["mixer"], pos,
                            ctx, cfg)
     x = x + dy
@@ -158,10 +159,11 @@ def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
     pat = expanded_pattern(cfg)
     z3 = zero3_flags(cfg, par)
     new_caches: Dict[str, Any] = {"lead": [], "periods": None}
-    for i in range(cfg.leading_dense_layers):
+    lead = cfg.leading_dense_layers
+    for i in range(lead):
         x, nc = _block_decode(pat[i], params["lead"][i], caches["lead"][i],
                               x, pos, ctx, cfg, par,
-                              z3["lead"][i] if z3["lead"] else None)
+                              z3["lead"][i] if z3["lead"] else None, layer=i)
         new_caches["lead"].append(nc)
 
     def period_body(x, xs):
@@ -170,7 +172,8 @@ def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
         for p_i, kp in enumerate(cfg.pattern):
             x, nc = _block_decode(kp, stacked_p[p_i], stacked_c[p_i], x, pos,
                                   ctx, cfg, par,
-                                  z3["periods"][p_i] if z3["periods"] else None)
+                                  z3["periods"][p_i] if z3["periods"] else None,
+                                  layer=lead + p_i)
             ncs.append(nc)
         return x, tuple(ncs)
 
@@ -230,8 +233,9 @@ def _ffn_prefill(kind: str, p, x, ctx, cfg):
     raise ValueError(kind)
 
 
-def _block_prefill(kind_pair, lp, x, ctx, cfg, par, z3=None):
+def _block_prefill(kind_pair, lp, x, ctx, cfg, par, z3=None, layer=None):
     lp = _maybe_gather_zero3(lp, par, z3)
+    ctx = ctx.with_layer(layer)
     dy, mc = _mixer_prefill(kind_pair[0], lp["mixer"], x, ctx, cfg)
     x = x + dy
     dy, fc = _ffn_prefill(kind_pair[1], lp["ffn"], x, ctx, cfg)
@@ -251,16 +255,18 @@ def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
     pat = expanded_pattern(cfg)
     z3 = zero3_flags(cfg, par)
     caches: Dict[str, Any] = {"lead": [], "periods": None}
-    for i in range(cfg.leading_dense_layers):
+    lead = cfg.leading_dense_layers
+    for i in range(lead):
         x, nc = _block_prefill(pat[i], params["lead"][i], x, ctx, cfg, par,
-                               z3["lead"][i] if z3["lead"] else None)
+                               z3["lead"][i] if z3["lead"] else None, layer=i)
         caches["lead"].append(nc)
 
     def period_body(x, stacked_p):
         ncs = []
         for p_i, kp in enumerate(cfg.pattern):
             x, nc = _block_prefill(kp, stacked_p[p_i], x, ctx, cfg, par,
-                                   z3["periods"][p_i] if z3["periods"] else None)
+                                   z3["periods"][p_i] if z3["periods"] else None,
+                                   layer=lead + p_i)
             ncs.append(nc)
         return x, tuple(ncs)
 

@@ -22,7 +22,14 @@ class TPContext:
     axis      : TP/SP mesh axis name (None -> single device / no TP)
     dp_axes   : data-parallel axes (batch sharding; grad sync)
     ep_axes   : expert-parallel axes for MoE dispatch
-    mode      : overlap mode for the TP seams (xla | decomposed | flux)
+    mode      : fallback overlap mode for TP seams without a plan
+    plans     : per-layer-seam PlanSet (repro.tuning); when set, every seam
+                resolves its knobs via ``self.plan(seam)`` instead of the
+                global mode/comm_chunks pair
+    layer     : current layer slot (absolute index for unrolled leading
+                layers; leading_dense_layers + position for scanned pattern
+                positions) — threaded by model.py/serve.py for per-layer
+                plan overrides
     """
     axis: Optional[str] = None
     dp_axes: Tuple[str, ...] = ()
@@ -31,6 +38,22 @@ class TPContext:
     comm_chunks: int = 0
     use_kernels: bool = False        # Pallas fused kernels on hot paths
     #                                  (MLA decode; interpret on CPU)
+    plans: Optional[object] = None   # tuning.plans.PlanSet (kept loose to
+    #                                  avoid a hard import edge)
+    layer: Optional[int] = None
+
+    def plan(self, seam: str):
+        """Resolve the overlap plan for one model seam (tuning.KNOWN_SEAMS);
+        falls back to the global mode/comm_chunks when no PlanSet is set."""
+        if self.plans is not None:
+            return self.plans.resolve(seam, self.layer)
+        from repro.tuning.plans import SeamPlan
+        return SeamPlan(mode=self.mode, comm_chunks=self.comm_chunks)
+
+    def with_layer(self, layer: Optional[int]) -> "TPContext":
+        if layer == self.layer:
+            return self
+        return dataclasses.replace(self, layer=layer)
 
     @property
     def tp(self) -> int:

@@ -48,9 +48,11 @@ class Server:
         self.sc = sc
         self.params = params
         dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        from repro.tuning import plan_set_from_parallel
         self.ctx = TPContext(axis="model", dp_axes=dp_axes,
                              ep_axes=("model",) if cfg.moe else (),
-                             mode=par.overlap_mode)
+                             mode=par.overlap_mode,
+                             plans=plan_set_from_parallel(par))
         params_eval = jax.eval_shape(
             lambda: M.init_model(jax.random.PRNGKey(0), cfg, par))
         self.pspecs = M.param_specs(cfg, par, params_eval)

@@ -47,14 +47,20 @@ class TrainConfig:
     seed: int = 0
 
 
-def make_ctx(cfg: ModelConfig, par: ParallelConfig, mesh) -> TPContext:
+def make_ctx(cfg: ModelConfig, par: ParallelConfig, mesh,
+             plans=None) -> TPContext:
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     ep_axes = ()
     if cfg.moe is not None:
         ep_axes = ("data", "model") if par.ep_over_dp else ("model",)
+    if plans is None:
+        # uniform PlanSet from overlap_mode, overlaid with par.plan_profile
+        # (the tuned per-seam profile) when present and fresh
+        from repro.tuning import plan_set_from_parallel
+        plans = plan_set_from_parallel(par)
     return TPContext(axis="model", dp_axes=dp_axes, ep_axes=ep_axes,
                      mode=par.overlap_mode, comm_chunks=par.comm_chunks,
-                     use_kernels=par.kernel_decode)
+                     use_kernels=par.kernel_decode, plans=plans)
 
 
 def batch_pspecs(cfg: ModelConfig, mesh) -> Dict:

@@ -1,0 +1,52 @@
+"""Per-seam overlap plan registry (paper §4.4, made persistent).
+
+FLUX's speedups come from *tuning*: template parameters, pull/push direction,
+and communication tile size are selected per (GEMM shape, dtype, arch,
+interconnect) and cached.  This package is that subsystem for our JAX port:
+
+  plans.py     ``SeamPlan`` (one seam's knob settings) and ``PlanSet`` (the
+               per-layer-seam resolution table threaded through the model via
+               ``TPContext.plans``).
+  autotune.py  the tuner: enumerates ``(mode, comm_chunks, reverse, bm/bk/bn)``
+               candidates per seam, times them with jitted sweeps on the real
+               devices, and falls back to the ``core.ect`` roofline when
+               measurement is meaningless (single device, or Pallas interpret
+               mode under ``REPRO_PALLAS_INTERPRET=1``).
+  cache.py     the persistent JSON profile cache (``experiments/plans/*.json``)
+               with save/load round-trip and staleness versioning.
+
+Profile JSON schema (``cache.PROFILE_VERSION`` bumps on breaking change)::
+
+    {
+      "version": 1,                    # schema version; mismatch -> stale
+      "backend": "cpu" | "tpu" | ..., # jax.default_backend() at tune time
+      "mesh": {"n_dev": 4},           # TP degree the plans were tuned for
+      "entries": {
+        "mlp_ag|m4096,n512,k256,tp4,b2": {
+          "seam": "mlp_ag",            # model seam name (plans.KNOWN_SEAMS)
+          "kind": "ag",                # collective kind: ag | rs | ar
+          "m": 4096, "n": 512, "k": 256,
+          "n_dev": 4, "dtype_bytes": 2,
+          "plan": {
+            "mode": "decomposed",      # overlap.VALID_MODES
+            "comm_chunks": 8,          # §4.3 communication tile size (0=auto)
+            "reverse": false,          # ring direction (pull/push analogue)
+            "blocks": [256, 512, 256], # (bm, bk, bn) MXU tile
+            "source": "measured",      # measured | analytic
+            "predicted_s": 1.2e-4,     # roofline OverallTime
+            "measured_s": 9.8e-5       # median wall time (0 when analytic)
+          }
+        }, ...
+      }
+    }
+
+A profile is *stale* (ignored on load) when its ``version`` differs from
+``PROFILE_VERSION`` or its ``mesh``/``backend`` disagree with the requester's.
+"""
+from repro.tuning.plans import (KNOWN_SEAMS, PlanSet, SeamPlan,  # noqa: F401
+                                plan_set_from_parallel)
+from repro.tuning.cache import (PROFILE_VERSION, PlanRegistry,  # noqa: F401
+                                default_plans_dir)
+from repro.tuning.autotune import (TuneResult, autotune_model,  # noqa: F401
+                                   candidate_space, model_seam_shapes,
+                                   tune_seam)

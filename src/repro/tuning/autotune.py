@@ -1,0 +1,312 @@
+"""Measured + analytic per-seam autotuner (paper §4.4).
+
+For one seam (collective kind + GEMM shape) the tuner enumerates candidate
+``(mode, comm_chunks, reverse, bm/bk/bn)`` settings, scores each one, and
+returns the winner as a ``SeamPlan``:
+
+  * **measured** — a jitted sweep of the real overlap op on the current
+    devices (shard_mapped over ``n_dev`` devices when available, the
+    single-device fallback otherwise); median wall time via ``ect.time_fn``.
+  * **analytic** — the ``core.ect`` roofline.  Used when measurement is
+    meaningless: fewer devices than ``n_dev``, or Pallas interpret mode
+    (``REPRO_PALLAS_INTERPRET=1``), where kernel timings reflect the
+    interpreter, not hardware.
+
+``measure="auto"`` picks between the two; ``True``/``False`` force them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import ect
+from repro.tuning.plans import PlanSet, SeamPlan
+
+# candidate modes per collective kind.  q8 only changes AllGather payloads
+# (RS partials keep full precision; AR treats q8 as its base mode), and the
+# bidirectional ring needs an actual ring, so:
+_KIND_MODES: Dict[str, Tuple[str, ...]] = {
+    "ag": ("xla", "decomposed", "decomposed_bidir", "xla_q8",
+           "decomposed_q8", "flux"),
+    "rs": ("xla", "decomposed", "decomposed_bidir", "flux"),
+    "ar": ("xla", "decomposed"),
+}
+# flux block-preference sweep (the CUTLASS-template-parameter analogue)
+_FLUX_BLOCK_PREFS: Tuple[Tuple[int, int, int], ...] = (
+    (256, 512, 256), (128, 512, 128), (512, 512, 512))
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    mode: str
+    comm_chunks: int
+    reverse: bool
+    blocks: Optional[Tuple[int, int, int]] = None
+
+
+@dataclasses.dataclass
+class TuneResult:
+    seam: str                         # model seam name (or the kind itself)
+    kind: str                         # ag | rs | ar
+    m: int
+    n: int
+    k: int
+    n_dev: int
+    plan: SeamPlan
+    table: List[Dict]                 # one row per candidate (see tune_seam)
+    source: str                       # measured | analytic
+
+
+def _ring_chunk_options(n_dev: int) -> Tuple[int, ...]:
+    # no 0 ("auto"): auto IS n_dev in every ring op, and duplicate
+    # candidates would be compiled and timed twice on the measured path
+    return (n_dev, 2 * n_dev, 4 * n_dev)
+
+
+def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
+                    *, allow_flux: bool = True, allow_q8: bool = True,
+                    modes: Optional[Sequence[str]] = None) -> List[Candidate]:
+    """All tunable settings for one seam kind.  ``modes`` restricts the mode
+    set (used by the measured path to drop flux under interpret mode);
+    ``allow_q8=False`` drops the lossy int8-gather modes."""
+    from repro.kernels.ops import plan_blocks
+    out: List[Candidate] = []
+    for mode in (modes or _KIND_MODES[kind]):
+        if mode == "flux" and not allow_flux:
+            continue
+        if mode.endswith("_q8") and not allow_q8:
+            continue
+        if mode in ("xla", "xla_q8"):
+            out.append(Candidate(mode, 0, False))
+            continue
+        if mode == "flux":
+            # per-device GEMM shape (paper §4.4: tiling is not bound to N_TP)
+            if kind == "ag":
+                gm, gk, gn = max(m // n_dev, 1), k, max(n // n_dev, 1)
+            else:
+                gm, gk, gn = max(m // n_dev, 1), max(k // n_dev, 1), n
+            for pref in _FLUX_BLOCK_PREFS:
+                blocks = plan_blocks(gm, gk, gn, *pref)
+                for reverse in (False, True):
+                    out.append(Candidate(mode, 0, reverse, blocks))
+            continue
+        # ring modes: chunk count x direction (AR chunks the contraction —
+        # no ring, so no direction; bidir already rides both directions)
+        for chunks in _ring_chunk_options(n_dev):
+            for reverse in (False, True):
+                if reverse and (kind == "ar" or mode == "decomposed_bidir"):
+                    continue
+                out.append(Candidate(mode, chunks, reverse))
+    # dedupe (plan_blocks may collapse block prefs on small shapes)
+    seen, uniq = set(), []
+    for c in out:
+        key = (c.mode, c.comm_chunks, c.reverse, c.blocks)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(c)
+    return uniq
+
+
+def analytic_estimate(kind: str, m: int, n: int, k: int, n_dev: int,
+                      cand: Candidate, dtype_bytes: int = 2) -> float:
+    est = ect.model_overlap(kind, m, n, k, n_dev, cand.mode, dtype_bytes,
+                            comm_chunks=cand.comm_chunks)
+    return est["overall"]
+
+
+# ---------------------------------------------------------------------------
+# measured path
+# ---------------------------------------------------------------------------
+def _round_to(x: int, mult: int) -> int:
+    return max(mult, x - x % mult)
+
+
+def _bench_callable(kind: str, m: int, n: int, k: int, n_dev: int,
+                    cand: Candidate, dtype):
+    """(jitted_fn, args) timing one overlap op under ``cand``'s settings.
+    Shard_maps over ``n_dev`` devices when the host has them; otherwise the
+    single-device fallback path (still times the real GEMM)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro import compat
+    from repro.core import overlap
+
+    multi = n_dev > 1 and len(jax.devices()) >= n_dev
+    axis = "tune" if multi else None
+    m = _round_to(m, n_dev)
+    n = _round_to(n, n_dev)
+    k = _round_to(k, n_dev)
+    key = jax.random.PRNGKey(0)
+
+    x = jax.random.normal(key, (1, m, k), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype) / k ** 0.5
+    # custom_vjp nondiff args are passed positionally (kwarg resolution on
+    # custom_vjp functions is version-fragile)
+    if kind == "ag":
+        def op(a, b):
+            return overlap.ag_matmul(a, b, axis, cand.mode, cand.comm_chunks,
+                                     cand.reverse, cand.blocks)
+        in_specs = (P(None, axis, None), P(None, axis))
+        out_spec = P(None, None, axis)
+    elif kind == "rs":
+        def op(a, b):
+            return overlap.matmul_rs(a, b, axis, cand.mode, cand.comm_chunks,
+                                     cand.reverse, cand.blocks)
+        in_specs = (P(None, None, axis), P(axis, None))
+        out_spec = P(None, axis, None)
+    else:  # ar — decode path: tiny m, contraction sharded
+        def op(a, b):
+            return overlap.matmul_ar(a, b, axis, cand.mode, cand.comm_chunks)
+        in_specs = (P(None, None, axis), P(axis, None))
+        out_spec = P(None, None, None)
+
+    if not multi:
+        return jax.jit(lambda a, b: op(a, b)), (x, w)
+
+    mesh = Mesh(np.array(jax.devices()[:n_dev]), ("tune",))
+    fn = compat.shard_map(lambda a, b: op(a, b), mesh=mesh,
+                          in_specs=in_specs, out_specs=out_spec,
+                          check_vma=False)
+    return jax.jit(fn), (x, w)
+
+
+def _measurable_modes(kind: str, allow_flux: bool) -> Tuple[str, ...]:
+    from repro import compat
+    modes = _KIND_MODES[kind]
+    # interpret-mode Pallas timings measure the interpreter, not hardware —
+    # keep flux out of the measured sweep there (it still competes via the
+    # analytic path on real devices).
+    if compat.interpret_default():
+        modes = tuple(md for md in modes if md != "flux")
+    if not allow_flux:
+        modes = tuple(md for md in modes if md != "flux")
+    return modes
+
+
+def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
+              *, dtype_bytes: int = 2, allow_flux: bool = True,
+              allow_q8: bool = True, measure="auto",
+              modes: Optional[Sequence[str]] = None,
+              seam: Optional[str] = None, iters: int = 3,
+              warmup: int = 1) -> TuneResult:
+    """Tune one seam.  Returns the winning plan plus the full candidate
+    table (``table`` rows: mode/comm_chunks/reverse/blocks/predicted_s and,
+    on the measured path, measured_s)."""
+    assert kind in _KIND_MODES, kind
+    if measure == "auto":
+        import jax
+        from repro import compat
+        measure = (n_dev > 1 and len(jax.devices()) >= n_dev
+                   and not compat.interpret_default())
+
+    if measure:
+        import jax.numpy as jnp
+        dtype = jnp.bfloat16 if dtype_bytes == 2 else jnp.float32
+        cands = candidate_space(kind, m, n, k, n_dev, allow_flux=allow_flux,
+                                allow_q8=allow_q8,
+                                modes=modes or _measurable_modes(kind,
+                                                                 allow_flux))
+        table = []
+        for c in cands:
+            fn, args = _bench_callable(kind, m, n, k, n_dev, c, dtype)
+            t = ect.time_fn(fn, *args, iters=iters, warmup=warmup)
+            table.append({"mode": c.mode, "comm_chunks": c.comm_chunks,
+                          "reverse": c.reverse, "blocks": c.blocks,
+                          "predicted_s": analytic_estimate(
+                              kind, m, n, k, n_dev, c, dtype_bytes),
+                          "measured_s": t})
+        best = min(table, key=lambda r: r["measured_s"])
+        source = "measured"
+    else:
+        cands = candidate_space(kind, m, n, k, n_dev, allow_flux=allow_flux,
+                                allow_q8=allow_q8, modes=modes)
+        table = [{"mode": c.mode, "comm_chunks": c.comm_chunks,
+                  "reverse": c.reverse, "blocks": c.blocks,
+                  "predicted_s": analytic_estimate(kind, m, n, k, n_dev, c,
+                                                   dtype_bytes),
+                  "measured_s": 0.0} for c in cands]
+        best = min(table, key=lambda r: r["predicted_s"])
+        source = "analytic"
+
+    blocks = best["blocks"]
+    if blocks is None:
+        from repro.kernels.ops import plan_blocks
+        if kind == "ag":
+            blocks = plan_blocks(max(m // n_dev, 1), k, max(n // n_dev, 1))
+        else:
+            blocks = plan_blocks(max(m // n_dev, 1), max(k // n_dev, 1), n)
+    plan = SeamPlan(mode=best["mode"], comm_chunks=best["comm_chunks"],
+                    reverse=best["reverse"], blocks=tuple(blocks),
+                    source=source, predicted_s=best["predicted_s"],
+                    measured_s=best["measured_s"]).validate()
+    return TuneResult(seam=seam or kind, kind=kind, m=m, n=n, k=k,
+                      n_dev=n_dev, plan=plan, table=table, source=source)
+
+
+# ---------------------------------------------------------------------------
+# whole-model tuning
+# ---------------------------------------------------------------------------
+def model_seam_shapes(cfg, par, tokens_per_dp: int = 2048,
+                      decode_batch: int = 8) -> Dict[str, Tuple[str, int, int, int]]:
+    """(kind, m, n, k) per model seam, from the arch's padded GEMM shapes."""
+    from repro.parallel.sharding import pad_ff, pad_vocab
+    tp = par.tp
+    d = cfg.d_model
+    ffp = pad_ff(cfg.d_ff, tp)
+    shapes: Dict[str, Tuple[str, int, int, int]] = {
+        "mlp_ag": ("ag", tokens_per_dp,
+                   ffp * (2 if getattr(par, "fuse_w13", False) else 1), d),
+        "mlp_rs": ("rs", tokens_per_dp, d, ffp),
+        "head_ag": ("ag", tokens_per_dp, pad_vocab(cfg.vocab_size, tp), d),
+        "decode_ar": ("ar", decode_batch, d, ffp),
+    }
+    if cfg.mla is not None:
+        from repro.parallel.sharding import pad_heads
+        mla = cfg.mla
+        h_pad = pad_heads(cfg.num_heads, tp)
+        shapes["attn_ag"] = ("ag", tokens_per_dp,
+                             h_pad * (mla.qk_nope_head_dim
+                                      + mla.qk_rope_head_dim), mla.q_lora_rank)
+        shapes["attn_rs"] = ("rs", tokens_per_dp, d, h_pad * mla.v_head_dim)
+    elif cfg.num_heads:
+        from repro.models.attention import AttnDims
+        dims = AttnDims.of(cfg, tp)
+        shapes["attn_ag"] = ("ag", tokens_per_dp,
+                             (dims.h_pad + 2 * dims.hkv_pad) * dims.dh, d)
+        shapes["attn_rs"] = ("rs", tokens_per_dp, d, dims.h_pad * dims.dh)
+    return shapes
+
+
+def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
+                   decode_batch: int = 8, measure="auto",
+                   registry=None, save_path: Optional[str] = None,
+                   allow_flux: bool = True, allow_q8: bool = False) -> PlanSet:
+    """Tune every seam of a model and return the resulting PlanSet.
+
+    ``registry`` (a ``cache.PlanRegistry``) short-circuits seams it already
+    holds and records fresh results; ``save_path`` persists it afterwards.
+    ``allow_q8`` defaults to False here: the int8-gather modes are lossy and
+    must be an explicit opt-in for whole-model plans.
+    """
+    if par.tp <= 1:
+        return PlanSet.uniform(par.overlap_mode, par.comm_chunks)
+    seams: Dict[str, SeamPlan] = {}
+    for seam_name, (kind, m, n, k) in model_seam_shapes(
+            cfg, par, tokens_per_dp, decode_batch).items():
+        cached = registry.lookup(seam_name, m, n, k) if registry else None
+        if cached is not None:
+            seams[seam_name] = cached
+            continue
+        res = tune_seam(kind, m, n, k, par.tp, allow_flux=allow_flux,
+                        allow_q8=allow_q8, measure=measure, seam=seam_name)
+        seams[seam_name] = res.plan
+        if registry is not None:
+            registry.record(seam_name, kind, m, n, k, res.plan)
+    if registry is not None and save_path:
+        registry.save(save_path)
+    return PlanSet(default=SeamPlan(mode=par.overlap_mode,
+                                    comm_chunks=par.comm_chunks).validate(),
+                   seams=seams)

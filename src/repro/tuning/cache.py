@@ -1,0 +1,108 @@
+"""Persistent JSON profile cache for tuned seam plans.
+
+One profile file = the tuned plans for one (model, mesh, backend) cell, e.g.
+``experiments/plans/codeqwen15_7b_tp4.json``.  See the package docstring for
+the schema.  Loading applies staleness checks: a file whose ``version``,
+``mesh.n_dev`` or ``backend`` disagrees with the requester's is treated as
+absent (returns an empty registry) — never half-trusted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Mapping, Optional
+
+from repro.tuning.plans import SeamPlan
+
+PROFILE_VERSION = 1
+
+
+def default_plans_dir() -> str:
+    """``experiments/plans/`` at the repo root (next to ``experiments/dryrun``)."""
+    return os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "plans")
+
+
+def entry_key(seam: str, m: int, n: int, k: int, n_dev: int,
+              dtype_bytes: int = 2) -> str:
+    return f"{seam}|m{m},n{n},k{k},tp{n_dev},b{dtype_bytes}"
+
+
+@dataclasses.dataclass
+class PlanRegistry:
+    """In-memory view of one profile file.
+
+    ``entries`` maps :func:`entry_key` strings to dicts carrying the seam
+    metadata and the serialized plan (schema in the package docstring).
+    """
+    n_dev: int
+    backend: str = ""
+    entries: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    path: Optional[str] = None
+
+    def __post_init__(self):
+        if not self.backend:
+            import jax
+            self.backend = jax.default_backend()
+
+    # ------------------------------------------------------------- access
+    def record(self, seam: str, kind: str, m: int, n: int, k: int,
+               plan: SeamPlan, dtype_bytes: int = 2) -> None:
+        self.entries[entry_key(seam, m, n, k, self.n_dev, dtype_bytes)] = {
+            "seam": seam, "kind": kind, "m": m, "n": n, "k": k,
+            "n_dev": self.n_dev, "dtype_bytes": dtype_bytes,
+            "plan": plan.to_json()}
+
+    def lookup(self, seam: str, m: int, n: int, k: int,
+               dtype_bytes: int = 2) -> Optional[SeamPlan]:
+        e = self.entries.get(entry_key(seam, m, n, k, self.n_dev, dtype_bytes))
+        return SeamPlan.from_json(e["plan"]) if e else None
+
+    def seam_plans(self) -> Dict[str, SeamPlan]:
+        """Best-known plan per model seam name (insertion order: last wins).
+        Used to build a PlanSet when the caller doesn't re-derive exact
+        shapes; exact-shape consumers should use :meth:`lookup`."""
+        out: Dict[str, SeamPlan] = {}
+        for e in self.entries.values():
+            out[e["seam"]] = SeamPlan.from_json(e["plan"])
+        return out
+
+    # ----------------------------------------------------------------- io
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        assert path, "PlanRegistry.save needs a path"
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        doc = {"version": PROFILE_VERSION, "backend": self.backend,
+               "mesh": {"n_dev": self.n_dev}, "entries": self.entries}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+    @classmethod
+    def open(cls, path: str, *, n_dev: int,
+             backend: Optional[str] = None) -> "PlanRegistry":
+        """Load a profile; empty registry when the file is missing or STALE
+        (version / mesh / backend mismatch)."""
+        if backend is None:
+            import jax
+            backend = jax.default_backend()
+        reg = cls(n_dev=n_dev, backend=backend, path=path)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return reg
+        if doc.get("version") != PROFILE_VERSION:
+            return reg
+        if doc.get("mesh", {}).get("n_dev") != n_dev:
+            return reg
+        if doc.get("backend") != backend:
+            return reg
+        entries = doc.get("entries", {})
+        if isinstance(entries, Mapping):
+            reg.entries = dict(entries)
+        return reg

@@ -1,0 +1,141 @@
+"""SeamPlan / PlanSet: the per-layer-seam overlap plan resolution table.
+
+``TPContext.plans`` holds a ``PlanSet``; every TP seam in the model resolves
+its knobs through ``PlanSet.resolve(seam, layer)`` instead of reading one
+global ``ctx.mode``/``ctx.comm_chunks``.  Seam names are model-level (what
+the layer is doing), not collective-level:
+
+  mlp_ag    FFN up-projection AllGather-GEMM (w1/w3/w13)
+  mlp_rs    FFN down-projection GEMM-ReduceScatter (w2)
+  attn_ag   mixer input projection AllGather-GEMM (QKV / MLA up / mamba in)
+  attn_rs   mixer output projection GEMM-ReduceScatter (wo / w_out)
+  decode_ar row-parallel GEMM + AllReduce seams (decode paths of all mixers
+            and FFNs, plus mamba's train-path x-projection AR)
+  head_ag   LM-head AllGather-GEMM (the biggest single GEMM)
+
+Unknown seams fall back to the set's default, so the vocabulary is
+extensible without touching this file.
+
+Layer ids: leading (unrolled) layers use their absolute index; scanned
+period positions use ``leading_dense_layers + position``.  All repetitions
+of a scanned period share one trace, hence one plan per pattern position —
+finer per-repetition overrides are structurally impossible under
+``lax.scan`` and are rejected nowhere (they simply never match).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+KNOWN_SEAMS: Tuple[str, ...] = ("mlp_ag", "mlp_rs", "attn_ag", "attn_rs",
+                                "decode_ar", "head_ag")
+
+# collective kind behind each model seam (candidate spaces differ per kind)
+SEAM_KINDS: Dict[str, str] = {"mlp_ag": "ag", "mlp_rs": "rs",
+                              "attn_ag": "ag", "attn_rs": "rs",
+                              "decode_ar": "ar", "head_ag": "ag"}
+
+
+@dataclasses.dataclass(frozen=True)
+class SeamPlan:
+    """Knob settings for ONE seam (the paper's §4.4 tuning record)."""
+    mode: str = "decomposed"
+    comm_chunks: int = 0
+    reverse: bool = False
+    blocks: Optional[Tuple[int, int, int]] = None
+    source: str = "default"          # default | analytic | measured
+    predicted_s: float = 0.0
+    measured_s: float = 0.0
+
+    def validate(self) -> "SeamPlan":
+        from repro.core.overlap import VALID_MODES
+        if self.mode not in VALID_MODES:
+            raise ValueError(f"invalid overlap mode {self.mode!r}")
+        if self.comm_chunks < 0:
+            raise ValueError(f"comm_chunks must be >= 0, got {self.comm_chunks}")
+        return self
+
+    def to_json(self) -> Dict:
+        d = {"mode": self.mode, "comm_chunks": self.comm_chunks,
+             "reverse": self.reverse, "source": self.source,
+             "predicted_s": self.predicted_s, "measured_s": self.measured_s}
+        d["blocks"] = list(self.blocks) if self.blocks else None
+        return d
+
+    @staticmethod
+    def from_json(d: Mapping) -> "SeamPlan":
+        blocks = d.get("blocks")
+        return SeamPlan(mode=d["mode"], comm_chunks=int(d.get("comm_chunks", 0)),
+                        reverse=bool(d.get("reverse", False)),
+                        blocks=tuple(blocks) if blocks else None,
+                        source=d.get("source", "default"),
+                        predicted_s=float(d.get("predicted_s", 0.0)),
+                        measured_s=float(d.get("measured_s", 0.0))).validate()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSet:
+    """Per-seam (optionally per-layer) plan table.
+
+    Resolution order: ``layers[layer][seam]`` -> ``seams[seam]`` -> default.
+    """
+    default: SeamPlan = SeamPlan()
+    seams: Mapping[str, SeamPlan] = dataclasses.field(default_factory=dict)
+    layers: Mapping[int, Mapping[str, SeamPlan]] = dataclasses.field(
+        default_factory=dict)
+
+    def resolve(self, seam: str, layer: Optional[int] = None) -> SeamPlan:
+        if layer is not None:
+            per_layer = self.layers.get(layer)
+            if per_layer is not None and seam in per_layer:
+                return per_layer[seam]
+        return self.seams.get(seam, self.default)
+
+    def override(self, seam: str, plan: SeamPlan,
+                 layer: Optional[int] = None) -> "PlanSet":
+        """Functional update (PlanSet is frozen)."""
+        if layer is None:
+            return dataclasses.replace(
+                self, seams={**dict(self.seams), seam: plan})
+        layers = {k: dict(v) for k, v in self.layers.items()}
+        layers.setdefault(layer, {})[seam] = plan
+        return dataclasses.replace(self, layers=layers)
+
+    @staticmethod
+    def uniform(mode: str, comm_chunks: int = 0,
+                reverse: bool = False) -> "PlanSet":
+        """The pre-registry behavior: one global mode for every seam."""
+        return PlanSet(default=SeamPlan(mode=mode, comm_chunks=comm_chunks,
+                                        reverse=reverse).validate())
+
+    def to_json(self) -> Dict:
+        return {"default": self.default.to_json(),
+                "seams": {s: p.to_json() for s, p in self.seams.items()},
+                "layers": {str(l): {s: p.to_json() for s, p in ov.items()}
+                           for l, ov in self.layers.items()}}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "PlanSet":
+        return PlanSet(
+            default=SeamPlan.from_json(d["default"]),
+            seams={s: SeamPlan.from_json(p)
+                   for s, p in d.get("seams", {}).items()},
+            layers={int(l): {s: SeamPlan.from_json(p) for s, p in ov.items()}
+                    for l, ov in d.get("layers", {}).items()})
+
+
+def plan_set_from_parallel(par) -> PlanSet:
+    """PlanSet for a ParallelConfig: the uniform ``overlap_mode`` default,
+    overlaid with the per-seam plans from ``par.plan_profile`` when that
+    profile exists, is fresh, and was tuned for this TP degree/backend.
+    (Staleness is version/mesh/backend only — keep one profile per model.)"""
+    base = PlanSet.uniform(par.overlap_mode, par.comm_chunks)
+    profile = getattr(par, "plan_profile", None)
+    if not profile:
+        return base
+    from repro.tuning.cache import PlanRegistry
+    reg = PlanRegistry.open(profile, n_dev=par.tp)
+    seams = reg.seam_plans()
+    if not seams:
+        return base
+    return dataclasses.replace(base, seams={**dict(base.seams), **seams})

@@ -57,3 +57,18 @@ def run_subprocess_devices(code: str, n_devices: int = 4,
 @pytest.fixture(scope="session")
 def subproc():
     return run_subprocess_devices
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidev: spawns a multi-device subprocess (skipped by "
+        "scripts/verify.sh --fast)")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Every test that uses the ``subproc`` fixture is a multi-device
+    subprocess sweep — auto-mark so ``verify.sh --fast`` can skip them."""
+    for item in items:
+        if "subproc" in getattr(item, "fixturenames", ()):
+            item.add_marker(pytest.mark.multidev)

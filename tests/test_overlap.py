@@ -209,3 +209,159 @@ print("BIDIR_OK")
 
 def test_bidirectional_ring(subproc):
     assert "BIDIR_OK" in subproc(_BIDIR, n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# the previously untested modes: decomposed_bidir / decomposed_q8 values AND
+# gradients vs the xla oracle, reverse-direction rings, and the matmul_ar
+# (decode seam) mode-equivalence sweep
+# ---------------------------------------------------------------------------
+_FULL_SWEEP = r"""
+import functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import overlap
+
+mesh = Mesh(np.array(jax.devices()), ("model",))
+B, S, D, F = 2, 256, 128, 256
+x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
+w1 = jax.random.normal(jax.random.PRNGKey(1), (D, F)) / D**0.5
+w2 = jax.random.normal(jax.random.PRNGKey(2), (F, D)) / F**0.5
+
+def seam(mode, chunks=0, reverse=False):
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(None, "model", None), P(None, "model"),
+                                 P("model", None)),
+                       out_specs=P(None, "model", None), check_vma=False)
+    def f(xs, w1s, w2s):
+        y = overlap.ag_matmul(xs, w1s, "model", mode, chunks, reverse)
+        return overlap.matmul_rs(jax.nn.gelu(y), w2s, "model", mode, chunks,
+                                 reverse)
+    return np.asarray(f(x, w1, w2))
+
+ref = seam("xla")
+scale = np.abs(ref).max()
+for mode, chunks, rev, tol in [
+        ("decomposed", 0, True, 1e-3),           # reverse ring
+        ("decomposed", 8, True, 1e-3),
+        ("decomposed_bidir", 0, False, 1e-3),
+        ("decomposed_bidir", 16, False, 1e-3),
+        ("decomposed_q8", 0, False, 2e-2),       # int8 gather budget
+        ("decomposed_q8", 8, True, 2e-2)]:
+    out = seam(mode, chunks, rev)
+    rel = np.abs(out - ref).max() / scale
+    assert rel < tol, (mode, chunks, rev, rel)
+
+# q8 ring must produce EXACTLY the monolithic-gather q8 values (same
+# encode/decode path, different transport) ...
+def ag_only(mode, chunks=0):
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(None, "model", None), P(None, "model")),
+                       out_specs=P(None, None, "model"), check_vma=False)
+    def f(xs, ws):
+        return overlap.ag_matmul(xs, ws, "model", mode, chunks)
+    return np.asarray(f(x, w1))
+assert np.abs(ag_only("xla_q8") - ag_only("decomposed_q8", 8)).max() < 1e-5
+
+# ... and it must actually ride the ring: the forward jaxpr carries
+# ppermute hops, no monolithic all_gather (the pre-fix regression)
+def fwd_jaxpr(mode):
+    f = functools.partial(shard_map, mesh=mesh,
+                          in_specs=(P(None, "model", None), P(None, "model")),
+                          out_specs=P(None, None, "model"), check_vma=False)(
+        lambda xs, ws: overlap.ag_matmul(xs, ws, "model", mode, 8))
+    return str(jax.make_jaxpr(f)(x, w1))
+j = fwd_jaxpr("decomposed_q8")
+assert "ppermute" in j and "all_gather" not in j, "q8 lost ring overlap"
+assert "all_gather" in fwd_jaxpr("xla_q8")
+
+# gradients vs the xla oracle (bidir is exact; q8's custom_vjp runs the
+# interchanged ops on full-precision cotangents so grads stay within the
+# quantization budget of the forward)
+def loss(mode, chunks=0, reverse=False):
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(None, "model", None), P(None, "model"),
+                                 P("model", None)),
+                       out_specs=P(), check_vma=False)
+    def f(xs, w1s, w2s):
+        y = overlap.ag_matmul(xs, w1s, "model", mode, chunks, reverse)
+        z = overlap.matmul_rs(jax.nn.gelu(y), w2s, "model", mode, chunks,
+                              reverse)
+        return jax.lax.psum(jnp.sum(z * z), "model")
+    return f
+
+g_ref = jax.jit(jax.grad(loss("xla"), argnums=(0, 1, 2)))(x, w1, w2)
+for mode, chunks, rev, tol in [("decomposed_bidir", 0, False, 1e-3),
+                               ("decomposed_bidir", 16, False, 1e-3),
+                               ("decomposed", 8, True, 1e-3),
+                               ("decomposed_q8", 0, False, 5e-2),
+                               ("decomposed_q8", 8, True, 5e-2)]:
+    g = jax.jit(jax.grad(loss(mode, chunks, rev), argnums=(0, 1, 2)))(x, w1, w2)
+    for a, b in zip(g, g_ref):
+        rel = (np.abs(np.asarray(a) - np.asarray(b)).max()
+               / (np.abs(np.asarray(b)).max() + 1e-9))
+        assert rel < tol, (mode, chunks, rev, rel)
+print("FULL_SWEEP_OK")
+"""
+
+
+def test_bidir_q8_reverse_sweep_4dev(subproc):
+    assert "FULL_SWEEP_OK" in subproc(_FULL_SWEEP, n_devices=4)
+
+
+_AR_SWEEP = r"""
+import functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import overlap
+
+mesh = Mesh(np.array(jax.devices()), ("model",))
+B, M, F, D = 2, 4, 256, 128
+y = jax.random.normal(jax.random.PRNGKey(0), (B, M, F), jnp.float32)
+w = jax.random.normal(jax.random.PRNGKey(1), (F, D)) / F**0.5
+
+def ar(mode, chunks=0):
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(None, None, "model"), P("model", None)),
+                       out_specs=P(None, None, None), check_vma=False)
+    def f(ys, ws):
+        return overlap.matmul_ar(ys, ws, "model", mode, chunks)
+    return np.asarray(f(y, w))
+
+ref = ar("xla")
+for mode, chunks in [("decomposed", 0), ("decomposed", 2), ("decomposed", 4),
+                     ("decomposed", 7),           # non-dividing chunk count
+                     ("decomposed_bidir", 0), ("decomposed_q8", 2),
+                     ("flux", 0)]:
+    out = ar(mode, chunks)
+    assert np.abs(out - ref).max() < 1e-3, (mode, chunks)
+
+# gradients through the decode seam
+def loss(mode, chunks=0):
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(None, None, "model"), P("model", None)),
+                       out_specs=P(), check_vma=False)
+    def f(ys, ws):
+        z = overlap.matmul_ar(ys, ws, "model", mode, chunks)
+        return jnp.sum(z * z)
+    return f
+g_ref = jax.jit(jax.grad(loss("xla"), argnums=(0, 1)))(y, w)
+for mode, chunks in [("decomposed", 0), ("decomposed", 4)]:
+    g = jax.jit(jax.grad(loss(mode, chunks), argnums=(0, 1)))(y, w)
+    for a, b in zip(g, g_ref):
+        rel = (np.abs(np.asarray(a) - np.asarray(b)).max()
+               / (np.abs(np.asarray(b)).max() + 1e-9))
+        assert rel < 1e-3, (mode, chunks, rel)
+print("AR_SWEEP_OK")
+"""
+
+
+def test_matmul_ar_mode_equivalence_4dev(subproc):
+    assert "AR_SWEEP_OK" in subproc(_AR_SWEEP, n_devices=4)
