@@ -57,6 +57,51 @@ def main(full: bool = False) -> None:
                                 else None) for r in res.table],
         })
 
+    # FusedOp fusion knobs: shared-gather (one ring pass for the gated
+    # FFN's w1/w3 pair) and epilogue fusion (silu-gate inside vs after the
+    # overlapped loop) — the PR-3 "what is fused" sweep.
+    for m in ms:
+        for shared in (True, False):
+            est = ect.model_overlap("ag", m, n, k, N_TP, "decomposed",
+                                    n_weights=2, shared_gather=shared,
+                                    epilogue=True, fuse_epilogue=True)
+            tag = "on" if shared else "off"
+            print(f"tuning_sharedgather_m{m}_{tag},{est['overall']*1e6:.0f},"
+                  f"{est['overall']*1e3:.3f}")
+            doc.setdefault("fusion", {}).setdefault("shared_gather", []).append(
+                {"m": m, "shared_gather": shared,
+                 "overall_s": est["overall"], "comm_s": est["comm"],
+                 "overlap_eff": est["overlap_eff"]})
+        for fuse in (True, False):
+            est = ect.model_overlap("ag", m, n, k, N_TP, "decomposed",
+                                    n_weights=2, shared_gather=True,
+                                    epilogue=True, fuse_epilogue=fuse)
+            tag = "on" if fuse else "off"
+            print(f"tuning_epifuse_m{m}_{tag},{est['overall']*1e6:.0f},"
+                  f"{est['overall']*1e3:.3f}")
+            doc.setdefault("fusion", {}).setdefault("fuse_epilogue", []).append(
+                {"m": m, "fuse_epilogue": fuse,
+                 "overall_s": est["overall"],
+                 "epilogue_s": est["epilogue"]})
+
+    # the tuner over the gated-FFN FusedOp (two weights + silu-gate): the
+    # fusion knobs compete inside the candidate table
+    m = 4096
+    res_g = autotune.tune_seam("ag", m, n, k, N_TP, seam="mlp_ag_gated",
+                               n_weights=2, epilogue=True)
+    pg = res_g.plan
+    print(f"tuning_fusedop_m{m}_pick_{pg.mode}_c{pg.comm_chunks}"
+          f"_sg{int(pg.shared_gather)}_fe{int(pg.fuse_epilogue)},"
+          f"{(pg.measured_s or pg.predicted_s)*1e6:.0f},{pg.source}")
+    doc["seams"].append({
+        "seam": "mlp_ag_gated", "kind": res_g.kind, "m": res_g.m,
+        "n": res_g.n, "k": res_g.k, "n_dev": res_g.n_dev,
+        "n_weights": 2, "epilogue": True,
+        "source": res_g.source, "plan": pg.to_json(),
+        "candidates": [dict(r, blocks=list(r["blocks"]) if r["blocks"]
+                            else None) for r in res_g.table],
+    })
+
     # Fig. 9 (pull/push analogue): ring direction.  On a torus both single
     # directions model identically (reverse is still a real knob — measured
     # tuning discriminates them on hardware with asymmetric links); the

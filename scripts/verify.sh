@@ -32,6 +32,31 @@ if grep -rn --include='*.py' -E \
 fi
 echo "ok"
 
+echo "== overlap API lint (seams go through FusedOp / ctx.op) =="
+# 1. overlap's private backends (rings, cores, q8 codecs, ...) are an
+#    implementation detail of src/repro/core/overlap.py — nothing else may
+#    reach into them.
+if grep -rn --include='*.py' -E \
+     'overlap\._|_ag_matmul_|_matmul_rs_(xla|decomposed|bidir|flux|impl)|_matmul_ar_|_ag_ring|_ag_bidir|_rs_ring|_rs_bidir|_rs_core|_ar_core|_fused_impl|_fused_ag|_q8_encode|_q8_decode' \
+     src/ benchmarks/ | grep -v '^src/repro/core/overlap.py'; then
+  echo "FAIL: private overlap backends referenced outside" >&2
+  echo "      src/repro/core/overlap.py (see above); use overlap.FusedOp" >&2
+  echo "      (model code: ctx.op(seam, epilogue=..., n_weights=...))." >&2
+  exit 1
+fi
+# 2. no legacy positional mode-threading: passing plan attributes
+#    (.mode/.comm_chunks/...) into the deprecated ag_matmul/matmul_rs/
+#    matmul_ar wrappers — seams resolve a FusedOp via ctx.op(seam) instead.
+if grep -rn --include='*.py' -E \
+     '(ag_matmul|matmul_rs|matmul_ar)\([^)]*\.(mode|comm_chunks|reverse|blocks)' \
+     src/ | grep -v '^src/repro/core/overlap.py'; then
+  echo "FAIL: legacy positional (mode, comm_chunks, ...) threading into the" >&2
+  echo "      deprecated overlap wrappers; resolve a FusedOp via" >&2
+  echo "      ctx.op(seam, ...) instead." >&2
+  exit 1
+fi
+echo "ok"
+
 echo "== tier-1 test suite =="
 if [[ "$FAST" == 1 ]]; then
   python -m pytest -x -q -m "not multidev" "$@"

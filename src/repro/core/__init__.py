@@ -1,6 +1,7 @@
 # FLUX core: fine-grained communication overlap for tensor parallelism.
 from repro.core.overlap import (  # noqa: F401
-    ag_matmul, matmul_rs, matmul_ar, ag_matmul_ref, matmul_rs_ref,
-    VALID_MODES,
+    Epilogue, FusedOp, VALID_KINDS, VALID_MODES,
+    ag_matmul, matmul_rs, matmul_ar,            # deprecated thin wrappers
+    ag_matmul_ref, matmul_rs_ref,
 )
 from repro.core import ect, planner  # noqa: F401

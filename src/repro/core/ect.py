@@ -87,13 +87,15 @@ def model_collective_time(shard_bytes: float, n_dev: int,
 
 
 # int8 gather payload relative to bf16: 1 byte/elt + one fp32 scale per
-# 128-block (ZeRO++-style; see overlap._Q8_BLOCK)
+# 128-block (ZeRO++-style; the q8 block size in repro/core/overlap.py)
 _Q8_BYTES_FACTOR = (1.0 + 4.0 / 128.0) / 2.0
 
 
 def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
                   mode: str, dtype_bytes: int = 2,
-                  comm_chunks: int = 0) -> Dict[str, float]:
+                  comm_chunks: int = 0, *, n_weights: int = 1,
+                  shared_gather: bool = True, epilogue: bool = False,
+                  fuse_epilogue: bool = True) -> Dict[str, float]:
     """Analytic OverallTime for one TP seam under each overlap strategy.
 
     seam="ag": C = AllGather_m(A[m/n,k]) @ B[k,n/n]   (per-device n_local=n/n_dev)
@@ -101,26 +103,45 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
     seam="ar": C = AllReduce(A[m,k/n] @ B[k/n,n])     (decode row-parallel)
     Modes: the ``overlap.VALID_MODES`` set — ``*_q8`` scales the AG payload
     by the int8+scales factor, ``decomposed_bidir`` rides both full-duplex
-    link directions (2 links).  Returns dict(overall, gemm, comm, exposed).
+    link directions (2 links).
+
+    FusedOp knobs (matching ``overlap.FusedOp``):
+      n_weights      — N weight GEMMs off one gathered activation (AG only;
+                       per-weight width n each, so GEMM time scales by N)
+      shared_gather  — one ring pass serves all N GEMMs; False rides N full
+                       rings (the pre-FusedOp double-gather)
+      epilogue       — an elementwise tail exists (bias/act/gate/residual)
+      fuse_epilogue  — the tail runs inside the overlapped loop / tile
+                       epilogue (register-resident, ~free); False pays a
+                       separate read-modify-write HBM pass over the output.
+                       AG only: rs/ar epilogues run once on the reduced
+                       output either way, so the knob is a no-op there and
+                       is not charged.
+    Returns dict(overall, gemm, comm, epilogue, exposed, ...).
     """
     base = mode[:-3] if mode.endswith("_q8") else mode
     links = 2 if mode == "decomposed_bidir" else 1
     if base == "decomposed_bidir":
         base = "decomposed"
     if seam == "ag":
-        gemm = model_gemm_time(m, n // n_dev, k, dtype_bytes)
+        gemm = model_gemm_time(m, n // n_dev, k, dtype_bytes) * n_weights
         comm_bytes = (m // n_dev) * k * dtype_bytes
         if mode.endswith("_q8"):          # int8 payload rides the gather
             comm_bytes *= _Q8_BYTES_FACTOR
-        comm = model_collective_time(comm_bytes, n_dev, "ag", links=links)
+        rings = 1 if shared_gather else n_weights   # saved ring hops
+        comm = model_collective_time(comm_bytes, n_dev, "ag",
+                                     links=links) * rings
+        out_elems = m * (n // n_dev) * n_weights
     elif seam == "rs":
         gemm = model_gemm_time(m, n, k // n_dev, dtype_bytes)
         comm_bytes = (m // n_dev) * n * dtype_bytes
         comm = model_collective_time(comm_bytes, n_dev, "rs", links=links)
+        out_elems = (m // n_dev) * n
     else:                                 # ar: full [m, n] output all-reduced
         gemm = model_gemm_time(m, n, k // n_dev, dtype_bytes)
         comm_bytes = m * n * dtype_bytes
         comm = model_collective_time(comm_bytes, n_dev, "ar", links=links)
+        out_elems = m * n
 
     launch_overhead = 5e-6          # per extra kernel launch (GPU-ish; the
     #                                 paper's "scheduling overheads" §2.2)
@@ -128,8 +149,8 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
         overall = gemm + comm
     elif base == "decomposed":      # medium-grained: per-chunk pipeline with
         # split-GEMM inefficiency (chunk rows = m/chunks) + launch overheads.
-        # AR chunks the CONTRACTION dim (m stays whole — see
-        # overlap._matmul_ar_decomposed), so it pays no m-split penalty.
+        # AR chunks the CONTRACTION dim (m stays whole — the kind="ar"
+        # FusedOp path), so it pays no m-split penalty.
         chunks = max(comm_chunks or n_dev, 1)
         penalty = (1.0 if seam == "ar" else
                    gemm_efficiency(m) / gemm_efficiency(max(m // chunks, 1)))
@@ -145,6 +166,15 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
         step_c = comm / max(n_dev - 1, 1)
         dma_overhead = 1.02         # fused-kernel bookkeeping
         overall = max(gemm * dma_overhead, comm) + step_c
+    # epilogue term: fused -> applied on register-resident chunks/tiles
+    # inside the overlapped loop (no extra HBM traffic); unfused -> a
+    # separate elementwise pass re-reads and re-writes the output.  Only
+    # AG has the per-chunk fusion path to buy back.
+    epi_s = 0.0
+    if seam == "ag" and epilogue and not fuse_epilogue:
+        epi_s = 3.0 * out_elems * dtype_bytes / HBM_BW
+        overall += epi_s
     exposed = overall - gemm
-    return dict(overall=overall, gemm=gemm, comm=comm, exposed=exposed,
-                ect=exposed, overlap_eff=1.0 - exposed / comm if comm else 0.0)
+    return dict(overall=overall, gemm=gemm, comm=comm, epilogue=epi_s,
+                exposed=exposed, ect=exposed,
+                overlap_eff=1.0 - exposed / comm if comm else 0.0)

@@ -1,36 +1,63 @@
 """FLUX-style communication/computation overlap ops (the paper's core).
 
-Three implementations of the two Megatron-TP seams, selectable per call:
+The public surface is ONE declarative op object::
 
-  ``mode="xla"``         non-overlapping baseline: one collective + one matmul
-                         (the paper's PyTorch+NCCL reference point).
-  ``mode="decomposed"``  medium/fine-grained chunked ring via ``ppermute``:
-                         the Wang-et-al./TransformerEngine analogue.  The chunk
-                         count (``comm_chunks``) is the paper's §4.3
-                         "communication tile size" knob; XLA's async
-                         collective-permute + latency-hiding scheduler overlap
-                         the chunk GEMMs with the ring hops on TPU.
-  ``mode="flux"``        the paper's contribution: ONE fused Pallas kernel per
-                         (GEMM, collective) pair — tile-granular remote DMA in
-                         the prologue (AllGather) / epilogue (ReduceScatter),
-                         semaphore waits instead of spin-signals, swizzled tile
-                         walk.  See ``repro/kernels/``.
+    FusedOp(kind="ag"|"rs"|"ar", axis=..., mode=..., comm_chunks=...,
+            reverse=..., blocks=..., epilogue=Epilogue(...), n_weights=N,
+            fuse_epilogue=True, shared_gather=True)
 
-All ops must be called inside ``compat.shard_map``; ``axis`` names the TP mesh
-axis.  Every op is differentiable via custom_vjp, and the backward pass uses
-the *interchanged* overlapped op (AG <-> RS), exactly as in the paper §2.1.
+    op(x, *weights, bias=..., scale=..., residual=...) -> Array | tuple
 
-Shapes follow the paper's Fig. 2 (sequence-sharded activations):
+``kind`` names the TP seam collective (paper Fig. 2 shapes):
 
-  ag_matmul   : x[B, S/N, D] , w[D, F/N]  ->  (AllGather S) @ w  = y[B, S, F/N]
-  matmul_rs   : y[B, S, F/N] , w[F/N, D]  ->  ReduceScatter_S(y @ w) = [B, S/N, D]
-  matmul_ar   : y[B, m, F/N] , w[F/N, D]  ->  AllReduce(y @ w)       = [B, m, D]
-                (decode path: m == 1 new token, no sequence sharding)
+  ag   x[B, S/N, D] , w[D, F/N]  ->  (AllGather S) @ w  = y[B, S, F/N]
+  rs   y[B, S, F/N] , w[F/N, D]  ->  ReduceScatter_S(y @ w) = [B, S/N, D]
+  ar   y[B, m, F/N] , w[F/N, D]  ->  AllReduce(y @ w)       = [B, m, D]
+       (decode path: m == 1 new token, no sequence sharding)
+
+``mode`` selects the transport (``VALID_MODES``): ``xla`` is the
+non-overlapping baseline, ``decomposed`` the chunked ``ppermute`` ring
+(``comm_chunks`` = the paper's §4.3 communication tile size, ``reverse``
+the pull/push ring direction), ``decomposed_bidir`` counter-rotating
+half-rings, ``*_q8`` int8 block-quantized gathers, and ``flux`` the paper's
+fused Pallas kernels (``repro/kernels/``).
+
+What makes the op *fused* (paper thesis: push neighboring compute into the
+communication loop):
+
+  * ``epilogue`` — a small declarative spec (bias add / activation /
+    gate-multiply / residual add / dequant scale).  On the ring transports
+    the epilogue is applied PER CHUNK inside the overlapped loop
+    (``fuse_epilogue=True``); the flux kernels apply bias+activation in the
+    tile epilogue.  ``rs``/``ar`` epilogues run on the reduced output
+    (residual adds fuse into the seam's tail).
+  * ``n_weights`` — multi-weight AllGather ops share ONE ring pass for N
+    weight GEMMs (gather once, multiply N times): the gated-FFN w1/w3 pair
+    rides a single AllGather instead of two, halving ring traffic
+    (``shared_gather=True``; ``False`` restores one ring per weight — a
+    plan-visible autotuner knob, like ``fuse_epilogue``).
+
+``custom_vjp`` is defined ONCE at the ``FusedOp`` level: the backward pass
+is the *interchanged* overlapped op (AG <-> RS, paper §2.1) applied to the
+epilogue-transposed cotangent, and multi-weight ops share one backward ring
+too (dX = RS(sum_i dY_i @ W_i^T) in a single ring pass) plus one activation
+re-gather for all dW_i.
+
+All ops must be called inside ``compat.shard_map``; ``axis`` names the TP
+mesh axis.  Model code never builds a ``FusedOp`` by hand — it resolves one
+through the plan registry: ``ctx.op(seam, epilogue=..., n_weights=...)``
+(i.e. ``ctx.plans.resolve(seam).op(...)``), so "what is fused" is a
+per-seam ``SeamPlan`` knob the autotuner sweeps, not a call-site constant.
+
+``ag_matmul`` / ``matmul_rs`` / ``matmul_ar`` remain as thin deprecated
+wrappers over ``FusedOp`` (one release; they warn once).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+import warnings
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +73,8 @@ Array = jax.Array
 VALID_MODES = ("xla", "decomposed", "flux", "xla_q8", "decomposed_q8",
                "decomposed_bidir")
 
+VALID_KINDS = ("ag", "rs", "ar")
+
 
 def _axis_size(axis: Optional[str]) -> int:
     if axis is None:
@@ -53,26 +82,73 @@ def _axis_size(axis: Optional[str]) -> int:
     return compat.axis_size(axis)
 
 
-def _axis_index(axis: str) -> Array:
-    return lax.axis_index(axis)
+# ---------------------------------------------------------------------------
+# Epilogue: the declarative "what is fused after the GEMM" spec
+# ---------------------------------------------------------------------------
+def _sqrelu(v):
+    return jnp.square(jax.nn.relu(v))
+
+
+ACTIVATIONS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+               "relu": jax.nn.relu, "sqrelu": _sqrelu}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Elementwise tail fused into a ``FusedOp``.
+
+    Application order (z starts as the first GEMM/collective output)::
+
+        z = z * scale          (scale=True;   per-column dequant multiply)
+        z = z + bias           (bias=True;    broadcast over rows)
+        gate == "pair" : z = act(z) * y2     (second weight's output)
+        gate == "split": z = act(a) * b      (a, b = split(z, 2, axis=-1))
+        else           : z = act(z)          (activation set)
+        z = z + residual       (residual=True)
+
+    Flags declare the SHAPE of the fusion (static, hashable — part of the
+    op's trace key); the operand ARRAYS (bias / scale / residual) are passed
+    at call time and participate in autodiff.
+    """
+    bias: bool = False
+    activation: Optional[str] = None          # ACTIVATIONS key
+    gate: Optional[str] = None                # None | "pair" | "split"
+    residual: bool = False
+    scale: bool = False
+
+    def __post_init__(self):
+        if self.activation is not None and self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {self.activation!r}")
+        if self.gate not in (None, "pair", "split"):
+            raise ValueError(f"unknown gate {self.gate!r}")
+
+    @property
+    def is_identity(self) -> bool:
+        return not (self.bias or self.activation or self.gate
+                    or self.residual or self.scale)
+
+    def apply(self, ys: Sequence[Array], bias=None, scale=None,
+              residual=None) -> Array:
+        z = ys[0]
+        if self.scale:
+            z = z * scale
+        if self.bias:
+            z = z + bias
+        act = ACTIVATIONS[self.activation] if self.activation else (lambda v: v)
+        if self.gate == "pair":
+            z = act(z) * ys[1]
+        elif self.gate == "split":
+            a, b = jnp.split(z, 2, axis=-1)
+            z = act(a) * b
+        elif self.activation:
+            z = act(z)
+        if self.residual:
+            z = z + residual
+        return z
 
 
 # ---------------------------------------------------------------------------
-# mode="xla": non-overlapping baseline
-# ---------------------------------------------------------------------------
-def _ag_matmul_xla(x: Array, w: Array, axis: str) -> Array:
-    full = lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
-    return jnp.einsum("...sd,df->...sf", full, w)
-
-
-def _matmul_rs_xla(y: Array, w: Array, axis: str) -> Array:
-    partial = jnp.einsum("...sf,fd->...sd", y, w)
-    return lax.psum_scatter(partial, axis, scatter_dimension=partial.ndim - 2,
-                            tiled=True)
-
-
-# ---------------------------------------------------------------------------
-# mode="decomposed": chunked ppermute ring (medium-grained; TE analogue)
+# Ring transports, generalized over an arbitrary per-chunk compute
 # ---------------------------------------------------------------------------
 def _ring_perm(axis: str, reverse: bool = False):
     n = compat.axis_size(axis)
@@ -81,151 +157,91 @@ def _ring_perm(axis: str, reverse: bool = False):
     return [(i, (i + 1) % n) for i in range(n)]
 
 
-def _ag_matmul_decomposed(x: Array, w: Array, axis: str, comm_chunks: int,
-                          reverse: bool = False) -> Array:
-    """AllGather-GEMM as a ring of shard hops, each hop's GEMM issued as soon
-    as its shard lands.  ``comm_chunks`` sub-divides each shard so the ring
-    moves smaller messages (finer overlap granularity, more hops);
-    ``reverse`` flips the ring direction (the paper's pull/push knob)."""
-    n = compat.axis_size(axis)
-    me = lax.axis_index(axis)
-    s_shard = x.shape[-2]
+def _sub_chunks(s_shard: int, n: int, comm_chunks: int) -> int:
     sub = max(1, comm_chunks // n) if comm_chunks else 1
     sub = min(sub, s_shard)
     while s_shard % sub:
         sub -= 1
-    pieces = jnp.split(x, sub, axis=-2) if sub > 1 else [x]
-
-    out_chunks = []  # (shard_owner_offset, sub_idx, y_chunk)
-    # step 0 consumes the LOCAL shard (paper: "signals for local tiles are
-    # preset to true"); subsequent steps consume the shard arriving from the
-    # left neighbor (ring order = rank+1, rank+2, ... — paper §4.3).
-    bufs = list(pieces)
-    for step in range(n):
-        for j, b in enumerate(bufs):
-            out_chunks.append((step, j, jnp.einsum("...sd,df->...sf", b, w)))
-        if step < n - 1:
-            bufs = [lax.ppermute(b, axis, _ring_perm(axis, reverse))
-                    for b in bufs]
-
-    # Assemble: at step k we held the shard of rank (me -+ k) mod n
-    # (forward ring receives from the left neighbor, reverse from the right).
-    sub_len = s_shard // sub
-    y = jnp.zeros((*x.shape[:-2], s_shard * n, w.shape[-1]), out_chunks[0][2].dtype)
-    for step, j, chunk in out_chunks:
-        owner = (me + step) % n if reverse else (me - step) % n
-        start = owner * s_shard + j * sub_len
-        y = lax.dynamic_update_slice_in_dim(y, chunk, start, axis=y.ndim - 2)
-    return y
+    return sub
 
 
-def _matmul_rs_decomposed(y: Array, w: Array, axis: str, comm_chunks: int,
-                          reverse: bool = False) -> Array:
-    """GEMM-ReduceScatter ring: at step s each device computes ONLY the output
-    chunk that the ring needs next, adds the partial arriving from its left
-    neighbor, and forwards.  The chunk GEMMs interleave with the hops (paper
-    Fig. 3, medium-grained)."""
+def _out_buffers(x: Array, seq_len: int, chunk_len: int,
+                 chunk_fn: Callable) -> list:
+    """Zero output buffers sized from the chunk_fn's abstract output."""
+    probe = jax.ShapeDtypeStruct((*x.shape[:-2], chunk_len, x.shape[-1]),
+                                 x.dtype)
+    shapes = jax.eval_shape(chunk_fn, probe)
+    return [jnp.zeros((*x.shape[:-2], seq_len, sh.shape[-1]), sh.dtype)
+            for sh in shapes]
+
+
+def _ag_ring(x: Array, axis: str, comm_chunks: int, reverse: bool,
+             chunk_fn: Callable, encode=None, decode=None) -> Tuple[Array, ...]:
+    """Chunked AllGather ring of shard hops: each landed chunk is consumed by
+    ``chunk_fn`` ([..., L, D] -> tuple of [..., L, W_b]) as soon as it
+    arrives, so the chunk GEMMs (and any fused epilogue) overlap with the
+    hops.  ``encode``/``decode`` optionally transform the ring payload
+    (int8 block quantization); the GEMM always sees the decoded chunk.
+    Ring order starts at the LOCAL shard (paper §4.3)."""
     n = compat.axis_size(axis)
     me = lax.axis_index(axis)
-    seq = y.shape[-2]
-    assert seq % n == 0, f"seq {seq} not divisible by TP {n}"
-    s_shard = seq // n
+    s_shard = x.shape[-2]
+    sub = _sub_chunks(s_shard, n, comm_chunks)
+    sub_len = s_shard // sub
 
-    def chunk_partial(owner):
-        ys = lax.dynamic_slice_in_dim(y, owner * s_shard, s_shard, axis=y.ndim - 2)
-        return jnp.einsum("...sf,fd->...sd", ys, w)
+    payloads = encode(x) if encode else (x,)
+    pieces = [jnp.split(p, sub, axis=-2) if sub > 1 else [p]
+              for p in payloads]
+    bufs = [tuple(pieces[pi][j] for pi in range(len(payloads)))
+            for j in range(sub)]
 
-    # Ring reduce-scatter: the buffer created by device d at step 0 is for
-    # owner (d + n-1) (forward) / (d - (n-1)) (reverse); after each hop the
-    # holder adds its own partial for that owner.  After n-1 hops the buffer
-    # for owner X lands on device X with all n partials summed.
-    def owner_at(s):
-        return ((me - (n - 1 - s)) % n if reverse
-                else (me + n - 1 - s) % n)
-
-    acc = chunk_partial(owner_at(0))
-    for s in range(1, n):
-        acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
-        acc = acc + chunk_partial(owner_at(s))
-    return acc
-
-
-def _matmul_ar_decomposed(y: Array, w: Array, axis: str, comm_chunks: int) -> Array:
-    """Decode-path GEMM+AllReduce, chunked along the contraction dim so each
-    partial psum overlaps with the next chunk's GEMM."""
-    n = compat.axis_size(axis)
-    k = y.shape[-1]
-    chunks = comm_chunks if comm_chunks else n
-    chunks = max(1, min(chunks, k))
-    while k % chunks:
-        chunks -= 1
-    ck = k // chunks
-    parts = []
-    for c in range(chunks):
-        yc = lax.dynamic_slice_in_dim(y, c * ck, ck, axis=y.ndim - 1)
-        wc = lax.dynamic_slice_in_dim(w, c * ck, ck, axis=0)
-        parts.append(lax.psum(jnp.einsum("...mf,fd->...md", yc, wc), axis))
-    out = parts[0]
-    for p in parts[1:]:
-        out = out + p
-    return out
+    ys = _out_buffers(x, s_shard * n, sub_len, chunk_fn)
+    for step in range(n):
+        # step 0 consumes the LOCAL shard ("local signals preset to true");
+        # later steps consume the shard arriving from the neighbor.
+        owner = (me + step) % n if reverse else (me - step) % n
+        for j, buf in enumerate(bufs):
+            piece = decode(buf) if decode else buf[0]
+            chunks = chunk_fn(piece)
+            start = owner * s_shard + j * sub_len
+            for b, ch in enumerate(chunks):
+                ys[b] = lax.dynamic_update_slice_in_dim(
+                    ys[b], ch, start, axis=ys[b].ndim - 2)
+        if step < n - 1:
+            bufs = [tuple(lax.ppermute(p, axis, _ring_perm(axis, reverse))
+                          for p in buf) for buf in bufs]
+    return tuple(ys)
 
 
-# ---------------------------------------------------------------------------
-# decomposed_bidir: counter-rotating half-rings (beyond-paper).  ICI torus
-# links are full-duplex PER DIRECTION: splitting the ring into two opposite
-# half-volume rings halves the per-link traffic -> ~2x on ring-bound seams.
-# ---------------------------------------------------------------------------
-def _ag_matmul_bidir(x: Array, w: Array, axis: str, comm_chunks: int) -> Array:
+def _ag_bidir(x: Array, axis: str, comm_chunks: int,
+              chunk_fn: Callable) -> Tuple[Array, ...]:
+    """Counter-rotating half-rings (beyond-paper): ICI torus links are
+    full-duplex PER DIRECTION, so two opposite half-volume rings halve the
+    per-link traffic (~2x on ring-bound seams)."""
     n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     s_shard = x.shape[-2]
     half = s_shard // 2
     if half == 0 or s_shard % 2:
-        return _ag_matmul_decomposed(x, w, axis, comm_chunks)
+        return _ag_ring(x, axis, comm_chunks, False, chunk_fn)
     lo, hi = jnp.split(x, 2, axis=-2)          # top rides right, bottom left
 
-    y = jnp.zeros((*x.shape[:-2], s_shard * n, w.shape[-1]),
-                  jnp.result_type(x.dtype, w.dtype))
+    ys = _out_buffers(x, s_shard * n, half, chunk_fn)
     buf_r, buf_l = lo, hi
     for step in range(n):
         owner_r = (me - step) % n
         owner_l = (me + step) % n
-        y = lax.dynamic_update_slice_in_dim(
-            y, jnp.einsum("...sd,df->...sf", buf_r, w),
-            owner_r * s_shard, axis=y.ndim - 2)
-        y = lax.dynamic_update_slice_in_dim(
-            y, jnp.einsum("...sd,df->...sf", buf_l, w),
-            owner_l * s_shard + half, axis=y.ndim - 2)
+        cr = chunk_fn(buf_r)
+        cl = chunk_fn(buf_l)
+        for b in range(len(ys)):
+            ys[b] = lax.dynamic_update_slice_in_dim(
+                ys[b], cr[b], owner_r * s_shard, axis=ys[b].ndim - 2)
+            ys[b] = lax.dynamic_update_slice_in_dim(
+                ys[b], cl[b], owner_l * s_shard + half, axis=ys[b].ndim - 2)
         if step < n - 1:
             buf_r = lax.ppermute(buf_r, axis, _ring_perm(axis))
             buf_l = lax.ppermute(buf_l, axis, _ring_perm(axis, reverse=True))
-    return y
-
-
-def _matmul_rs_bidir(y: Array, w: Array, axis: str, comm_chunks: int) -> Array:
-    n = compat.axis_size(axis)
-    me = lax.axis_index(axis)
-    seq = y.shape[-2]
-    s_shard = seq // n
-    if s_shard % 2:
-        return _matmul_rs_decomposed(y, w, axis, comm_chunks)
-    half = s_shard // 2
-
-    def partial(owner, top: bool):
-        off = owner * s_shard + (0 if top else half)
-        ys = lax.dynamic_slice_in_dim(y, off, half, axis=y.ndim - 2)
-        return jnp.einsum("...sf,fd->...sd", ys, w)
-
-    # top halves accumulate rightward, bottom halves leftward
-    acc_r = partial((me + n - 1) % n, True)
-    acc_l = partial((me - (n - 1)) % n, False)
-    for s_ in range(1, n):
-        acc_r = lax.ppermute(acc_r, axis, _ring_perm(axis))
-        acc_l = lax.ppermute(acc_l, axis, _ring_perm(axis, reverse=True))
-        acc_r = acc_r + partial((me + n - 1 - s_) % n, True)
-        acc_l = acc_l + partial((me - (n - 1) + s_) % n, False)
-    return jnp.concatenate([acc_r, acc_l], axis=y.ndim - 2)
+    return tuple(ys)
 
 
 # ---------------------------------------------------------------------------
@@ -250,102 +266,142 @@ def _q8_decode(q: Array, scale: Array, dtype) -> Array:
     return (xb * scale[..., None]).reshape(*q.shape).astype(dtype)
 
 
-def _ag_matmul_q8(x: Array, w: Array, axis: str, base: str, comm_chunks: int,
-                  reverse: bool = False) -> Array:
-    """Int8-gathered AG-GEMM.  ``base`` selects the transport: ``xla`` issues
-    one monolithic all_gather of the quantized payload; ``decomposed`` rides
-    the chunked ppermute ring so the per-hop dequant+GEMMs overlap with the
-    hops exactly like the fp ring (the int8 payload additionally halves the
-    ring bytes)."""
+def _gather_full(x: Array, axis: str, q8: bool) -> Array:
+    """Monolithic (xla-mode) sequence gather, optionally int8-compressed."""
+    if not q8:
+        return lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
     q, sc = _q8_encode(x)
-    if base != "decomposed":
-        qf = lax.all_gather(q, axis, axis=q.ndim - 2, tiled=True)
-        sf = lax.all_gather(sc, axis, axis=sc.ndim - 2, tiled=True)
-        full = _q8_decode(qf, sf, x.dtype)
-        return jnp.einsum("...sd,df->...sf", full, w)
+    qf = lax.all_gather(q, axis, axis=q.ndim - 2, tiled=True)
+    sf = lax.all_gather(sc, axis, axis=sc.ndim - 2, tiled=True)
+    return _q8_decode(qf, sf, x.dtype)
 
+
+# ---------------------------------------------------------------------------
+# GEMM-ReduceScatter transports (single ring pass even for multiple pairs)
+# ---------------------------------------------------------------------------
+def _rs_partial(ys: Tuple[Array, ...], ws: Tuple[Array, ...], owner,
+                s_shard: int, length: Optional[int] = None,
+                offset: int = 0):
+    """sum_i ys_i[owner's seq rows] @ ws_i — the per-owner partial of the
+    multi-pair reduce-scatter (one ring carries the SUMMED partial)."""
+    length = s_shard if length is None else length
+    acc = None
+    for y, w in zip(ys, ws):
+        ysl = lax.dynamic_slice_in_dim(y, owner * s_shard + offset, length,
+                                       axis=y.ndim - 2)
+        p = jnp.einsum("...sf,fd->...sd", ysl, w)
+        acc = p if acc is None else acc + p
+    return acc
+
+
+def _rs_ring(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis: str,
+             comm_chunks: int, reverse: bool) -> Array:
+    """GEMM-ReduceScatter ring: at step s each device computes ONLY the
+    output chunk the ring needs next, adds the partial arriving from its
+    neighbor, and forwards (paper Fig. 3, medium-grained)."""
     n = compat.axis_size(axis)
     me = lax.axis_index(axis)
-    s_shard = x.shape[-2]
-    sub = max(1, comm_chunks // n) if comm_chunks else 1
-    sub = min(sub, s_shard)
-    while s_shard % sub:
-        sub -= 1
-    q_pieces = jnp.split(q, sub, axis=-2) if sub > 1 else [q]
-    s_pieces = jnp.split(sc, sub, axis=-2) if sub > 1 else [sc]
+    seq = ys[0].shape[-2]
+    assert seq % n == 0, f"seq {seq} not divisible by TP {n}"
+    s_shard = seq // n
 
-    sub_len = s_shard // sub
-    y = jnp.zeros((*x.shape[:-2], s_shard * n, w.shape[-1]),
-                  jnp.result_type(x.dtype, w.dtype))
-    bufs = list(zip(q_pieces, s_pieces))
-    for step in range(n):
-        owner = (me + step) % n if reverse else (me - step) % n
-        for j, (bq, bs) in enumerate(bufs):
-            piece = _q8_decode(bq, bs, x.dtype)
-            chunk = jnp.einsum("...sd,df->...sf", piece, w)
-            start = owner * s_shard + j * sub_len
-            y = lax.dynamic_update_slice_in_dim(y, chunk, start,
-                                                axis=y.ndim - 2)
-        if step < n - 1:
-            bufs = [(lax.ppermute(bq, axis, _ring_perm(axis, reverse)),
-                     lax.ppermute(bs, axis, _ring_perm(axis, reverse)))
-                    for bq, bs in bufs]
-    return y
+    def owner_at(s):
+        return ((me - (n - 1 - s)) % n if reverse
+                else (me + n - 1 - s) % n)
+
+    acc = _rs_partial(ys, ws, owner_at(0), s_shard)
+    for s in range(1, n):
+        acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
+        acc = acc + _rs_partial(ys, ws, owner_at(s), s_shard)
+    return acc
+
+
+def _rs_bidir(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis: str,
+              comm_chunks: int) -> Array:
+    n = compat.axis_size(axis)
+    me = lax.axis_index(axis)
+    seq = ys[0].shape[-2]
+    s_shard = seq // n
+    if s_shard % 2:
+        return _rs_ring(ys, ws, axis, comm_chunks, False)
+    half = s_shard // 2
+
+    def partial(owner, top: bool):
+        return _rs_partial(ys, ws, owner, s_shard, half,
+                           0 if top else half)
+
+    # top halves accumulate rightward, bottom halves leftward
+    acc_r = partial((me + n - 1) % n, True)
+    acc_l = partial((me - (n - 1)) % n, False)
+    for s_ in range(1, n):
+        acc_r = lax.ppermute(acc_r, axis, _ring_perm(axis))
+        acc_l = lax.ppermute(acc_l, axis, _ring_perm(axis, reverse=True))
+        acc_r = acc_r + partial((me + n - 1 - s_) % n, True)
+        acc_l = acc_l + partial((me - (n - 1) + s_) % n, False)
+    return jnp.concatenate([acc_r, acc_l], axis=acc_r.ndim - 2)
+
+
+def _rs_core(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis, mode: str,
+             comm_chunks: int, reverse: bool, blocks) -> Array:
+    """sum_i ReduceScatter_seq(ys_i @ ws_i) with ONE collective pass."""
+    if mode.endswith("_q8"):
+        mode = mode[:-3]     # RS partials keep full precision (they SUM)
+    if axis is None or _axis_size(axis) == 1:
+        acc = None
+        for y, w in zip(ys, ws):
+            p = jnp.einsum("...sf,fd->...sd", y, w)
+            acc = p if acc is None else acc + p
+        return acc
+    if mode == "flux" and not _flux_available():
+        mode = "decomposed"
+    if mode == "xla":
+        acc = None
+        for y, w in zip(ys, ws):
+            p = jnp.einsum("...sf,fd->...sd", y, w)
+            acc = p if acc is None else acc + p
+        return lax.psum_scatter(acc, axis, scatter_dimension=acc.ndim - 2,
+                                tiled=True)
+    if mode == "flux":
+        # multi-pair RS == single RS of the concatenated operands (the
+        # contraction dim stacks): still one fused kernel / one ring pass.
+        y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=-1)
+        w = ws[0] if len(ws) == 1 else jnp.concatenate(ws, axis=0)
+        return _rs_flux(y, w, axis, reverse, blocks)
+    if mode == "decomposed_bidir":
+        return _rs_bidir(ys, ws, axis, comm_chunks)
+    return _rs_ring(ys, ws, axis, comm_chunks, reverse)
+
+
+def _ar_core(y: Array, w: Array, axis, mode: str, comm_chunks: int) -> Array:
+    """AllReduce(y @ w) — the decode-path row-parallel GEMM, chunked along
+    the contraction dim so each partial psum overlaps with the next chunk's
+    GEMM (``decomposed*``); xla/flux use one monolithic psum (one-token
+    GEMMs are latency- not bandwidth-bound)."""
+    if axis is None or _axis_size(axis) == 1:
+        return jnp.einsum("...mf,fd->...md", y, w)
+    if mode.startswith("decomposed"):
+        n = compat.axis_size(axis)
+        k = y.shape[-1]
+        chunks = comm_chunks if comm_chunks else n
+        chunks = max(1, min(chunks, k))
+        while k % chunks:
+            chunks -= 1
+        ck = k // chunks
+        parts = []
+        for c in range(chunks):
+            yc = lax.dynamic_slice_in_dim(y, c * ck, ck, axis=y.ndim - 1)
+            wc = lax.dynamic_slice_in_dim(w, c * ck, ck, axis=0)
+            parts.append(lax.psum(jnp.einsum("...mf,fd->...md", yc, wc), axis))
+        out = parts[0]
+        for p in parts[1:]:
+            out = out + p
+        return out
+    return lax.psum(jnp.einsum("...mf,fd->...md", y, w), axis)
 
 
 # ---------------------------------------------------------------------------
 # mode="flux": fused Pallas kernels (see repro/kernels/)
 # ---------------------------------------------------------------------------
-def _blocks_kw(blocks) -> dict:
-    if blocks is None:
-        return {}
-    bm, bk, bn = blocks
-    return {"bm": bm, "bk": bk, "bn": bn}
-
-
-def _ag_matmul_flux(x: Array, w: Array, axis: str, reverse: bool = False,
-                    blocks=None) -> Array:
-    from repro.kernels import ops as kops
-    # Kernels operate on [m_shard, k] @ [k, n] 2-D operands and gather along
-    # m in SHARD-MAJOR order.  Move the (sharded) sequence dim to the front so
-    # shard-major == sequence order, then flatten the batch dims into m.
-    n = _axis_size(axis)
-    lead = x.shape[:-2]
-    xt = jnp.moveaxis(x, -2, 0)                        # [S/N, *lead, D]
-    x2 = xt.reshape((-1, x.shape[-1]))                 # [(S/N)*B_flat, D]
-    y2 = kops.ag_matmul_fused(x2, w, axis_name=axis, reverse=reverse,
-                              **_blocks_kw(blocks))    # [S*B_flat, F/N]
-    yt = y2.reshape((x.shape[-2] * n, *lead, w.shape[-1]))
-    return jnp.moveaxis(yt, 0, -2)                     # [*lead, S, F/N]
-
-
-def _matmul_rs_flux(y: Array, w: Array, axis: str, reverse: bool = False,
-                    blocks=None) -> Array:
-    from repro.kernels import ops as kops
-    n = _axis_size(axis)
-    lead = y.shape[:-2]
-    yt = jnp.moveaxis(y, -2, 0)                        # [S, *lead, F/N]
-    y2 = yt.reshape((-1, y.shape[-1]))
-    o2 = kops.matmul_rs_fused(y2, w, axis_name=axis, reverse=reverse,
-                              **_blocks_kw(blocks))    # [S/N * B_flat, D]
-    ot = o2.reshape((y.shape[-2] // n, *lead, w.shape[-1]))
-    return jnp.moveaxis(ot, 0, -2)                     # [*lead, S/N, D]
-
-
-# ---------------------------------------------------------------------------
-# Public, differentiable API
-# ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def ag_matmul(x: Array, w: Array, axis: Optional[str] = None,
-              mode: str = "decomposed", comm_chunks: int = 0,
-              reverse: bool = False,
-              blocks: Optional[Tuple[int, int, int]] = None) -> Array:
-    """(AllGather along seq) @ w, overlapped per ``mode``.  ``reverse`` flips
-    the ring direction (pull/push analogue); ``blocks`` overrides the fused
-    kernel's (bm, bk, bn) tile preference (None -> auto)."""
-    return _ag_matmul_impl(x, w, axis, mode, comm_chunks, reverse, blocks)
-
-
 def _flux_available() -> bool:
     """Flux seams compose several remote-DMA kernels into one jitted program
     (fwd AG + bwd RS, or both MLP seams); on JAX generations where the
@@ -355,125 +411,354 @@ def _flux_available() -> bool:
     return compat.fused_collective_kernels_composable()
 
 
-def _ag_matmul_impl(x, w, axis, mode, comm_chunks, reverse=False,
-                    blocks=None):
-    assert mode in VALID_MODES, mode
-    if axis is None or _axis_size(axis) == 1:
-        return jnp.einsum("...sd,df->...sf", x, w)
-    if mode == "xla":
-        return _ag_matmul_xla(x, w, axis)
+def _blocks_kw(blocks) -> dict:
+    if blocks is None:
+        return {}
+    bm, bk, bn = blocks
+    return {"bm": bm, "bk": bk, "bn": bn}
+
+
+def _ag_flux(x: Array, w: Array, axis: str, reverse: bool, blocks,
+             activation: Optional[str] = None,
+             bias: Optional[Array] = None) -> Array:
+    from repro.kernels import ops as kops
+    # Kernels operate on [m_shard, k] @ [k, n] 2-D operands and gather along
+    # m in SHARD-MAJOR order.  Move the (sharded) sequence dim to the front so
+    # shard-major == sequence order, then flatten the batch dims into m.
+    n = _axis_size(axis)
+    lead = x.shape[:-2]
+    xt = jnp.moveaxis(x, -2, 0)                        # [S/N, *lead, D]
+    x2 = xt.reshape((-1, x.shape[-1]))                 # [(S/N)*B_flat, D]
+    y2 = kops.ag_matmul_fused(x2, w, axis_name=axis, reverse=reverse,
+                              activation=activation, bias=bias,
+                              **_blocks_kw(blocks))    # [S*B_flat, F/N]
+    yt = y2.reshape((x.shape[-2] * n, *lead, w.shape[-1]))
+    return jnp.moveaxis(yt, 0, -2)                     # [*lead, S, F/N]
+
+
+def _rs_flux(y: Array, w: Array, axis: str, reverse: bool, blocks,
+             activation: Optional[str] = None,
+             bias: Optional[Array] = None) -> Array:
+    from repro.kernels import ops as kops
+    n = _axis_size(axis)
+    lead = y.shape[:-2]
+    yt = jnp.moveaxis(y, -2, 0)                        # [S, *lead, F/N]
+    y2 = yt.reshape((-1, y.shape[-1]))
+    o2 = kops.matmul_rs_fused(y2, w, axis_name=axis, reverse=reverse,
+                              activation=activation, bias=bias,
+                              **_blocks_kw(blocks))    # [S/N * B_flat, D]
+    ot = o2.reshape((y.shape[-2] // n, *lead, w.shape[-1]))
+    return jnp.moveaxis(ot, 0, -2)                     # [*lead, S/N, D]
+
+
+# ---------------------------------------------------------------------------
+# FusedOp: the declarative op object
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FusedOp:
+    """One TP-seam collective-matmul with a fused epilogue (module docstring
+    for semantics).  Frozen + hashable: the op itself is the custom_vjp's
+    static configuration, so equal plans share one trace."""
+    kind: str
+    axis: Optional[str] = None
+    mode: str = "decomposed"
+    comm_chunks: int = 0
+    reverse: bool = False
+    blocks: Optional[Tuple[int, int, int]] = None
+    epilogue: Epilogue = Epilogue()
+    n_weights: int = 1
+    fuse_epilogue: bool = True
+    shared_gather: bool = True
+
+    def __post_init__(self):
+        if self.kind not in VALID_KINDS:
+            raise ValueError(f"invalid kind {self.kind!r}")
+        if self.mode not in VALID_MODES:
+            raise ValueError(f"invalid overlap mode {self.mode!r}")
+        if self.n_weights < 1:
+            raise ValueError("n_weights must be >= 1")
+        if self.kind != "ag" and self.n_weights != 1:
+            raise ValueError(f"kind={self.kind!r} ops take exactly one weight")
+        if self.epilogue.gate == "pair":
+            if self.kind != "ag" or self.n_weights != 2:
+                raise ValueError('gate="pair" needs an ag op with n_weights=2')
+        elif self.n_weights > 1 and not self.epilogue.is_identity:
+            raise ValueError("multi-output ops (n_weights>1 without "
+                             'gate="pair") require an identity epilogue')
+        if self.blocks is not None:
+            object.__setattr__(self, "blocks", tuple(self.blocks))
+
+    @staticmethod
+    def from_plan(kind: str, plan, axis: Optional[str] = None,
+                  epilogue: Optional[Epilogue] = None,
+                  n_weights: int = 1) -> "FusedOp":
+        """Bind a tuning ``SeamPlan`` (duck-typed: anything with
+        mode/comm_chunks/...) to a concrete seam op."""
+        blocks = getattr(plan, "blocks", None)
+        return FusedOp(
+            kind=kind, axis=axis, mode=plan.mode,
+            comm_chunks=plan.comm_chunks,
+            reverse=getattr(plan, "reverse", False),
+            blocks=tuple(blocks) if blocks else None,
+            epilogue=epilogue if epilogue is not None else Epilogue(),
+            n_weights=n_weights,
+            fuse_epilogue=getattr(plan, "fuse_epilogue", True),
+            shared_gather=getattr(plan, "shared_gather", True))
+
+    @property
+    def combines(self) -> bool:
+        """True when the op returns ONE array (single weight or pair-gate);
+        False -> tuple of per-weight outputs."""
+        return self.n_weights == 1 or self.epilogue.gate == "pair"
+
+    def __call__(self, x: Array, *ws: Array, bias=None, scale=None,
+                 residual=None):
+        if len(ws) != self.n_weights:
+            raise ValueError(f"expected {self.n_weights} weights, "
+                             f"got {len(ws)}")
+        epi = self.epilogue
+        for flag, name, val in ((epi.bias, "bias", bias),
+                                (epi.scale, "scale", scale),
+                                (epi.residual, "residual", residual)):
+            if flag != (val is not None):
+                raise ValueError(
+                    f"epilogue.{name}={flag} but {name} operand "
+                    f"{'missing' if flag else 'given'}")
+        return _fused(self, x, tuple(ws), bias, scale, residual)
+
+
+def _apply_epilogue(op: FusedOp, ys: Sequence[Array], bias, scale, residual):
+    """Epilogue at the op level: combine to one array, or pass the
+    per-weight outputs through as a tuple (identity epilogue)."""
+    if op.combines:
+        return op.epilogue.apply(ys, bias=bias, scale=scale,
+                                 residual=residual)
+    return tuple(ys)
+
+
+# ---------------------------------------------------------------------------
+# forward implementations
+# ---------------------------------------------------------------------------
+def _fused_ag(op: FusedOp, x, ws, bias, scale, residual):
+    epi = op.epilogue
+    mode = op.mode
+    if op.axis is None or _axis_size(op.axis) == 1:
+        ys = [jnp.einsum("...sd,df->...sf", x, w) for w in ws]
+        return _apply_epilogue(op, ys, bias, scale, residual)
+
     if mode == "flux":
         if _flux_available():
-            return _ag_matmul_flux(x, w, axis, reverse, blocks)
-        return _ag_matmul_decomposed(x, w, axis, comm_chunks, reverse)
-    if mode.endswith("_q8"):
-        return _ag_matmul_q8(x, w, axis, mode[:-3], comm_chunks, reverse)
-    if mode == "decomposed_bidir":
-        return _ag_matmul_bidir(x, w, axis, comm_chunks)
-    return _ag_matmul_decomposed(x, w, axis, comm_chunks, reverse)
+            return _fused_ag_flux(op, x, ws, bias, scale, residual)
+        mode = "decomposed"
 
+    if mode in ("xla", "xla_q8"):
+        full = _gather_full(x, op.axis, mode == "xla_q8")
+        ys = [jnp.einsum("...sd,df->...sf", full, w) for w in ws]
+        return _apply_epilogue(op, ys, bias, scale, residual)
 
-def _ag_matmul_fwd(x, w, axis, mode, comm_chunks, reverse, blocks):
-    return _ag_matmul_impl(x, w, axis, mode, comm_chunks, reverse,
-                           blocks), (x, w)
+    # ring transports: the epilogue fuses PER CHUNK inside the overlapped
+    # loop (residual is row-indexed by global position -> applied after
+    # assembly; everything else is chunk-local).
+    per_chunk = (op.fuse_epilogue and op.combines and not epi.is_identity
+                 and (op.shared_gather or op.n_weights == 1))
+    epi_chunk = dataclasses.replace(epi, residual=False)
 
+    def chunk_fn(xc):
+        ys = [jnp.einsum("...sd,df->...sf", xc, w) for w in ws]
+        if per_chunk:
+            return (epi_chunk.apply(ys, bias=bias, scale=scale),)
+        return tuple(ys)
 
-def _ag_matmul_bwd(axis, mode, comm_chunks, reverse, blocks, res, g):
-    x, w = res
-    # dX: GEMM + ReduceScatter — the interchanged overlapped op (blocks are
-    # tuned for the forward shape; let the transposed op auto-plan its own).
-    dx = _matmul_rs_impl(g, w.T, axis, mode, comm_chunks, reverse)
-    # dW: contraction over gathered tokens (the re-gather is unavoidable —
-    # a "sequence-partial + psum" variant was tried and REFUTED: each
-    # device's g covers different weight columns, so shard-partials cannot
-    # be psum-combined; see EXPERIMENTS.md §Perf iteration log).
-    if axis is None or _axis_size(axis) == 1:
-        xf = x
+    def run(fn):
+        if mode == "decomposed_bidir":
+            return _ag_bidir(x, op.axis, op.comm_chunks, fn)
+        if mode == "decomposed_q8":
+            return _ag_ring(x, op.axis, op.comm_chunks, op.reverse, fn,
+                            encode=_q8_encode,
+                            decode=lambda buf: _q8_decode(buf[0], buf[1],
+                                                          x.dtype))
+        return _ag_ring(x, op.axis, op.comm_chunks, op.reverse, fn)
+
+    if op.shared_gather or op.n_weights == 1:
+        outs = run(chunk_fn)          # ONE ring pass for all weights
     else:
-        xf = lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
-    dw = jnp.einsum("...sd,...sf->df", xf, g)
-    return dx.astype(x.dtype), dw.astype(w.dtype)
+        outs = tuple(run(lambda xc, w=w: (jnp.einsum("...sd,df->...sf",
+                                                     xc, w),))[0]
+                     for w in ws)     # legacy: one ring per weight
+
+    if per_chunk:
+        out = outs[0]
+        if epi.residual:
+            out = out + residual
+        return out
+    return _apply_epilogue(op, list(outs), bias, scale, residual)
 
 
-ag_matmul.defvjp(_ag_matmul_fwd, _ag_matmul_bwd)
+def _fused_ag_flux(op: FusedOp, x, ws, bias, scale, residual):
+    epi = op.epilogue
+    # single-weight bias/activation fuse into the kernel's tile epilogue
+    if (op.n_weights == 1 and op.fuse_epilogue and not epi.scale
+            and epi.gate is None):
+        y = _ag_flux(x, ws[0], op.axis, op.reverse, op.blocks,
+                     activation=epi.activation,
+                     bias=bias if epi.bias else None)
+        if epi.residual:
+            y = y + residual
+        return y
+    if op.n_weights > 1 and op.shared_gather:
+        # shared gather via one kernel over the column-stacked weights:
+        # gather once, one ring of DMA hops, split the local outputs.
+        wcat = jnp.concatenate(ws, axis=-1)
+        ycat = _ag_flux(x, wcat, op.axis, op.reverse, op.blocks)
+        offs, splits = 0, []
+        for w in ws[:-1]:
+            offs += w.shape[-1]
+            splits.append(offs)
+        ys = jnp.split(ycat, splits, axis=-1)
+    else:
+        ys = [_ag_flux(x, w, op.axis, op.reverse, op.blocks) for w in ws]
+    return _apply_epilogue(op, ys, bias, scale, residual)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _fused_z(op: FusedOp, x, ws):
+    """Pre-epilogue output of an rs/ar op (the collective's result)."""
+    if op.kind == "rs":
+        return _rs_core((x,), ws, op.axis, op.mode, op.comm_chunks,
+                        op.reverse, op.blocks)
+    return _ar_core(x, ws[0], op.axis, op.mode, op.comm_chunks)
+
+
+def _fused_impl(op: FusedOp, x, ws, bias, scale, residual):
+    if op.kind == "ag":
+        return _fused_ag(op, x, ws, bias, scale, residual)
+    z = _fused_z(op, x, ws)
+    return op.epilogue.apply([z], bias=bias, scale=scale, residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp — ONCE, at the FusedOp level
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused(op: FusedOp, x, ws, bias, scale, residual):
+    return _fused_impl(op, x, ws, bias, scale, residual)
+
+
+def _fused_fwd(op: FusedOp, x, ws, bias, scale, residual):
+    if op.kind == "ag":
+        # pre-epilogue activations are RE-DERIVED in bwd from the dW
+        # re-gather (one all_gather serves the epilogue-vjp AND every dW)
+        out = _fused_ag(op, x, ws, bias, scale, residual)
+        return out, (x, ws, None, bias, scale, residual)
+    z = _fused_z(op, x, ws)
+    out = op.epilogue.apply([z], bias=bias, scale=scale, residual=residual)
+    return out, (x, ws, z, bias, scale, residual)
+
+
+def _fused_bwd(op: FusedOp, res, g):
+    x, ws, z, bias, scale, residual = res
+    epi = op.epilogue
+    single = op.axis is None or _axis_size(op.axis) == 1
+
+    if op.kind == "ag":
+        # the dW contraction needs the gathered activation anyway (a
+        # "sequence-partial + psum" variant was tried and REFUTED: each
+        # device's g covers different weight columns, so shard-partials
+        # cannot be psum-combined; see EXPERIMENTS.md §Perf iteration log)
+        xf = x if single else lax.all_gather(x, op.axis, axis=x.ndim - 2,
+                                             tiled=True)
+        ys = tuple(jnp.einsum("...sd,df->...sf", xf, w) for w in ws)
+
+        def epi_fn(ys_, bias_, scale_, residual_):
+            if op.combines:
+                return epi.apply(ys_, bias=bias_, scale=scale_,
+                                 residual=residual_)
+            return tuple(ys_)
+
+        _, epi_vjp = jax.vjp(epi_fn, ys, bias, scale, residual)
+        dys, dbias, dscale, dres = epi_vjp(g)
+        # dX: GEMM + ReduceScatter — the interchanged op, ONE ring pass for
+        # all weights (blocks are tuned for the forward shape; the
+        # transposed op auto-plans its own).
+        wts = tuple(w.T for w in ws)
+        if single:
+            dx = None
+            for dy, wt in zip(dys, wts):
+                p = jnp.einsum("...sf,fd->...sd", dy, wt)
+                dx = p if dx is None else dx + p
+        else:
+            dx = _rs_core(dys, wts, op.axis, op.mode, op.comm_chunks,
+                          op.reverse, None)
+        dws = tuple(jnp.einsum("...sd,...sf->df", xf, dy).astype(w.dtype)
+                    for w, dy in zip(ws, dys))
+        return dx.astype(x.dtype), dws, dbias, dscale, dres
+
+    # rs / ar: epilogue vjp at the saved pre-epilogue output, then the
+    # interchanged overlapped op on the transposed cotangent.
+    def epi_fn(z_, bias_, scale_, residual_):
+        return epi.apply([z_], bias=bias_, scale=scale_, residual=residual_)
+
+    _, epi_vjp = jax.vjp(epi_fn, z, bias, scale, residual)
+    dz, dbias, dscale, dres = epi_vjp(g)
+    w = ws[0]
+    if op.kind == "rs":
+        # dY: AllGather + GEMM — interchanged overlapped op.
+        bwd_op = dataclasses.replace(op, kind="ag", epilogue=Epilogue(),
+                                     blocks=None)
+        dy = _fused_ag(bwd_op, dz, (w.T,), None, None, None)
+        gf = dz if single else lax.all_gather(dz, op.axis, axis=dz.ndim - 2,
+                                              tiled=True)
+        dw = jnp.einsum("...sf,...sd->fd", x, gf)
+    else:                                 # ar
+        dy = jnp.einsum("...md,fd->...mf", dz, w)
+        dw = jnp.einsum("...mf,...md->fd", x, dz)
+    return dy.astype(x.dtype), (dw.astype(w.dtype),), dbias, dscale, dres
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated thin wrappers (one release: examples/ and external callers)
+# ---------------------------------------------------------------------------
+_DEPRECATED_WARNED = set()
+
+
+def _warn_deprecated(name: str) -> None:
+    if name in _DEPRECATED_WARNED:
+        return
+    _DEPRECATED_WARNED.add(name)
+    warnings.warn(
+        f"overlap.{name} is deprecated; build an overlap.FusedOp instead "
+        f"(model code: ctx.op(seam, epilogue=..., n_weights=...))",
+        DeprecationWarning, stacklevel=3)
+
+
+def ag_matmul(x: Array, w: Array, axis: Optional[str] = None,
+              mode: str = "decomposed", comm_chunks: int = 0,
+              reverse: bool = False,
+              blocks: Optional[Tuple[int, int, int]] = None) -> Array:
+    """DEPRECATED: use ``FusedOp(kind="ag", ...)``."""
+    _warn_deprecated("ag_matmul")
+    return FusedOp(kind="ag", axis=axis, mode=mode, comm_chunks=comm_chunks,
+                   reverse=reverse, blocks=blocks)(x, w)
+
+
 def matmul_rs(y: Array, w: Array, axis: Optional[str] = None,
               mode: str = "decomposed", comm_chunks: int = 0,
               reverse: bool = False,
               blocks: Optional[Tuple[int, int, int]] = None) -> Array:
-    """ReduceScatter_seq(y @ w), overlapped per ``mode``."""
-    return _matmul_rs_impl(y, w, axis, mode, comm_chunks, reverse, blocks)
+    """DEPRECATED: use ``FusedOp(kind="rs", ...)``."""
+    _warn_deprecated("matmul_rs")
+    return FusedOp(kind="rs", axis=axis, mode=mode, comm_chunks=comm_chunks,
+                   reverse=reverse, blocks=blocks)(y, w)
 
 
-def _matmul_rs_impl(y, w, axis, mode, comm_chunks, reverse=False,
-                    blocks=None):
-    assert mode in VALID_MODES, mode
-    if mode.endswith("_q8"):
-        mode = mode[:-3]     # RS partials keep full precision (they SUM)
-    if axis is None or _axis_size(axis) == 1:
-        return jnp.einsum("...sf,fd->...sd", y, w)
-    if mode == "xla":
-        return _matmul_rs_xla(y, w, axis)
-    if mode == "flux":
-        if _flux_available():
-            return _matmul_rs_flux(y, w, axis, reverse, blocks)
-        return _matmul_rs_decomposed(y, w, axis, comm_chunks, reverse)
-    if mode == "decomposed_bidir":
-        return _matmul_rs_bidir(y, w, axis, comm_chunks)
-    return _matmul_rs_decomposed(y, w, axis, comm_chunks, reverse)
-
-
-def _matmul_rs_fwd(y, w, axis, mode, comm_chunks, reverse, blocks):
-    return _matmul_rs_impl(y, w, axis, mode, comm_chunks, reverse,
-                           blocks), (y, w)
-
-
-def _matmul_rs_bwd(axis, mode, comm_chunks, reverse, blocks, res, g):
-    y, w = res
-    # dY: AllGather + GEMM — interchanged overlapped op.
-    dy = _ag_matmul_impl(g, w.T, axis, mode, comm_chunks, reverse)
-    if axis is None or _axis_size(axis) == 1:
-        gf = g
-    else:
-        gf = lax.all_gather(g, axis, axis=g.ndim - 2, tiled=True)
-    dw = jnp.einsum("...sf,...sd->fd", y, gf)
-    return dy.astype(y.dtype), dw.astype(w.dtype)
-
-
-matmul_rs.defvjp(_matmul_rs_fwd, _matmul_rs_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def matmul_ar(y: Array, w: Array, axis: Optional[str] = None,
               mode: str = "decomposed", comm_chunks: int = 0) -> Array:
-    """AllReduce(y @ w) — the decode-path row-parallel GEMM."""
-    return _matmul_ar_impl(y, w, axis, mode, comm_chunks)
-
-
-def _matmul_ar_impl(y, w, axis, mode, comm_chunks):
-    if axis is None or _axis_size(axis) == 1:
-        return jnp.einsum("...mf,fd->...md", y, w)
-    if mode.startswith("decomposed"):
-        return _matmul_ar_decomposed(y, w, axis, comm_chunks)
-    # xla / flux(decode uses XLA AR: one-token GEMMs are latency- not
-    # bandwidth-bound; the fused kernel's win is in the big seams)
-    return lax.psum(jnp.einsum("...mf,fd->...md", y, w), axis)
-
-
-def _matmul_ar_fwd(y, w, axis, mode, comm_chunks):
-    return _matmul_ar_impl(y, w, axis, mode, comm_chunks), (y, w)
-
-
-def _matmul_ar_bwd(axis, mode, comm_chunks, res, g):
-    y, w = res
-    dy = jnp.einsum("...md,fd->...mf", g, w)
-    dw = jnp.einsum("...mf,...md->fd", y, g)
-    return dy.astype(y.dtype), dw.astype(w.dtype)
-
-
-matmul_ar.defvjp(_matmul_ar_fwd, _matmul_ar_bwd)
+    """DEPRECATED: use ``FusedOp(kind="ar", ...)``."""
+    _warn_deprecated("matmul_ar")
+    return FusedOp(kind="ar", axis=axis, mode=mode,
+                   comm_chunks=comm_chunks)(y, w)
 
 
 # ---------------------------------------------------------------------------
@@ -482,10 +767,13 @@ matmul_ar.defvjp(_matmul_ar_fwd, _matmul_ar_bwd)
 def ag_matmul_ref(x: Array, w: Array, axis: Optional[str]) -> Array:
     if axis is None or _axis_size(axis) == 1:
         return jnp.einsum("...sd,df->...sf", x, w)
-    return _ag_matmul_xla(x, w, axis)
+    full = lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
+    return jnp.einsum("...sd,df->...sf", full, w)
 
 
 def matmul_rs_ref(y: Array, w: Array, axis: Optional[str]) -> Array:
     if axis is None or _axis_size(axis) == 1:
         return jnp.einsum("...sf,fd->...sd", y, w)
-    return _matmul_rs_xla(y, w, axis)
+    partial = jnp.einsum("...sf,fd->...sd", y, w)
+    return lax.psum_scatter(partial, axis, scatter_dimension=partial.ndim - 2,
+                            tiled=True)

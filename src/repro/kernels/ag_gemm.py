@@ -19,6 +19,12 @@ gather itself rides the ICI ring *inside* the kernel:
 Ring order starts after the local rank (paper §4.3: "ring order starting
 after the local rank").  ``reverse=True`` flips the ring direction — the TPU
 analogue of the paper's pull/push tuning knob.
+
+Epilogue hook (FLUX thesis: fuse MORE dependent compute into the kernel):
+``activation`` / ``bias`` apply to the fp32 accumulator in the TILE epilogue
+— bias is DMA'd per output-column tile and added, the activation runs on the
+VPU before the cast+store, so the fused elementwise tail costs no extra HBM
+pass.  Driven by ``overlap.FusedOp`` via ``kernels.ops``.
 """
 from __future__ import annotations
 
@@ -30,13 +36,23 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro import compat
+# one activation registry for the whole overlap surface (overlap.Epilogue
+# validation and the kernel tile epilogues must never drift apart; overlap
+# imports kernels only lazily, so this edge is cycle-free)
+from repro.core.overlap import ACTIVATIONS as EPILOGUE_ACTS
 
 
-def _ag_gemm_kernel(a_ref, b_ref, o_ref,           # HBM: [M_sh,K], [K,N], [n*M_sh,N]
-                    a_agg, acc_ref, a_vmem, b_vmem, o_vmem,
-                    local_sem, send_sem, recv_sem, copy_a, copy_b, copy_o,
-                    *, axis_name: str, n_dev: int, reverse: bool,
-                    bm: int, bk: int, bn: int):
+def _ag_gemm_kernel(a_ref, b_ref, *rest,           # HBM: [M_sh,K], [K,N], [n*M_sh,N]
+                    axis_name: str, n_dev: int, reverse: bool,
+                    bm: int, bk: int, bn: int,
+                    activation=None, has_bias: bool = False):
+    if has_bias:
+        (bias_ref, o_ref, a_agg, acc_ref, a_vmem, b_vmem, o_vmem, bias_vmem,
+         local_sem, send_sem, recv_sem, copy_a, copy_b, copy_o) = rest
+    else:
+        bias_ref = bias_vmem = None
+        (o_ref, a_agg, acc_ref, a_vmem, b_vmem, o_vmem,
+         local_sem, send_sem, recv_sem, copy_a, copy_b, copy_o) = rest
     step = pl.program_id(0)
     mi = pl.program_id(1)
     ni = pl.program_id(2)
@@ -94,8 +110,17 @@ def _ag_gemm_kernel(a_ref, b_ref, o_ref,           # HBM: [M_sh,K], [K,N], [n*M_
 
     @pl.when(ki == n_k - 1)
     def _epilogue():
-        # swizzled output coordinate: rows of the shard we currently hold
-        o_vmem[...] = acc_ref[...].astype(o_vmem.dtype)
+        # fused tile epilogue: bias + activation on the fp32 accumulator,
+        # then the swizzled store (rows of the shard we currently hold)
+        acc = acc_ref[...]
+        if has_bias:
+            cbias = compat.make_async_copy(
+                bias_ref.at[:, pl.ds(ni * bn, bn)], bias_vmem, copy_b)
+            cbias.start(); cbias.wait()
+            acc = acc + bias_vmem[...].astype(jnp.float32)
+        if activation is not None:
+            acc = EPILOGUE_ACTS[activation](acc)
+        o_vmem[...] = acc.astype(o_vmem.dtype)
         co = compat.make_async_copy(
             o_vmem, o_ref.at[pl.ds(owner * n_m * bm + mi * bm, bm),
                              pl.ds(ni * bn, bn)], copy_o)
@@ -115,37 +140,52 @@ def _ag_gemm_kernel(a_ref, b_ref, o_ref,           # HBM: [M_sh,K], [K,N], [n*M_
 def ag_gemm(a_shard: jax.Array, b_local: jax.Array, *, axis_name: str,
             n_dev: int, bm: int = 256, bk: int = 512, bn: int = 256,
             reverse: bool = False, out_dtype=None,
+            activation: str | None = None, bias: jax.Array | None = None,
             interpret: bool | None = None, collective_id: int = 0) -> jax.Array:
-    """C[n*M_sh, N_local] = AllGather(A_shard) @ B_local, fused. Call inside
-    shard_map; A row-sharded over ``axis_name``, B column-sharded."""
+    """C[n*M_sh, N_local] = act(AllGather(A_shard) @ B_local + bias), fused.
+    Call inside shard_map; A row-sharded over ``axis_name``, B
+    column-sharded.  ``activation``/``bias`` are the tile-epilogue hook
+    (None -> plain GEMM; bias: [N_local])."""
     m_sh, k = a_shard.shape
     k2, n = b_local.shape
     assert k == k2
+    assert activation is None or activation in EPILOGUE_ACTS, activation
     out_dtype = out_dtype or a_shard.dtype
     bm, bk, bn = min(bm, m_sh), min(bk, k), min(bn, n)
     assert m_sh % bm == 0 and k % bk == 0 and n % bn == 0, (
         f"ag_gemm dims ({m_sh},{k},{n}) vs blocks ({bm},{bk},{bn})")
     grid = (n_dev, m_sh // bm, n // bn, k // bk)
+    has_bias = bias is not None
     kernel = functools.partial(
         _ag_gemm_kernel, axis_name=axis_name, n_dev=n_dev, reverse=reverse,
-        bm=bm, bk=bk, bn=bn)
+        bm=bm, bk=bk, bn=bn, activation=activation, has_bias=has_bias)
+    in_specs = [pl.BlockSpec(memory_space=compat.ANY),
+                pl.BlockSpec(memory_space=compat.ANY)]
+    operands = [a_shard, b_local]
+    scratch = [
+        compat.hbm_scratch((n_dev, m_sh, k), a_shard.dtype),   # A_agg (HBM)
+        compat.VMEM((bm, bn), jnp.float32),          # accumulator
+        compat.VMEM((bm, bk), a_shard.dtype),
+        compat.VMEM((bk, bn), b_local.dtype),
+        compat.VMEM((bm, bn), out_dtype),
+    ]
+    if has_bias:
+        assert bias.shape == (n,), (bias.shape, n)
+        in_specs.append(pl.BlockSpec(memory_space=compat.ANY))
+        operands.append(bias.reshape(1, n))
+        scratch.append(compat.VMEM((1, bn), bias.dtype))       # bias tile
+    scratch += [
+        compat.DMA_SEM, compat.DMA_SEM,
+        compat.DMA_SEM, compat.DMA_SEM,
+        compat.DMA_SEM, compat.DMA_SEM,
+    ]
     return compat.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=compat.ANY),
-                  pl.BlockSpec(memory_space=compat.ANY)],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct((n_dev * m_sh, n), out_dtype),
-        scratch_shapes=[
-            compat.hbm_scratch((n_dev, m_sh, k), a_shard.dtype),   # A_agg (HBM)
-            compat.VMEM((bm, bn), jnp.float32),          # accumulator
-            compat.VMEM((bm, bk), a_shard.dtype),
-            compat.VMEM((bk, bn), b_local.dtype),
-            compat.VMEM((bm, bn), out_dtype),
-            compat.DMA_SEM, compat.DMA_SEM,
-            compat.DMA_SEM, compat.DMA_SEM,
-            compat.DMA_SEM, compat.DMA_SEM,
-        ],
+        scratch_shapes=scratch,
         compiler_params=compat.pallas_compiler_params(collective_id=collective_id),
         interpret=interpret,
-    )(a_shard, b_local)
+    )(*operands)

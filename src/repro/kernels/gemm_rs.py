@@ -27,13 +27,23 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro import compat
+from repro.kernels.ag_gemm import EPILOGUE_ACTS
 
 
-def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M/n,N]
-                    ws, acc_ref, a_vmem, b_vmem, stage, o_stage,
-                    send_sem, recv_sem, copy_a, copy_b, copy_o,
-                    *, axis_name: str, n_dev: int, reverse: bool,
-                    bm: int, bk: int, bn: int):
+def _gemm_rs_kernel(a_ref, b_ref, *rest,           # HBM: [M,K_sh], [K_sh,N], [M/n,N]
+                    axis_name: str, n_dev: int, reverse: bool,
+                    bm: int, bk: int, bn: int,
+                    activation=None, has_bias: bool = False):
+    # epilogue hook: bias/activation fold into the FINAL reduction step's
+    # tile emit (after all n partials have summed — adding earlier would
+    # apply the bias once per rank).
+    if has_bias:
+        (bias_ref, o_ref, ws, acc_ref, a_vmem, b_vmem, stage, o_stage,
+         bias_vmem, send_sem, recv_sem, copy_a, copy_b, copy_o) = rest
+    else:
+        bias_ref = bias_vmem = None
+        (o_ref, ws, acc_ref, a_vmem, b_vmem, stage, o_stage,
+         send_sem, recv_sem, copy_a, copy_b, copy_o) = rest
     step = pl.program_id(0)
     mi = pl.program_id(1)
     ni = pl.program_id(2)
@@ -99,7 +109,15 @@ def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M
         def _emit():
             # final step computes OUR shard (owner == me): write the reduced
             # tile straight to the output — epilogue fusion, no extra pass.
-            o_stage[...] = acc_ref[...].astype(o_stage.dtype)
+            acc = acc_ref[...]
+            if has_bias:
+                cbias = compat.make_async_copy(
+                    bias_ref.at[:, pl.ds(ni * bn, bn)], bias_vmem, copy_b)
+                cbias.start(); cbias.wait()
+                acc = acc + bias_vmem[...].astype(jnp.float32)
+            if activation is not None:
+                acc = EPILOGUE_ACTS[activation](acc)
+            o_stage[...] = acc.astype(o_stage.dtype)
             co = compat.make_async_copy(
                 o_stage, o_ref.at[pl.ds(mi * bm, bm), pl.ds(ni * bn, bn)], copy_o)
             co.start(); co.wait()
@@ -119,13 +137,17 @@ def _gemm_rs_kernel(a_ref, b_ref, o_ref,           # HBM: [M,K_sh], [K_sh,N], [M
 def gemm_rs(a_local: jax.Array, b_local: jax.Array, *, axis_name: str,
             n_dev: int, bm: int = 256, bk: int = 512, bn: int = 256,
             reverse: bool = False, out_dtype=None, partial_dtype=None,
+            activation: str | None = None, bias: jax.Array | None = None,
             interpret: bool | None = None, collective_id: int = 1) -> jax.Array:
-    """out[M/n, N] = ReduceScatter_m(A_local @ B_local), fused.  Call inside
-    shard_map; A column(K)-sharded, B row(K)-sharded over ``axis_name``."""
+    """out[M/n, N] = act(ReduceScatter_m(A_local @ B_local) + bias), fused.
+    Call inside shard_map; A column(K)-sharded, B row(K)-sharded over
+    ``axis_name``.  ``activation``/``bias`` apply in the final reduction
+    step's tile emit (bias: [N])."""
     m, k_sh = a_local.shape
     k2, n = b_local.shape
     assert k_sh == k2
     assert m % n_dev == 0, (m, n_dev)
+    assert activation is None or activation in EPILOGUE_ACTS, activation
     m_sh = m // n_dev
     out_dtype = out_dtype or a_local.dtype
     partial_dtype = partial_dtype or out_dtype
@@ -133,27 +155,38 @@ def gemm_rs(a_local: jax.Array, b_local: jax.Array, *, axis_name: str,
     assert m_sh % bm == 0 and k_sh % bk == 0 and n % bn == 0, (
         f"gemm_rs dims ({m_sh},{k_sh},{n}) vs blocks ({bm},{bk},{bn})")
     grid = (n_dev, m_sh // bm, n // bn, k_sh // bk)
+    has_bias = bias is not None
     kernel = functools.partial(
         _gemm_rs_kernel, axis_name=axis_name, n_dev=n_dev, reverse=reverse,
-        bm=bm, bk=bk, bn=bn)
+        bm=bm, bk=bk, bn=bn, activation=activation, has_bias=has_bias)
+    in_specs = [pl.BlockSpec(memory_space=compat.ANY),
+                pl.BlockSpec(memory_space=compat.ANY)]
+    operands = [a_local, b_local]
+    scratch = [
+        compat.hbm_scratch((n_dev, m_sh, n), partial_dtype),    # in-flight partials
+        compat.VMEM((bm, bn), jnp.float32),          # accumulator
+        compat.VMEM((bm, bk), a_local.dtype),
+        compat.VMEM((bk, bn), b_local.dtype),
+        compat.VMEM((bm, bn), partial_dtype),        # stage/cast buffer
+        compat.VMEM((bm, bn), out_dtype),            # output cast buffer
+    ]
+    if has_bias:
+        assert bias.shape == (n,), (bias.shape, n)
+        in_specs.append(pl.BlockSpec(memory_space=compat.ANY))
+        operands.append(bias.reshape(1, n))
+        scratch.append(compat.VMEM((1, bn), bias.dtype))        # bias tile
+    scratch += [
+        compat.DMA_SEM, compat.DMA_SEM,
+        compat.DMA_SEM, compat.DMA_SEM,
+        compat.DMA_SEM,
+    ]
     return compat.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=compat.ANY),
-                  pl.BlockSpec(memory_space=compat.ANY)],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=compat.ANY),
         out_shape=jax.ShapeDtypeStruct((m_sh, n), out_dtype),
-        scratch_shapes=[
-            compat.hbm_scratch((n_dev, m_sh, n), partial_dtype),    # in-flight partials
-            compat.VMEM((bm, bn), jnp.float32),          # accumulator
-            compat.VMEM((bm, bk), a_local.dtype),
-            compat.VMEM((bk, bn), b_local.dtype),
-            compat.VMEM((bm, bn), partial_dtype),        # stage/cast buffer
-            compat.VMEM((bm, bn), out_dtype),            # output cast buffer
-            compat.DMA_SEM, compat.DMA_SEM,
-            compat.DMA_SEM, compat.DMA_SEM,
-            compat.DMA_SEM,
-        ],
+        scratch_shapes=scratch,
         compiler_params=compat.pallas_compiler_params(collective_id=collective_id),
         interpret=interpret,
-    )(a_local, b_local)
+    )(*operands)

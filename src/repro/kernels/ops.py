@@ -8,6 +8,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro import compat
 from repro.kernels import ag_gemm as _ag
@@ -51,34 +52,60 @@ def matmul(a: jax.Array, b: jax.Array, *, interpret: Optional[bool] = None,
     return _mm.matmul(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret, **kw)
 
 
+def _epilogue_by_hand(y: jax.Array, activation: Optional[str],
+                      bias: Optional[jax.Array]) -> jax.Array:
+    """Single-device fallback for the kernels' fused tile epilogue (same
+    fp32 order as the kernels: bias onto the fp32 accumulator, then the
+    activation, then the output cast)."""
+    from repro.kernels.ag_gemm import EPILOGUE_ACTS
+    if activation is None and bias is None:
+        return y
+    acc = y.astype(jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if activation is not None:
+        acc = EPILOGUE_ACTS[activation](acc)
+    return acc.astype(y.dtype)
+
+
 def ag_matmul_fused(a_shard: jax.Array, b_local: jax.Array, *, axis_name: str,
                     n_dev: Optional[int] = None, reverse: bool = False,
+                    activation: Optional[str] = None,
+                    bias: Optional[jax.Array] = None,
                     interpret: Optional[bool] = None, **kw) -> jax.Array:
-    """Fused AllGather-GEMM (call inside shard_map)."""
+    """Fused AllGather-GEMM (call inside shard_map).  ``activation``/``bias``
+    ride the kernel's tile epilogue."""
     interpret = _interpret_default() if interpret is None else interpret
     n_dev = n_dev or compat.axis_size(axis_name)
     if n_dev == 1:
-        return matmul(a_shard, b_local, interpret=interpret)
+        return _epilogue_by_hand(matmul(a_shard, b_local, interpret=interpret),
+                                 activation, bias)
     bm, bk, bn = plan_blocks(a_shard.shape[0], a_shard.shape[1],
                              b_local.shape[1], kw.pop("bm", 256),
                              kw.pop("bk", 512), kw.pop("bn", 256))
     return _ag.ag_gemm(a_shard, b_local, axis_name=axis_name, n_dev=n_dev,
                        bm=bm, bk=bk, bn=bn, reverse=reverse,
+                       activation=activation, bias=bias,
                        interpret=interpret, **kw)
 
 
 def matmul_rs_fused(a_local: jax.Array, b_local: jax.Array, *, axis_name: str,
                     n_dev: Optional[int] = None, reverse: bool = False,
+                    activation: Optional[str] = None,
+                    bias: Optional[jax.Array] = None,
                     interpret: Optional[bool] = None, **kw) -> jax.Array:
-    """Fused GEMM-ReduceScatter (call inside shard_map)."""
+    """Fused GEMM-ReduceScatter (call inside shard_map).  ``activation``/
+    ``bias`` apply in the final reduction step's tile emit."""
     interpret = _interpret_default() if interpret is None else interpret
     n_dev = n_dev or compat.axis_size(axis_name)
     if n_dev == 1:
-        return matmul(a_local, b_local, interpret=interpret)
+        return _epilogue_by_hand(matmul(a_local, b_local, interpret=interpret),
+                                 activation, bias)
     m_sh = a_local.shape[0] // n_dev
     bm, bk, bn = plan_blocks(m_sh, a_local.shape[1], b_local.shape[1],
                              kw.pop("bm", 256), kw.pop("bk", 512),
                              kw.pop("bn", 256))
     return _rs.gemm_rs(a_local, b_local, axis_name=axis_name, n_dev=n_dev,
                        bm=bm, bk=bk, bn=bn, reverse=reverse,
+                       activation=activation, bias=bias,
                        interpret=interpret, **kw)

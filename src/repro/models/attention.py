@@ -141,12 +141,11 @@ def gqa_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     b, s_loc, _ = x.shape
     s = s_loc * tp
 
-    ag = ctx.plan("attn_ag")
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
-    qkv = overlap.ag_matmul(h, p["wqkv"], ctx.axis, ag.mode, ag.comm_chunks,
-                            ag.reverse, ag.blocks)
-    if "bqkv" in p:
-        qkv = qkv + p["bqkv"]
+    # QKV bias rides the AllGather seam's fused epilogue (per chunk in the
+    # ring modes, in the tile epilogue for the flux kernel)
+    qkv = ctx.op("attn_ag", epilogue=overlap.Epilogue(bias="bqkv" in p))(
+        h, p["wqkv"], bias=p.get("bqkv"))
     q, k, v = jnp.split(qkv, [hl * d.dh, (hl + hkvl) * d.dh], axis=-1)
     q = q.reshape(b, s, hl, d.dh)
     k = k.reshape(b, s, hkvl, d.dh)
@@ -173,10 +172,8 @@ def gqa_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         attn = blocked_attention(q.transpose(0, 2, 1, 3),
                                  k.transpose(0, 2, 1, 3),
                                  v.transpose(0, 2, 1, 3))
-    rs = ctx.plan("attn_rs")
     attn = attn.transpose(0, 2, 1, 3).reshape(b, s, hl * d.dh)
-    out = overlap.matmul_rs(attn, p["wo"], ctx.axis, rs.mode, rs.comm_chunks,
-                            rs.reverse, rs.blocks)
+    out = ctx.op("attn_rs")(attn, p["wo"])
     if with_cache:
         return out, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
     return out
@@ -223,8 +220,7 @@ def gqa_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     attn = jnp.einsum("bhgos,bshd->bohgd", w, cv.astype(jnp.float32))
     attn = attn.reshape(b, 1, hl * d.dh).astype(x.dtype)
 
-    ar = ctx.plan("decode_ar")
-    out = overlap.matmul_ar(attn, p["wo"], ctx.axis, ar.mode, ar.comm_chunks)
+    out = ctx.op("decode_ar")(attn, p["wo"])
     return out, {"k": ck, "v": cv}
 
 
@@ -290,13 +286,11 @@ def mla_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     k_rope_s = layers.apply_rope(k_rope_s[:, :, None, :], pos_loc,
                                  cfg.rope_theta)[:, :, 0, :]
 
-    # head up-projections: the FLUX AllGather-GEMM seams
-    ag = ctx.plan("attn_ag")
-    q = overlap.ag_matmul(q_lat, p["w_uq"], ctx.axis, ag.mode,
-                          ag.comm_chunks, ag.reverse,
-                          ag.blocks).reshape(b, s, hl, dqk)
-    kv = overlap.ag_matmul(kv_lat, p["w_ukv"], ctx.axis, ag.mode,
-                           ag.comm_chunks, ag.reverse, ag.blocks)
+    # head up-projections: the FLUX AllGather-GEMM seams (distinct input
+    # latents -> no gather sharing between them)
+    ag_op = ctx.op("attn_ag")
+    q = ag_op(q_lat, p["w_uq"]).reshape(b, s, hl, dqk)
+    kv = ag_op(kv_lat, p["w_ukv"])
     kv = kv.reshape(b, s, hl, m.qk_nope_head_dim + m.v_head_dim)
     k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
 
@@ -315,10 +309,8 @@ def mla_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     attn = blocked_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                              v.transpose(0, 2, 1, 3),
                              scale=dqk ** -0.5)
-    rs = ctx.plan("attn_rs")
     attn = attn.transpose(0, 2, 1, 3).reshape(b, s, hl * m.v_head_dim)
-    out = overlap.matmul_rs(attn, p["w_o"], ctx.axis, rs.mode, rs.comm_chunks,
-                            rs.reverse, rs.blocks)
+    out = ctx.op("attn_rs")(attn, p["w_o"])
     if with_cache:
         if ctx.axis is not None and ctx.tp > 1:
             c_full = lax.all_gather(kv_lat, ctx.axis, axis=1, tiled=True)
@@ -390,10 +382,8 @@ def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
         ctx_lat = jnp.einsum("bhos,bsr->bohr", w,
                              c_cache.astype(jnp.float32))
     attn = jnp.einsum("bohr,rhd->bohd", ctx_lat, w_uv.astype(jnp.float32))
-    ar = ctx.plan("decode_ar")
     attn = attn.reshape(b, 1, hl * m.v_head_dim).astype(x.dtype)
-    out = overlap.matmul_ar(attn, p["w_o"], ctx.axis, ar.mode,
-                            ar.comm_chunks)
+    out = ctx.op("decode_ar")(attn, p["w_o"])
     return out, {"c": c_cache, "kr": r_cache}
 
 

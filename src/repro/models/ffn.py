@@ -56,27 +56,24 @@ def init_ffn(key, d_model: int, d_ff: int, tp: int, dtype=jnp.bfloat16,
 
 
 def ffn_train(p: Dict, x: Array, ctx: TPContext, eps: float = 1e-5) -> Array:
-    """x: [B, S/TP, D] -> [B, S/TP, D].  w1/w3 column-sharded, w2 row-sharded."""
-    ag = ctx.plan("mlp_ag")
-    rs = ctx.plan("mlp_rs")
+    """x: [B, S/TP, D] -> [B, S/TP, D].  w1/w3 column-sharded, w2 row-sharded.
+
+    The SwiGLU gate is a fused epilogue of the AllGather seam, and the
+    separate-w1/w3 layout shares ONE gather ring for both GEMMs (the plan's
+    ``shared_gather`` knob) — gather once, multiply twice."""
     h = layers.rms_norm(x, p["norm"], eps)
     if "w13" in p:
-        a13 = overlap.ag_matmul(h, p["w13"], ctx.axis, ag.mode,
-                                ag.comm_chunks, ag.reverse, ag.blocks)
-        a, g = jnp.split(a13, 2, axis=-1)   # local shard = [w1_i | w3_i]
+        # packed per-device [w1_i | w3_i]: one GEMM, gate on the split halves
+        y = ctx.op("mlp_ag", epilogue=overlap.Epilogue(
+            activation="silu", gate="split"))(h, p["w13"])
     else:
-        a = overlap.ag_matmul(h, p["w1"], ctx.axis, ag.mode, ag.comm_chunks,
-                              ag.reverse, ag.blocks)
-        g = overlap.ag_matmul(h, p["w3"], ctx.axis, ag.mode, ag.comm_chunks,
-                              ag.reverse, ag.blocks)
-    y = jax.nn.silu(a) * g
-    return overlap.matmul_rs(y, p["w2"], ctx.axis, rs.mode, rs.comm_chunks,
-                             rs.reverse, rs.blocks)
+        y = ctx.op("mlp_ag", epilogue=overlap.Epilogue(
+            activation="silu", gate="pair"), n_weights=2)(h, p["w1"], p["w3"])
+    return ctx.op("mlp_rs")(y, p["w2"])
 
 
 def ffn_decode(p: Dict, x: Array, ctx: TPContext, eps: float = 1e-5) -> Array:
     """x: [B, 1, D] replicated -> [B, 1, D]; row-parallel AR seam."""
-    ar = ctx.plan("decode_ar")
     h = layers.rms_norm(x, p["norm"], eps)
     if "w13" in p:
         a13 = jnp.einsum("bsd,df->bsf", h, p["w13"])
@@ -85,7 +82,7 @@ def ffn_decode(p: Dict, x: Array, ctx: TPContext, eps: float = 1e-5) -> Array:
         a = jnp.einsum("bsd,df->bsf", h, p["w1"])
         g = jnp.einsum("bsd,df->bsf", h, p["w3"])
     y = jax.nn.silu(a) * g
-    return overlap.matmul_ar(y, p["w2"], ctx.axis, ar.mode, ar.comm_chunks)
+    return ctx.op("decode_ar")(y, p["w2"])
 
 
 # ---------------------------------------------------------------------------

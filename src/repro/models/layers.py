@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import overlap
 from repro.parallel.sharding import TPContext
 
 Array = jax.Array
@@ -104,9 +103,7 @@ def embed_lookup(table: Array, tokens: Array, ctx: TPContext,
 def lm_head_logits(x: Array, table: Array, ctx: TPContext) -> Array:
     """x: [B, S/TP, D] -> logits [B, S, V/TP] via the AllGather-GEMM seam.
     (The LM head is the biggest single GEMM: FLUX prologue fusion applies.)"""
-    hp = ctx.plan("head_ag")
-    return overlap.ag_matmul(x, table.T, ctx.axis, hp.mode, hp.comm_chunks,
-                             hp.reverse, hp.blocks)
+    return ctx.op("head_ag")(x, table.T)
 
 
 def vocab_parallel_xent(logits: Array, labels: Array, ctx: TPContext,

@@ -17,7 +17,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.core import overlap
 from repro.models import layers
 from repro.parallel.sharding import TPContext, ceil_mult
 
@@ -107,16 +106,13 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     if "w_in_xz" in p:
-        ag = ctx.plan("attn_ag")
-        xz = overlap.ag_matmul(h, p["w_in_xz"], ctx.axis, ag.mode,
-                               ag.comm_chunks, ag.reverse, ag.blocks)
+        xz = ctx.op("attn_ag")(h, p["w_in_xz"])
         xs_raw, z = jnp.split(xz, 2, axis=-1)
     else:
-        ag = ctx.plan("attn_ag")
-        xs_raw = overlap.ag_matmul(h, p["w_in_x"], ctx.axis, ag.mode,
-                                   ag.comm_chunks, ag.reverse, ag.blocks)
-        z = overlap.ag_matmul(h, p["w_in_z"], ctx.axis, ag.mode,
-                              ag.comm_chunks, ag.reverse, ag.blocks)
+        # separate x/z in-projections share ONE gather ring (multi-output
+        # FusedOp: the z gate applies only after the scan, so no epilogue)
+        xs_raw, z = ctx.op("attn_ag", n_weights=2)(h, p["w_in_x"],
+                                                   p["w_in_z"])
 
     # causal depthwise conv along the (gathered) sequence
     xpad = jnp.pad(xs_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))
@@ -124,8 +120,7 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     xs = jax.nn.silu(conv + p["conv_b"])
 
     # x_proj: row-parallel GEMM + AllReduce (B/C/dt shared across shards)
-    ar = ctx.plan("decode_ar")
-    xdb = overlap.matmul_ar(xs, p["w_x"], ctx.axis, ar.mode, ar.comm_chunks)
+    xdb = ctx.op("decode_ar")(xs, p["w_x"])
     dt_low, b_in, c_in = jnp.split(xdb, [dt_rank, dt_rank + d_state], axis=-1)
     dt = jax.nn.softplus(jnp.einsum("bsr,rc->bsc", dt_low, p["w_dt"])
                          + p["dt_bias"].astype(jnp.float32))
@@ -151,9 +146,7 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
 
     y = y + xs32 * p["d_skip"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    rs = ctx.plan("attn_rs")
-    out = overlap.matmul_rs(y, p["w_out"], ctx.axis, rs.mode, rs.comm_chunks,
-                            rs.reverse, rs.blocks)
+    out = ctx.op("attn_rs")(y, p["w_out"])
     if with_cache:
         # conv cache stores the last d_conv-1 PRE-conv projected inputs
         conv_tail = xs_raw[:, s - (d_conv - 1):, :]
@@ -181,9 +174,8 @@ def mamba_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     xs = jax.nn.silu(conv)
     new_conv = hist[:, 1:]
 
-    ar = ctx.plan("decode_ar")
-    xdb = overlap.matmul_ar(xs[:, None], p["w_x"], ctx.axis, ar.mode,
-                            ar.comm_chunks)[:, 0]
+    ar_op = ctx.op("decode_ar")
+    xdb = ar_op(xs[:, None], p["w_x"])[:, 0]
     dt_low, b_in, c_in = jnp.split(xdb, [dt_rank, dt_rank + d_state], axis=-1)
     dt = jax.nn.softplus(jnp.einsum("br,rc->bc", dt_low, p["w_dt"])
                          + p["dt_bias"].astype(jnp.float32))
@@ -196,7 +188,7 @@ def mamba_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     y = jnp.einsum("bcn,bn->bc", hnew, c_in.astype(jnp.float32))
     y = y + xs32 * p["d_skip"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)[:, None]
-    out = overlap.matmul_ar(y, p["w_out"], ctx.axis, ar.mode, ar.comm_chunks)
+    out = ar_op(y, p["w_out"])
     return out, {"conv": new_conv, "ssm": hnew}
 
 

@@ -167,9 +167,7 @@ def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     y = layers.rms_norm(y.reshape(b, s, hl, dh), p["ln_x"],
                         cfg.norm_eps).reshape(b, s, hl * dh)
     y = y * jax.nn.silu(g)
-    rs = ctx.plan("attn_rs")
-    out = overlap.matmul_rs(y, p["w_o"], ctx.axis, rs.mode, rs.comm_chunks,
-                            rs.reverse, rs.blocks)
+    out = ctx.op("attn_rs")(y, p["w_o"])
     if with_cache:
         return out, {"state": sfin, "last": hg[:, -1]}
     return out
@@ -182,13 +180,10 @@ def rwkv_channel_train(p: Dict, x: Array, ctx: TPContext,
     delta = prev - h
     xk = h + delta * p["mu"][0]
     xr = h + delta * p["mu"][1]
-    ag = ctx.plan("mlp_ag")
-    k = overlap.ag_matmul(xk, p["w_k"], ctx.axis, ag.mode, ag.comm_chunks,
-                          ag.reverse, ag.blocks)
-    k = jnp.square(jax.nn.relu(k))
-    rs = ctx.plan("mlp_rs")
-    kv = overlap.matmul_rs(k, p["w_v"], ctx.axis, rs.mode, rs.comm_chunks,
-                           rs.reverse, rs.blocks)
+    # squared-relu fuses into the AllGather seam's per-chunk epilogue
+    k = ctx.op("mlp_ag", epilogue=overlap.Epilogue(
+        activation="sqrelu"))(xk, p["w_k"])
+    kv = ctx.op("mlp_rs")(k, p["w_v"])
     # receptance gate: replicated square weight, computed on the seq-shard
     r = jnp.einsum("bsd,de->bse", xr, p["w_r"])
     out = jax.nn.sigmoid(r) * kv
@@ -236,8 +231,7 @@ def rwkv_time_decode(p: Dict, x: Array, cache: Dict, ctx: TPContext,
     y = y.reshape(b, 1, hl, dh).astype(x.dtype)
     y = layers.rms_norm(y, p["ln_x"], cfg.norm_eps).reshape(b, 1, hl * dh)
     y = y * jax.nn.silu(g.reshape(b, 1, hl * dh))
-    ar = ctx.plan("decode_ar")
-    out = overlap.matmul_ar(y, p["w_o"], ctx.axis, ar.mode, ar.comm_chunks)
+    out = ctx.op("decode_ar")(y, p["w_o"])
     return out, {"state": s_new, "last": h}
 
 
@@ -249,7 +243,6 @@ def rwkv_channel_decode(p: Dict, x: Array, cache: Dict, ctx: TPContext,
     xk = (h + delta * p["mu"][0])[:, None]
     xr = (h + delta * p["mu"][1])[:, None]
     k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["w_k"])))
-    ar = ctx.plan("decode_ar")
-    kv = overlap.matmul_ar(k, p["w_v"], ctx.axis, ar.mode, ar.comm_chunks)
+    kv = ctx.op("decode_ar")(k, p["w_v"])
     r = jnp.einsum("bsd,de->bse", xr, p["w_r"])
     return jax.nn.sigmoid(r) * kv, {"last": h}

@@ -50,6 +50,17 @@ class TPContext:
         from repro.tuning.plans import SeamPlan
         return SeamPlan(mode=self.mode, comm_chunks=self.comm_chunks)
 
+    def op(self, seam: str, epilogue=None, n_weights: int = 1):
+        """The resolved ``overlap.FusedOp`` for one model seam: plan knobs
+        (mode/chunks/direction/blocks + fuse_epilogue/shared_gather) come
+        from the registry, the collective kind from the seam name, and the
+        epilogue/weight-count from the call site.  This is the ONLY way
+        model code should reach the overlap seams."""
+        from repro.tuning.plans import SEAM_KINDS
+        kind = SEAM_KINDS.get(seam, seam.rsplit("_", 1)[-1])
+        return self.plan(seam).op(kind, self.axis, epilogue=epilogue,
+                                  n_weights=n_weights)
+
     def with_layer(self, layer: Optional[int]) -> "TPContext":
         if layer == self.layer:
             return self

@@ -44,6 +44,8 @@ class Candidate:
     comm_chunks: int
     reverse: bool
     blocks: Optional[Tuple[int, int, int]] = None
+    shared_gather: bool = True        # one ring pass for N-weight gathers
+    fuse_epilogue: bool = True        # epilogue inside the overlapped loop
 
 
 @dataclasses.dataclass
@@ -67,11 +69,25 @@ def _ring_chunk_options(n_dev: int) -> Tuple[int, ...]:
 
 def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
                     *, allow_flux: bool = True, allow_q8: bool = True,
-                    modes: Optional[Sequence[str]] = None) -> List[Candidate]:
+                    modes: Optional[Sequence[str]] = None,
+                    n_weights: int = 1,
+                    epilogue: bool = False) -> List[Candidate]:
     """All tunable settings for one seam kind.  ``modes`` restricts the mode
     set (used by the measured path to drop flux under interpret mode);
-    ``allow_q8=False`` drops the lossy int8-gather modes."""
+    ``allow_q8=False`` drops the lossy int8-gather modes.  ``n_weights > 1``
+    additionally sweeps ``shared_gather`` (one ring pass vs one per weight)
+    and ``epilogue=True`` sweeps ``fuse_epilogue`` (elementwise tail inside
+    vs after the overlapped loop) — the FusedOp fusion knobs.  Only the
+    transports that CONSUME a knob sweep it: xla's monolithic gather is
+    shared and its epilogue XLA-fused regardless, and rs/ar epilogues run
+    once on the reduced output either way, so sweeping there would score
+    byte-identical programs under different labels."""
     from repro.kernels.ops import plan_blocks
+    sweep_sg = kind == "ag" and n_weights > 1
+    sweep_fe = kind == "ag" and epilogue
+    fusion_opts = [(sg, fe)
+                   for sg in ((True, False) if sweep_sg else (True,))
+                   for fe in ((True, False) if sweep_fe else (True,))]
     out: List[Candidate] = []
     for mode in (modes or _KIND_MODES[kind]):
         if mode == "flux" and not allow_flux:
@@ -90,7 +106,10 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
             for pref in _FLUX_BLOCK_PREFS:
                 blocks = plan_blocks(gm, gk, gn, *pref)
                 for reverse in (False, True):
-                    out.append(Candidate(mode, 0, reverse, blocks))
+                    for sg, fe in fusion_opts:
+                        out.append(Candidate(mode, 0, reverse, blocks,
+                                             shared_gather=sg,
+                                             fuse_epilogue=fe))
             continue
         # ring modes: chunk count x direction (AR chunks the contraction —
         # no ring, so no direction; bidir already rides both directions)
@@ -98,11 +117,14 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
             for reverse in (False, True):
                 if reverse and (kind == "ar" or mode == "decomposed_bidir"):
                     continue
-                out.append(Candidate(mode, chunks, reverse))
+                for sg, fe in fusion_opts:
+                    out.append(Candidate(mode, chunks, reverse,
+                                         shared_gather=sg, fuse_epilogue=fe))
     # dedupe (plan_blocks may collapse block prefs on small shapes)
     seen, uniq = set(), []
     for c in out:
-        key = (c.mode, c.comm_chunks, c.reverse, c.blocks)
+        key = (c.mode, c.comm_chunks, c.reverse, c.blocks, c.shared_gather,
+               c.fuse_epilogue)
         if key not in seen:
             seen.add(key)
             uniq.append(c)
@@ -110,9 +132,14 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
 
 
 def analytic_estimate(kind: str, m: int, n: int, k: int, n_dev: int,
-                      cand: Candidate, dtype_bytes: int = 2) -> float:
+                      cand: Candidate, dtype_bytes: int = 2,
+                      n_weights: int = 1, epilogue: bool = False) -> float:
     est = ect.model_overlap(kind, m, n, k, n_dev, cand.mode, dtype_bytes,
-                            comm_chunks=cand.comm_chunks)
+                            comm_chunks=cand.comm_chunks,
+                            n_weights=n_weights,
+                            shared_gather=cand.shared_gather,
+                            epilogue=epilogue,
+                            fuse_epilogue=cand.fuse_epilogue)
     return est["overall"]
 
 
@@ -123,16 +150,28 @@ def _round_to(x: int, mult: int) -> int:
     return max(mult, x - x % mult)
 
 
+def _bench_epilogue(kind: str, n_weights: int, epilogue: bool):
+    """The representative Epilogue benched for a seam: the gated-FFN pair
+    for two-weight AG seams, a plain activation otherwise."""
+    from repro.core.overlap import Epilogue
+    if not epilogue:
+        return Epilogue()
+    if kind == "ag" and n_weights == 2:
+        return Epilogue(activation="silu", gate="pair")
+    return Epilogue(activation="silu")
+
+
 def _bench_callable(kind: str, m: int, n: int, k: int, n_dev: int,
-                    cand: Candidate, dtype):
-    """(jitted_fn, args) timing one overlap op under ``cand``'s settings.
+                    cand: Candidate, dtype, n_weights: int = 1,
+                    epilogue: bool = False):
+    """(jitted_fn, args) timing one FusedOp under ``cand``'s settings.
     Shard_maps over ``n_dev`` devices when the host has them; otherwise the
     single-device fallback path (still times the real GEMM)."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh, PartitionSpec as P
     from repro import compat
-    from repro.core import overlap
+    from repro.core.overlap import FusedOp
 
     multi = n_dev > 1 and len(jax.devices()) >= n_dev
     axis = "tune" if multi else None
@@ -142,35 +181,31 @@ def _bench_callable(kind: str, m: int, n: int, k: int, n_dev: int,
     key = jax.random.PRNGKey(0)
 
     x = jax.random.normal(key, (1, m, k), dtype)
-    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype) / k ** 0.5
-    # custom_vjp nondiff args are passed positionally (kwarg resolution on
-    # custom_vjp functions is version-fragile)
+    nw = n_weights if kind == "ag" else 1
+    ws = tuple(jax.random.normal(jax.random.PRNGKey(1 + i), (k, n), dtype)
+               / k ** 0.5 for i in range(nw))
+    fused = FusedOp(kind=kind, axis=axis, mode=cand.mode,
+                    comm_chunks=cand.comm_chunks, reverse=cand.reverse,
+                    blocks=cand.blocks,
+                    epilogue=_bench_epilogue(kind, nw, epilogue),
+                    n_weights=nw, fuse_epilogue=cand.fuse_epilogue,
+                    shared_gather=cand.shared_gather)
     if kind == "ag":
-        def op(a, b):
-            return overlap.ag_matmul(a, b, axis, cand.mode, cand.comm_chunks,
-                                     cand.reverse, cand.blocks)
-        in_specs = (P(None, axis, None), P(None, axis))
-        out_spec = P(None, None, axis)
-    elif kind == "rs":
-        def op(a, b):
-            return overlap.matmul_rs(a, b, axis, cand.mode, cand.comm_chunks,
-                                     cand.reverse, cand.blocks)
+        in_specs = (P(None, axis, None),) + (P(None, axis),) * nw
+        out_spec = (P(None, None, axis) if fused.combines
+                    else (P(None, None, axis),) * nw)
+    else:           # rs / ar share operand sharding; ar replicates the out
         in_specs = (P(None, None, axis), P(axis, None))
-        out_spec = P(None, axis, None)
-    else:  # ar — decode path: tiny m, contraction sharded
-        def op(a, b):
-            return overlap.matmul_ar(a, b, axis, cand.mode, cand.comm_chunks)
-        in_specs = (P(None, None, axis), P(axis, None))
-        out_spec = P(None, None, None)
+        out_spec = P(None, axis, None) if kind == "rs" else P(None, None, None)
 
     if not multi:
-        return jax.jit(lambda a, b: op(a, b)), (x, w)
+        return jax.jit(lambda a, *bs: fused(a, *bs)), (x, *ws)
 
     mesh = Mesh(np.array(jax.devices()[:n_dev]), ("tune",))
-    fn = compat.shard_map(lambda a, b: op(a, b), mesh=mesh,
+    fn = compat.shard_map(lambda a, *bs: fused(a, *bs), mesh=mesh,
                           in_specs=in_specs, out_specs=out_spec,
                           check_vma=False)
-    return jax.jit(fn), (x, w)
+    return jax.jit(fn), (x, *ws)
 
 
 def _measurable_modes(kind: str, allow_flux: bool) -> Tuple[str, ...]:
@@ -191,10 +226,14 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
               allow_q8: bool = True, measure="auto",
               modes: Optional[Sequence[str]] = None,
               seam: Optional[str] = None, iters: int = 3,
-              warmup: int = 1) -> TuneResult:
+              warmup: int = 1, n_weights: int = 1,
+              epilogue: bool = False) -> TuneResult:
     """Tune one seam.  Returns the winning plan plus the full candidate
-    table (``table`` rows: mode/comm_chunks/reverse/blocks/predicted_s and,
-    on the measured path, measured_s)."""
+    table (``table`` rows: mode/comm_chunks/reverse/blocks/shared_gather/
+    fuse_epilogue/predicted_s and, on the measured path, measured_s).
+    ``n_weights``/``epilogue`` describe the FusedOp the seam will run
+    (e.g. the gated FFN's two-weight silu-gate) so the fusion knobs are
+    swept too."""
     assert kind in _KIND_MODES, kind
     if measure == "auto":
         import jax
@@ -202,32 +241,38 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
         measure = (n_dev > 1 and len(jax.devices()) >= n_dev
                    and not compat.interpret_default())
 
+    def row(c, measured=0.0):
+        return {"mode": c.mode, "comm_chunks": c.comm_chunks,
+                "reverse": c.reverse, "blocks": c.blocks,
+                "shared_gather": c.shared_gather,
+                "fuse_epilogue": c.fuse_epilogue,
+                "predicted_s": analytic_estimate(kind, m, n, k, n_dev, c,
+                                                 dtype_bytes, n_weights,
+                                                 epilogue),
+                "measured_s": measured}
+
     if measure:
         import jax.numpy as jnp
         dtype = jnp.bfloat16 if dtype_bytes == 2 else jnp.float32
         cands = candidate_space(kind, m, n, k, n_dev, allow_flux=allow_flux,
                                 allow_q8=allow_q8,
                                 modes=modes or _measurable_modes(kind,
-                                                                 allow_flux))
+                                                                 allow_flux),
+                                n_weights=n_weights, epilogue=epilogue)
         table = []
         for c in cands:
-            fn, args = _bench_callable(kind, m, n, k, n_dev, c, dtype)
+            fn, args = _bench_callable(kind, m, n, k, n_dev, c, dtype,
+                                       n_weights=n_weights,
+                                       epilogue=epilogue)
             t = ect.time_fn(fn, *args, iters=iters, warmup=warmup)
-            table.append({"mode": c.mode, "comm_chunks": c.comm_chunks,
-                          "reverse": c.reverse, "blocks": c.blocks,
-                          "predicted_s": analytic_estimate(
-                              kind, m, n, k, n_dev, c, dtype_bytes),
-                          "measured_s": t})
+            table.append(row(c, measured=t))
         best = min(table, key=lambda r: r["measured_s"])
         source = "measured"
     else:
         cands = candidate_space(kind, m, n, k, n_dev, allow_flux=allow_flux,
-                                allow_q8=allow_q8, modes=modes)
-        table = [{"mode": c.mode, "comm_chunks": c.comm_chunks,
-                  "reverse": c.reverse, "blocks": c.blocks,
-                  "predicted_s": analytic_estimate(kind, m, n, k, n_dev, c,
-                                                   dtype_bytes),
-                  "measured_s": 0.0} for c in cands]
+                                allow_q8=allow_q8, modes=modes,
+                                n_weights=n_weights, epilogue=epilogue)
+        table = [row(c) for c in cands]
         best = min(table, key=lambda r: r["predicted_s"])
         source = "analytic"
 
@@ -240,6 +285,8 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
             blocks = plan_blocks(max(m // n_dev, 1), max(k // n_dev, 1), n)
     plan = SeamPlan(mode=best["mode"], comm_chunks=best["comm_chunks"],
                     reverse=best["reverse"], blocks=tuple(blocks),
+                    shared_gather=best["shared_gather"],
+                    fuse_epilogue=best["fuse_epilogue"],
                     source=source, predicted_s=best["predicted_s"],
                     measured_s=best["measured_s"]).validate()
     return TuneResult(seam=seam or kind, kind=kind, m=m, n=n, k=k,
@@ -293,6 +340,14 @@ def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
     """
     if par.tp <= 1:
         return PlanSet.uniform(par.overlap_mode, par.comm_chunks)
+    # FusedOp shape of each seam: the gated FFN runs a two-weight silu-gate
+    # op off one gather (w13-packed: one weight, split-gate — still an
+    # epilogue); QKV projections fuse the bias when the arch has one.
+    fused_shape: Dict[str, Dict] = {
+        "mlp_ag": {"n_weights": 1 if getattr(par, "fuse_w13", False) else 2,
+                   "epilogue": True},
+        "attn_ag": {"epilogue": bool(getattr(cfg, "qkv_bias", False))},
+    }
     seams: Dict[str, SeamPlan] = {}
     for seam_name, (kind, m, n, k) in model_seam_shapes(
             cfg, par, tokens_per_dp, decode_batch).items():
@@ -301,7 +356,8 @@ def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
             seams[seam_name] = cached
             continue
         res = tune_seam(kind, m, n, k, par.tp, allow_flux=allow_flux,
-                        allow_q8=allow_q8, measure=measure, seam=seam_name)
+                        allow_q8=allow_q8, measure=measure, seam=seam_name,
+                        **fused_shape.get(seam_name, {}))
         seams[seam_name] = res.plan
         if registry is not None:
             registry.record(seam_name, kind, m, n, k, res.plan)

@@ -38,11 +38,18 @@ SEAM_KINDS: Dict[str, str] = {"mlp_ag": "ag", "mlp_rs": "rs",
 
 @dataclasses.dataclass(frozen=True)
 class SeamPlan:
-    """Knob settings for ONE seam (the paper's §4.4 tuning record)."""
+    """Knob settings for ONE seam (the paper's §4.4 tuning record).
+
+    ``fuse_epilogue`` / ``shared_gather`` are the FusedOp fusion knobs
+    (apply the epilogue per chunk inside the overlapped loop; one ring pass
+    for multi-weight gathers) — plan-visible so the autotuner can sweep
+    them per seam."""
     mode: str = "decomposed"
     comm_chunks: int = 0
     reverse: bool = False
     blocks: Optional[Tuple[int, int, int]] = None
+    fuse_epilogue: bool = True
+    shared_gather: bool = True
     source: str = "default"          # default | analytic | measured
     predicted_s: float = 0.0
     measured_s: float = 0.0
@@ -55,9 +62,17 @@ class SeamPlan:
             raise ValueError(f"comm_chunks must be >= 0, got {self.comm_chunks}")
         return self
 
+    def op(self, kind: str, axis=None, epilogue=None, n_weights: int = 1):
+        """Bind this plan to a concrete ``overlap.FusedOp`` for one seam."""
+        from repro.core.overlap import FusedOp
+        return FusedOp.from_plan(kind, self, axis, epilogue=epilogue,
+                                 n_weights=n_weights)
+
     def to_json(self) -> Dict:
         d = {"mode": self.mode, "comm_chunks": self.comm_chunks,
              "reverse": self.reverse, "source": self.source,
+             "fuse_epilogue": self.fuse_epilogue,
+             "shared_gather": self.shared_gather,
              "predicted_s": self.predicted_s, "measured_s": self.measured_s}
         d["blocks"] = list(self.blocks) if self.blocks else None
         return d
@@ -68,6 +83,8 @@ class SeamPlan:
         return SeamPlan(mode=d["mode"], comm_chunks=int(d.get("comm_chunks", 0)),
                         reverse=bool(d.get("reverse", False)),
                         blocks=tuple(blocks) if blocks else None,
+                        fuse_epilogue=bool(d.get("fuse_epilogue", True)),
+                        shared_gather=bool(d.get("shared_gather", True)),
                         source=d.get("source", "default"),
                         predicted_s=float(d.get("predicted_s", 0.0)),
                         measured_s=float(d.get("measured_s", 0.0))).validate()

@@ -104,6 +104,63 @@ def test_fused_ring_kernels_4dev(subproc, reverse):
     assert "RING_OK" in out
 
 
+# ---------------------------------------------------------------------------
+# kernel tile-epilogue hook: act(AG(A)@B + bias) / act(RS(A@B) + bias)
+# ---------------------------------------------------------------------------
+_EPILOGUE_TEST = r"""
+import functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.kernels import ops as kops
+
+mesh = Mesh(np.array(jax.devices()), ("tp",))
+M, K, N = 512, 256, 512
+A = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+B = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+bias = jax.random.normal(jax.random.PRNGKey(2), (N,), jnp.float32) * 0.5
+want = jnp.dot(A, B)
+tol = 1e-3 * K**0.5
+
+for act, bias_on in [("silu", True), ("sqrelu", False), (None, True)]:
+    bb = bias if bias_on else None
+    ref = want + (bias if bias_on else 0.0)
+    if act == "silu":
+        ref = jax.nn.silu(ref)
+    elif act == "sqrelu":
+        ref = jnp.square(jax.nn.relu(ref))
+
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P("tp", None), P(None, "tp"), P("tp")),
+                       out_specs=P(None, "tp"), check_vma=False)
+    def ag(a, b, bi):
+        return kops.ag_matmul_fused(a, b, axis_name="tp", activation=act,
+                                    bias=bi if bias_on else None)
+    err = float(jnp.max(jnp.abs(ag(A, B, bias) - ref)))
+    assert err < tol, ("ag", act, bias_on, err)
+
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(None, "tp"), P("tp", None), P(None)),
+                       out_specs=P("tp", None), check_vma=False)
+    def rs(a, b, bi):
+        return kops.matmul_rs_fused(a, b, axis_name="tp", activation=act,
+                                    bias=bi if bias_on else None)
+    err = float(jnp.max(jnp.abs(rs(A, B, bias) - ref)))
+    assert err < tol, ("rs", act, bias_on, err)
+print("EPILOGUE_OK")
+"""
+
+
+def test_kernel_tile_epilogue_4dev(subproc):
+    """bias + activation in the fused kernels' tile epilogue match the
+    unfused reference (RS: bias must be applied exactly once, AFTER the
+    full cross-rank reduction)."""
+    assert "EPILOGUE_OK" in subproc(_EPILOGUE_TEST, n_devices=4)
+
+
 @pytest.mark.parametrize("b,h,r,dr,s,valid", [
     (2, 4, 64, 16, 256, 200), (1, 8, 128, 32, 512, 512),
     (2, 2, 32, 8, 128, 1),

@@ -1,6 +1,9 @@
 """Mode-equivalence of the FLUX overlap ops (the paper's correctness
 invariant): xla == decomposed == flux for all shapes/dtypes, values and
-gradients — plus hypothesis property tests on the single-device fallback."""
+gradients — plus hypothesis property tests on the single-device fallback,
+the FusedOp epilogue-fusion sweep, and the shared-gather ring census."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +11,7 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import overlap
+from repro.core.overlap import Epilogue, FusedOp
 
 
 # ---------------------------------------------------------------------------
@@ -365,3 +369,372 @@ print("AR_SWEEP_OK")
 
 def test_matmul_ar_mode_equivalence_4dev(subproc):
     assert "AR_SWEEP_OK" in subproc(_AR_SWEEP, n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# FusedOp: single-device epilogue semantics, validation, deprecation
+# ---------------------------------------------------------------------------
+def test_fused_op_epilogue_single_device():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    w3 = jax.random.normal(jax.random.PRNGKey(2), (16, 32))
+    b = jax.random.normal(jax.random.PRNGKey(3), (32,))
+    r = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 32))
+    sc = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (32,))) + 0.5
+    y0 = jnp.einsum("bsd,df->bsf", x, w1)
+    y3 = jnp.einsum("bsd,df->bsf", x, w3)
+
+    cases = [
+        (FusedOp(kind="ag", epilogue=Epilogue(bias=True)),
+         dict(bias=b), y0 + b),
+        (FusedOp(kind="ag", epilogue=Epilogue(activation="gelu")),
+         {}, jax.nn.gelu(y0)),
+        (FusedOp(kind="ag", epilogue=Epilogue(scale=True, residual=True)),
+         dict(scale=sc, residual=r), y0 * sc + r),
+        (FusedOp(kind="ag", epilogue=Epilogue(activation="silu",
+                                              gate="pair"), n_weights=2),
+         {}, jax.nn.silu(y0) * y3),
+    ]
+    for op, operands, want in cases:
+        ws = (w1, w3) if op.n_weights == 2 else (w1,)
+        np.testing.assert_allclose(np.asarray(op(x, *ws, **operands)),
+                                   np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    # split-gate: packed [a | g] halves
+    op = FusedOp(kind="ag", epilogue=Epilogue(activation="silu",
+                                              gate="split"))
+    w13 = jnp.concatenate([w1, w3], axis=-1)
+    np.testing.assert_allclose(np.asarray(op(x, w13)),
+                               np.asarray(jax.nn.silu(y0) * y3),
+                               rtol=1e-5, atol=1e-5)
+
+    # multi-output (identity epilogue) returns per-weight outputs
+    o1, o2 = FusedOp(kind="ag", n_weights=2)(x, w1, w3)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(y0), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(y3), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_fused_op_validation():
+    with pytest.raises(ValueError):
+        FusedOp(kind="nope")
+    with pytest.raises(ValueError):
+        FusedOp(kind="ag", mode="nope")
+    with pytest.raises(ValueError):                 # rs is single-weight
+        FusedOp(kind="rs", n_weights=2)
+    with pytest.raises(ValueError):                 # pair-gate needs 2 weights
+        FusedOp(kind="ag", epilogue=Epilogue(gate="pair"))
+    with pytest.raises(ValueError):                 # multi-out must be identity
+        FusedOp(kind="ag", n_weights=2, epilogue=Epilogue(bias=True))
+    with pytest.raises(ValueError):
+        Epilogue(activation="nope")
+    op = FusedOp(kind="ag", epilogue=Epilogue(bias=True))
+    x = jnp.ones((2, 4, 8))
+    w = jnp.ones((8, 8))
+    with pytest.raises(ValueError):                 # declared bias not passed
+        op(x, w)
+    with pytest.raises(ValueError):                 # undeclared operand
+        FusedOp(kind="ag")(x, w, bias=jnp.ones((8,)))
+
+
+def test_legacy_wrappers_warn_once():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    overlap._DEPRECATED_WARNED.discard("ag_matmul")
+    with pytest.warns(DeprecationWarning):
+        overlap.ag_matmul(x, w, None, "xla")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        out = overlap.ag_matmul(x, w, None, "decomposed")  # 2nd call: silent
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.einsum("bsd,df->bsf", x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# FusedOp epilogue sweep: every Epilogue combination vs the unfused
+# reference across ALL modes, values AND gradients, on a 4-device mesh
+# ---------------------------------------------------------------------------
+_EPILOGUE_SWEEP = r"""
+import dataclasses, functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import overlap
+from repro.core.overlap import Epilogue, FusedOp
+
+mesh = Mesh(np.array(jax.devices()), ("model",))
+B, S, D, F = 2, 256, 128, 256
+x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
+w1 = jax.random.normal(jax.random.PRNGKey(1), (D, F)) / D**0.5
+w3 = jax.random.normal(jax.random.PRNGKey(2), (D, F)) / D**0.5
+w2 = jax.random.normal(jax.random.PRNGKey(3), (F, D)) / F**0.5
+bias = jax.random.normal(jax.random.PRNGKey(4), (F,)) * 0.3
+bias_d = jax.random.normal(jax.random.PRNGKey(5), (D,)) * 0.3
+res = jax.random.normal(jax.random.PRNGKey(6), (B, S, D), jnp.float32)
+scale = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (F,))) + 0.5
+
+def smap(fn, in_specs, out_specs):
+    return jax.jit(functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs,
+                                     check_vma=False)(fn))
+
+AG3 = (P(None, "model", None), P(None, "model"), P(None, "model"))
+AG_OUT = P(None, None, "model")
+RS3 = (P(None, None, "model"), P("model", None), P(None, "model", None))
+RS_OUT = P(None, "model", None)
+
+# (name, kind, build_op(mode), weights, epilogue operands)
+def agref(xs, ws):
+    return overlap.ag_matmul_ref(xs, ws, "model")
+def rsref(ys, ws):
+    return overlap.matmul_rs_ref(ys, ws, "model")
+
+CASES = [
+    ("ag_bias", "ag", lambda m: FusedOp(kind="ag", axis="model", mode=m,
+                                        comm_chunks=8,
+                                        epilogue=Epilogue(bias=True)),
+     (w1,), dict(bias=bias)),
+    ("ag_act", "ag", lambda m: FusedOp(kind="ag", axis="model", mode=m,
+                                       epilogue=Epilogue(activation="sqrelu")),
+     (w1,), {}),
+    ("ag_gate_pair", "ag",
+     lambda m: FusedOp(kind="ag", axis="model", mode=m, comm_chunks=8,
+                       epilogue=Epilogue(activation="silu", gate="pair"),
+                       n_weights=2),
+     (w1, w3), {}),
+    ("ag_scale", "ag", lambda m: FusedOp(kind="ag", axis="model", mode=m,
+                                         epilogue=Epilogue(scale=True)),
+     (w1,), dict(scale=scale)),
+    ("rs_residual", "rs",
+     lambda m: FusedOp(kind="rs", axis="model", mode=m, comm_chunks=8,
+                       epilogue=Epilogue(residual=True)),
+     (w2,), dict(residual=res)),
+    ("rs_bias_act", "rs",
+     lambda m: FusedOp(kind="rs", axis="model", mode=m,
+                       epilogue=Epilogue(bias=True, activation="gelu")),
+     (w2,), dict(bias=bias_d)),
+]
+
+y_in = jax.random.normal(jax.random.PRNGKey(8), (B, S, F), jnp.float32)
+
+def reference(name):
+    if name == "ag_bias":
+        f = smap(lambda xs, ws, b_: agref(xs, ws) + b_,
+                 (AG3[0], AG3[1], P("model")), AG_OUT)
+        return np.asarray(f(x, w1, bias))
+    if name == "ag_act":
+        f = smap(lambda xs, ws: jnp.square(jax.nn.relu(agref(xs, ws))),
+                 AG3[:2], AG_OUT)
+        return np.asarray(f(x, w1))
+    if name == "ag_gate_pair":
+        f = smap(lambda xs, a_, b_: jax.nn.silu(agref(xs, a_)) * agref(xs, b_),
+                 AG3, AG_OUT)
+        return np.asarray(f(x, w1, w3))
+    if name == "ag_scale":
+        f = smap(lambda xs, ws, s_: agref(xs, ws) * s_,
+                 (AG3[0], AG3[1], P("model")), AG_OUT)
+        return np.asarray(f(x, w1, scale))
+    if name == "rs_residual":
+        f = smap(lambda ys, ws, r_: rsref(ys, ws) + r_, RS3, RS_OUT)
+        return np.asarray(f(y_in, w2, res))
+    if name == "rs_bias_act":
+        f = smap(lambda ys, ws, b_: jax.nn.gelu(rsref(ys, ws) + b_),
+                 (RS3[0], RS3[1], P(None)), RS_OUT)
+        return np.asarray(f(y_in, w2, bias_d))
+    raise ValueError(name)
+
+def run_case(name, kind, mk_op, ws, operands, mode, shared, fuse):
+    op = dataclasses.replace(mk_op(mode), shared_gather=shared,
+                             fuse_epilogue=fuse)
+    keys = sorted(operands)
+    opn = dict(operands)
+    if kind == "ag":
+        specs = [AG3[0]] + [AG3[1]] * len(ws)
+        for k in keys:
+            specs.append(P("model") if k in ("bias", "scale")
+                         else AG_OUT)
+        f = smap(lambda xs, *rest: op(xs, *rest[:len(ws)],
+                                      **dict(zip(keys, rest[len(ws):]))),
+                 tuple(specs), AG_OUT)
+        args = (x, *ws, *[opn[k] for k in keys])
+    else:
+        specs = [RS3[0], RS3[1]]
+        for k in keys:
+            specs.append(P(None) if k == "bias" else RS_OUT)
+        f = smap(lambda ys, w_, *rest: op(ys, w_,
+                                          **dict(zip(keys, rest))),
+                 tuple(specs), RS_OUT)
+        args = (y_in, w2, *[opn[k] for k in keys])
+    return np.asarray(f(*args))
+
+for name, kind, mk_op, ws, operands in CASES:
+    ref = reference(name)
+    scale_ref = np.abs(ref).max() + 1e-9
+    for mode in overlap.VALID_MODES:
+        for shared in ((True, False) if len(ws) > 1 else (True,)):
+            for fuse in (True, False):
+                out = run_case(name, kind, mk_op, ws, operands, mode,
+                               shared, fuse)
+                tol = 2e-2 if mode.endswith("_q8") else 1e-3
+                rel = np.abs(out - ref).max() / scale_ref
+                assert rel < tol, (name, mode, shared, fuse, rel)
+print("EPI_VALUES_OK")
+
+# gradients: epilogue-transposed backward through the interchanged op,
+# including cotangents for the bias/scale/residual operands
+def ag_loss(op_or_ref, with_bias):
+    def f(xs, a_, b_, bi):
+        if op_or_ref == "ref":
+            y = jax.nn.silu(agref(xs, a_) + (bi if with_bias else 0.0)) \
+                * agref(xs, b_)
+        else:
+            y = op_or_ref(xs, a_, b_, bias=bi) if with_bias \
+                else op_or_ref(xs, a_, b_)
+        return jax.lax.psum(jnp.sum(y * y), "model")
+    return functools.partial(
+        shard_map, mesh=mesh, in_specs=AG3 + (P("model"),), out_specs=P(),
+        check_vma=False)(f)
+
+for with_bias in (False, True):
+    epi = Epilogue(activation="silu", gate="pair", bias=with_bias)
+    g_ref = jax.jit(jax.grad(ag_loss("ref", with_bias),
+                             argnums=(0, 1, 2, 3)))(x, w1, w3, bias)
+    for mode in ("decomposed", "decomposed_bidir", "xla", "flux"):
+        for fuse in (True, False):
+            op = FusedOp(kind="ag", axis="model", mode=mode, comm_chunks=8,
+                         epilogue=epi, n_weights=2, fuse_epilogue=fuse)
+            g = jax.jit(jax.grad(ag_loss(op, with_bias),
+                                 argnums=(0, 1, 2, 3)))(x, w1, w3, bias)
+            for i, (a_, b_) in enumerate(zip(g, g_ref)):
+                if not with_bias and i == 3:
+                    continue        # bias unused -> zero grads both ways
+                rel = (np.abs(np.asarray(a_) - np.asarray(b_)).max()
+                       / (np.abs(np.asarray(b_)).max() + 1e-9))
+                assert rel < 1e-3, (mode, fuse, with_bias, i, rel)
+
+def rs_loss(use_op):
+    def f(ys, w_, r_):
+        z = (oprs(ys, w_, residual=r_) if use_op
+             else rsref(ys, w_) + r_)
+        return jax.lax.psum(jnp.sum(z * z), "model")
+    return functools.partial(shard_map, mesh=mesh, in_specs=RS3,
+                             out_specs=P(), check_vma=False)(f)
+
+for mode in ("decomposed", "xla"):
+    oprs = FusedOp(kind="rs", axis="model", mode=mode,
+                   epilogue=Epilogue(residual=True))
+    g_ref = jax.jit(jax.grad(rs_loss(False), argnums=(0, 1, 2)))(y_in, w2, res)
+    g = jax.jit(jax.grad(rs_loss(True), argnums=(0, 1, 2)))(y_in, w2, res)
+    for a_, b_ in zip(g, g_ref):
+        rel = (np.abs(np.asarray(a_) - np.asarray(b_)).max()
+               / (np.abs(np.asarray(b_)).max() + 1e-9))
+        assert rel < 1e-3, (mode, rel)
+print("EPI_GRADS_OK")
+"""
+
+
+def test_fused_epilogue_sweep_4dev(subproc):
+    """Every Epilogue combination (bias / activation / pair- and split-gate /
+    residual / scale) must match the unfused xla reference across ALL
+    VALID_MODES, with the fuse_epilogue and shared_gather knobs in both
+    positions; gradients flow through the epilogue-transposed backward."""
+    out = subproc(_EPILOGUE_SWEEP, n_devices=4, timeout=1800)
+    assert "EPI_VALUES_OK" in out
+    assert "EPI_GRADS_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# shared-gather: the gated FFN's w1/w3 pair rides ONE AllGather ring
+# (half the ppermute hops, counted via the jaxpr census) with identical
+# numerics
+# ---------------------------------------------------------------------------
+_SHARED_GATHER = r"""
+import dataclasses, functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.analysis import jaxpr_cost
+from repro.compat import shard_map
+from repro.core.overlap import Epilogue, FusedOp
+from repro.models import ffn
+from repro.parallel.sharding import TPContext
+from repro.tuning.plans import PlanSet, SeamPlan
+
+mesh = Mesh(np.array(jax.devices()), ("model",))
+n_dev = 4
+B, S, D = 2, 256, 128
+x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
+w1 = jax.random.normal(jax.random.PRNGKey(1), (D, 256)) / D**0.5
+w3 = jax.random.normal(jax.random.PRNGKey(2), (D, 256)) / D**0.5
+
+# --- op-level census: shared gather halves the ppermute hops EXACTLY ----
+def hops(shared, chunks=0):
+    op = FusedOp(kind="ag", axis="model", mode="decomposed",
+                 comm_chunks=chunks,
+                 epilogue=Epilogue(activation="silu", gate="pair"),
+                 n_weights=2, shared_gather=shared)
+    f = functools.partial(shard_map, mesh=mesh,
+                          in_specs=(P(None, "model", None), P(None, "model"),
+                                    P(None, "model")),
+                          out_specs=P(None, None, "model"), check_vma=False)(
+        lambda xs, a_, b_: op(xs, a_, b_))
+    jx = jax.make_jaxpr(f)(x, w1, w3)
+    c = jaxpr_cost.analyze_jaxpr(jx.jaxpr, {"model": n_dev})
+    return c.collective_counts.get("collective_permute", 0)
+
+for chunks in (0, 8):
+    hs, hu = hops(True, chunks), hops(False, chunks)
+    assert hs > 0 and hu == 2 * hs, (chunks, hs, hu)
+
+# --- ffn_train's double-gather fix: one ring pass end to end -------------
+p = ffn.init_ffn(jax.random.PRNGKey(0), D, 256, n_dev, jnp.float32)
+fspec = {"w1": P(None, "model"), "w3": P(None, "model"),
+         "w2": P("model", None), "norm": P(None)}
+
+def ffn_fwd(plans):
+    ctx = TPContext(axis="model", plans=plans)
+    return functools.partial(shard_map, mesh=mesh,
+                             in_specs=(fspec, P(None, "model", None)),
+                             out_specs=P(None, "model", None),
+                             check_vma=False)(
+        lambda pp, xx: ffn.ffn_train(pp, xx, ctx))
+
+shared_plans = PlanSet.uniform("decomposed")
+unshared_plans = PlanSet(
+    default=SeamPlan(mode="decomposed"),
+    seams={"mlp_ag": SeamPlan(mode="decomposed", shared_gather=False,
+                              fuse_epilogue=False)})
+
+def census(plans):
+    jx = jax.make_jaxpr(ffn_fwd(plans))(p, x)
+    return jaxpr_cost.analyze_jaxpr(jx.jaxpr, {"model": n_dev})
+
+c_s, c_u = census(shared_plans), census(unshared_plans)
+h_s = c_s.collective_counts["collective_permute"]
+h_u = c_u.collective_counts["collective_permute"]
+# both traces carry the SAME mlp_rs ring ((n-1) hops); the AG seam's hops
+# halve: shared = (n-1) + (n-1), unshared = 2(n-1) + (n-1)
+rs_hops = n_dev - 1
+assert h_s - rs_hops == (h_u - rs_hops) / 2, (h_s, h_u)
+assert c_s.collective_bytes < c_u.collective_bytes
+
+# numerics: identical result either way (and vs the xla oracle)
+out_s = np.asarray(jax.jit(ffn_fwd(shared_plans))(p, x))
+out_u = np.asarray(jax.jit(ffn_fwd(unshared_plans))(p, x))
+out_x = np.asarray(jax.jit(ffn_fwd(PlanSet.uniform("xla")))(p, x))
+assert np.abs(out_s - out_u).max() < 1e-5
+assert np.abs(out_s - out_x).max() / (np.abs(out_x).max() + 1e-9) < 1e-3
+print("SHARED_GATHER_OK")
+"""
+
+
+def test_shared_gather_halves_ring_hops_4dev(subproc):
+    """FusedOp(n_weights=2) fixes ffn_train's double gather: the jaxpr
+    census shows half the ppermute hops at the AG seam and lower collective
+    bytes, with numerics identical to the per-weight rings and the xla
+    oracle."""
+    assert "SHARED_GATHER_OK" in subproc(_SHARED_GATHER, n_devices=4,
+                                         timeout=1800)

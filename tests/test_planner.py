@@ -182,6 +182,45 @@ def test_seam_plan_validation():
 # ---------------------------------------------------------------------------
 # measured tuning (CPU: still a real timed sweep; single-device fallback)
 # ---------------------------------------------------------------------------
+def test_candidate_space_sweeps_fusion_knobs():
+    """FusedOp fusion knobs are plan-visible tuner candidates: a two-weight
+    epilogue seam sweeps shared_gather x fuse_epilogue, the roofline prefers
+    the fused/shared corner, and the knobs survive the profile round-trip."""
+    cands = autotune.candidate_space("ag", 4096, 1024, 512, 4,
+                                     n_weights=2, epilogue=True)
+    combos = {(c.shared_gather, c.fuse_epilogue) for c in cands
+              if c.mode not in ("xla", "xla_q8")}
+    assert combos == {(True, True), (True, False), (False, True),
+                      (False, False)}
+    # xla's monolithic gather consumes neither knob -> exactly one
+    # candidate per xla mode (no byte-identical duplicate rows)
+    assert sum(1 for c in cands if c.mode == "xla") == 1
+    # plain seams don't blow up the candidate table
+    plain = autotune.candidate_space("ag", 4096, 1024, 512, 4)
+    assert all(c.shared_gather and c.fuse_epilogue for c in plain)
+    n_xla = sum(1 for c in plain if c.mode in ("xla", "xla_q8"))
+    assert len(cands) == 4 * (len(plain) - n_xla) + n_xla
+    # rs/ar epilogues apply once on the reduced output either way: no sweep
+    rs_cands = autotune.candidate_space("rs", 4096, 512, 1024, 4,
+                                        epilogue=True)
+    assert all(c.shared_gather and c.fuse_epilogue for c in rs_cands)
+
+    res = autotune.tune_seam("ag", 4096, 1024, 512, 4, measure=False,
+                             n_weights=2, epilogue=True)
+    assert res.plan.shared_gather and res.plan.fuse_epilogue
+    # the analytic model really discriminates: unshared/unfused rows cost more
+    for row in res.table:
+        if row["mode"] != res.plan.mode or row["comm_chunks"] != \
+                res.plan.comm_chunks or row["reverse"] != res.plan.reverse:
+            continue
+        if not row["shared_gather"] or not row["fuse_epilogue"]:
+            assert row["predicted_s"] > res.plan.predicted_s
+
+    rt = SeamPlan.from_json(res.plan.to_json())
+    assert rt == res.plan
+    assert SeamPlan.from_json(_plan().to_json()).shared_gather is True
+
+
 def test_measured_tuning_picks_fastest_candidate():
     res = autotune.tune_seam("ag", 64, 64, 64, 4, measure=True,
                              iters=2, warmup=1)
