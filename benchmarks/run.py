@@ -6,7 +6,8 @@ import argparse
 import io
 from contextlib import redirect_stdout
 
-from benchmarks import kernel_bench, model_level, op_level, swizzle, tuning
+from benchmarks import (kernel_bench, model_level, op_level, serving, swizzle,
+                        tuning)
 
 
 def _run(name, mod, full):
@@ -32,6 +33,8 @@ def main() -> None:
     _run("tile-coordinate swizzle (Fig. 8)", swizzle, args.full)
     _run("model-level train/prefill/decode (Figs. 1, 16, 17)", model_level,
          args.full)
+    _run("mixed-length serving (continuous batching vs vLLM workload)",
+         serving, args.full)
     _run("kernel micro-bench", kernel_bench, args.full)
 
 

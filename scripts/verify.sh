@@ -59,7 +59,29 @@ echo "ok"
 
 echo "== tier-1 test suite =="
 if [[ "$FAST" == 1 ]]; then
-  python -m pytest -x -q -m "not multidev" "$@"
+  # the serving regressions run FIRST in the fast lane: they guard the
+  # continuous-batching cache-corruption bugs (per-slot positions, batched
+  # prefill admission) and fail in seconds when the serving path breaks.
+  python -m pytest -x -q tests/test_serving_regression.py
+  python -m pytest -x -q -m "not multidev" --ignore=tests/test_serving_regression.py "$@"
 else
   python -m pytest -x -q "$@"
 fi
+
+echo "== serving smoke bench (BENCH_serving.json well-formedness) =="
+python benchmarks/serving.py --smoke
+python - <<'EOF'
+import json
+doc = json.load(open("experiments/BENCH_serving.json"))
+rows = doc["modes"]
+assert len(rows) >= 2, f"need >= 2 overlap modes, got {len(rows)}"
+for r in rows:
+    assert r["tokens_per_s"] > 0 and r["new_tokens"] > 0, r
+    assert r["prefill_dispatches"] == r["requests"], \
+        f"admission must be ONE prefill dispatch per request: {r}"
+    assert {"mean", "p50", "max"} <= set(r["request_latency_s"]), r
+    assert r["outputs_match_reference"], \
+        f"overlap mode {r['mode']} changed serving outputs"
+print("BENCH_serving.json ok:",
+      ", ".join(f"{r['mode']}={r['tokens_per_s']:.0f} tok/s" for r in rows))
+EOF

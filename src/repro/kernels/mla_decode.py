@@ -25,11 +25,12 @@ from repro import compat
 NEG_INF = -1e30
 
 
-def _mla_kernel(valid_ref,                     # SMEM [1]: valid length
+def _mla_kernel(valid_ref,                     # SMEM [B]: per-row valid length
                 qe_ref, qr_ref, c_ref, kr_ref,  # VMEM blocks
                 o_ref,
                 m_ref, l_ref, acc_ref,
                 *, bs: int, scale: float):
+    bi = pl.program_id(0)
     sj = pl.program_id(1)
     n_s = pl.num_programs(1)
 
@@ -47,7 +48,7 @@ def _mla_kernel(valid_ref,                     # SMEM [1]: valid length
     s = (jnp.dot(qe, c.T, preferred_element_type=jnp.float32)
          + jnp.dot(qr, kr.T, preferred_element_type=jnp.float32)) * scale
     pos = sj * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(pos < valid_ref[0], s, NEG_INF)
+    s = jnp.where(pos < valid_ref[bi], s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -69,9 +70,12 @@ def mla_decode_attention(q_eff: jax.Array, q_rope: jax.Array,
                          valid_len: jax.Array, *, scale: float,
                          bs: int = 512, interpret: bool | None = None) -> jax.Array:
     """q_eff: [B, H, R]; q_rope: [B, H, Dr]; c_cache: [B, S, R];
-    kr_cache: [B, S, Dr]; valid_len: scalar int32 (positions < valid attend).
+    kr_cache: [B, S, Dr]; valid_len: [B] int32 per-row valid lengths (row b
+    attends to positions < valid_len[b]); a scalar broadcasts to all rows.
     Returns ctx over the latent: [B, H, R] fp32."""
     b, h, r = q_eff.shape
+    valid_len = jnp.broadcast_to(
+        jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
     s = c_cache.shape[1]
     dr = q_rope.shape[-1]
     bs = min(bs, s)
@@ -105,5 +109,5 @@ def mla_decode_attention(q_eff: jax.Array, q_rope: jax.Array,
             dimension_semantics=("parallel", "arbitrary")),
         cost_estimate=cost,
         interpret=interpret,
-    )(valid_len.reshape(1), q_eff, q_rope, c_cache, kr_cache)
+    )(valid_len, q_eff, q_rope, c_cache, kr_cache)
     return out

@@ -59,6 +59,8 @@ def mla_decode_attention_ref(q_eff, q_rope, c_cache, kr_cache, valid_len,
          + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
                       kr_cache.astype(jnp.float32))) * scale
     pos = jnp.arange(c_cache.shape[1])
-    s = jnp.where(pos[None, None, :] < valid_len, s, -1e30)
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32).reshape(-1),
+                          (c_cache.shape[0],))
+    s = jnp.where(pos[None, None, :] < vl[:, None, None], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhs,bsr->bhr", w, c_cache.astype(jnp.float32))

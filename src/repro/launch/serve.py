@@ -25,19 +25,43 @@ def main() -> None:
     ap.add_argument("--mode", default="decomposed")
     ap.add_argument("--plan-profile", default=None,
                     help="tuned per-seam profile JSON (repro.tuning)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune seam plans first (decode_ar at --max-batch, "
+                         "matching the server's decode jit signature); "
+                         "requires --tp > 1 — there are no seams to tune "
+                         "on a single shard")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="concurrent decode slots (the server's jit batch)")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="EOS token id (-1: never stop early)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     par = ParallelConfig(tp=args.tp, dp=args.dp, overlap_mode=args.mode,
                          plan_profile=args.plan_profile)
+    if args.autotune and args.tp <= 1:
+        print("warning: --autotune skipped (tp=1 has no TP seams to tune); "
+              "pass --tp > 1 to tune the serving plans")
+    if args.autotune and args.tp > 1:
+        import dataclasses
+        import os
+
+        from repro.tuning import (PlanRegistry, autotune_model,
+                                  default_plans_dir)
+        path = args.plan_profile or os.path.join(
+            default_plans_dir(), f"{args.arch}_tp{args.tp}.json")
+        reg = PlanRegistry.open(path, n_dev=args.tp)
+        autotune_model(cfg, par, decode_batch=args.max_batch,
+                       registry=reg, save_path=path)
+        par = dataclasses.replace(par, plan_profile=path)
     mesh = make_mesh(1, args.dp, args.tp)
     params = M.init_model(jax.random.PRNGKey(0), cfg, par)
 
-    sc = ServeConfig(max_batch=4, max_seq=args.max_seq, eos_token=-1,
-                     max_new_tokens=args.max_new)
+    sc = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
+                     eos_token=args.eos, max_new_tokens=args.max_new)
     server = Server(cfg, par, mesh, params, sc)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(

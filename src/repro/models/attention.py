@@ -182,7 +182,8 @@ def gqa_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
 def gqa_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
                cfg: ModelConfig) -> Tuple[Array, Dict]:
     """x: [B, 1, D] replicated over TP; cache: {k,v: [B, S_max, Hkv_l, Dh]}.
-    ``pos``: scalar current position.  Returns (out [B,1,D], new cache)."""
+    ``pos``: [B] int32 — each row's own write position (continuous batching
+    decodes staggered slots in one step).  Returns (out [B,1,D], new cache)."""
     tp = ctx.tp
     d = AttnDims.of(cfg, tp)
     hl, hkvl = d.h_pad // tp, d.hkv_pad // tp
@@ -197,24 +198,23 @@ def gqa_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     k = k.reshape(b, 1, hkvl, d.dh)
     v = v.reshape(b, 1, hkvl, d.dh)
 
-    pb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    pb = pos[:, None]                                    # [B, 1] per-row RoPE
     if cfg.rope_style in ("rope", "mrope"):
         q = layers.apply_rope(q, pb, cfg.rope_theta)
         k = layers.apply_rope(k, pb, cfg.rope_theta)
 
-    ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
-                                         pos, axis=1)
-    cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
-                                         pos, axis=1)
+    ck = layers.cache_update_rows(cache["k"], k, pos)
+    cv = layers.cache_update_rows(cache["v"], v, pos)
 
     # single-token attention over the cache (memory-bound; roofline's decode
-    # bottleneck).  mask positions > pos.
+    # bottleneck).  per-row mask: row b attends to positions <= pos[b].
     s_max = ck.shape[1]
     group = hl // hkvl
     qg = q.reshape(b, 1, hkvl, group, d.dh)
     scores = jnp.einsum("bohgd,bshd->bhgos", qg.astype(jnp.float32),
                         ck.astype(jnp.float32)) * (d.dh ** -0.5)
-    valid = (jnp.arange(s_max) <= pos)[None, None, None, None, :]
+    valid = (jnp.arange(s_max)[None, :] <= pos[:, None])[:, None, None, None, :]
     scores = jnp.where(valid, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     attn = jnp.einsum("bhgos,bshd->bohgd", w, cv.astype(jnp.float32))
@@ -326,12 +326,13 @@ def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     """Absorbed-form MLA decode: the KV cache stores only the latent
     (kv_lora_rank + rope) per token — DeepSeek's decode memory win.  The
     nope-scores absorb W_uk into the query; values absorb W_uv after the
-    weighted latent sum."""
+    weighted latent sum.  ``pos``: [B] int32 per-row write positions."""
     m = cfg.mla
     tp = ctx.tp
     h_pad = pad_heads(cfg.num_heads, tp)
     hl = h_pad // tp
     b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     q_lat = layers.rms_norm(jnp.einsum("bsd,dr->bsr", h, p["w_dq"]),
@@ -341,7 +342,7 @@ def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
                              cfg.norm_eps)
     k_rope = kv_all[..., m.kv_lora_rank:]
 
-    pb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1))
+    pb = pos[:, None]                                    # [B, 1] per-row RoPE
     k_rope = layers.apply_rope(k_rope[:, :, None, :], pb,
                                cfg.rope_theta)[:, :, 0, :]
 
@@ -358,10 +359,8 @@ def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     q_eff = jnp.einsum("bohd,rhd->bohr", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))
 
-    c_cache = lax.dynamic_update_slice_in_dim(
-        cache["c"], kv_lat.astype(cache["c"].dtype), pos, axis=1)
-    r_cache = lax.dynamic_update_slice_in_dim(
-        cache["kr"], k_rope.astype(cache["kr"].dtype), pos, axis=1)
+    c_cache = layers.cache_update_rows(cache["c"], kv_lat, pos)
+    r_cache = layers.cache_update_rows(cache["kr"], k_rope, pos)
 
     if ctx.use_kernels:
         # fused flash-style pass over the latent cache: ONE streaming read
@@ -369,14 +368,14 @@ def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
         from repro.kernels.mla_decode import mla_decode_attention
         ctx_lat = mla_decode_attention(
             q_eff[:, 0], q_rope[:, 0].astype(jnp.float32), c_cache, r_cache,
-            jnp.asarray(pos + 1, jnp.int32), scale=dqk ** -0.5)[:, None]
+            pos + 1, scale=dqk ** -0.5)[:, None]
     else:
         s_max = c_cache.shape[1]
         scores = (jnp.einsum("bohr,bsr->bhos", q_eff,
                              c_cache.astype(jnp.float32))
                   + jnp.einsum("bohd,bsd->bhos", q_rope.astype(jnp.float32),
                                r_cache.astype(jnp.float32))) * (dqk ** -0.5)
-        valid = (jnp.arange(s_max) <= pos)[None, None, None, :]
+        valid = (jnp.arange(s_max)[None, :] <= pos[:, None])[:, None, None, :]
         scores = jnp.where(valid, scores, -1e30)
         w = jax.nn.softmax(scores, axis=-1)
         ctx_lat = jnp.einsum("bhos,bsr->bohr", w,

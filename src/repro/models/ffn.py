@@ -124,11 +124,16 @@ def _capacity(tokens: int, mc: MoEConfig, ep: int) -> int:
 
 
 def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
-              eps: float = 1e-5) -> Tuple[Array, Array]:
+              eps: float = 1e-5, lengths=None) -> Tuple[Array, Array]:
     """x: [B, S/TP, D] -> ([B, S/TP, D], aux_loss).
 
     Stages: router -> capacity-bucketed dispatch (scatter) -> all_to_all over
     the EP group -> batched expert GEMMs -> all_to_all back -> combine.
+
+    ``lengths`` ([B] int32, optional): per-row true prompt lengths of a
+    right-padded prefill batch.  Pad tokens are removed from the capacity
+    cumsum, the dispatch, and the combine — without this they would occupy
+    expert capacity slots and EVICT real tokens of other rows.
     """
     mc = cfg.moe
     b, s_loc, dm = x.shape
@@ -164,8 +169,15 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     cap = _capacity(t, mc, 1)                           # per (global) expert here
     flat_e = eidx.reshape(-1)                           # [t*k]
     oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # [t*k, E]
+    if lengths is not None:
+        valid_t = (layers.seq_positions(b, s_loc, ctx)
+                   < lengths[:, None]).reshape(t)        # [t]
+        flat_valid = jnp.repeat(valid_t, mc.top_k)       # [t*k]
+        oh = oh * flat_valid[:, None].astype(oh.dtype)   # pads don't count
     pos_in_e = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
     keep = pos_in_e < cap
+    if lengths is not None:
+        keep = keep & flat_valid
     slot = jnp.clip(pos_in_e, 0, cap - 1)
 
     disp = jnp.zeros((e, cap, dm), ht.dtype)

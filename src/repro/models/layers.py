@@ -165,6 +165,31 @@ def shift_tokens_right(x: Array, ctx: TPContext) -> Array:
     return jnp.concatenate([prev, x[:, :-1, :]], axis=1)
 
 
+# ---------------------------------------------------------------------------
+# Per-slot decode-cache utilities (continuous batching)
+# ---------------------------------------------------------------------------
+def cache_update_rows(cache: Array, new: Array, pos: Array) -> Array:
+    """Per-row KV-cache write: ``cache[b, pos[b]:pos[b]+L] = new[b]``.
+
+    cache: [B, S_max, ...]; new: [B, L, ...] (L=1 at decode); pos: [B]
+    int32.  Each batch row writes at its OWN position — the continuous-
+    batching invariant that slots at staggered sequence positions never
+    touch each other's rows."""
+    return jax.vmap(
+        lambda c, n, p: lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), p, axis=0))(cache, new, pos)
+
+
+def take_rows(x: Array, idx: Array) -> Array:
+    """Per-row gather along the sequence axis: ``x[b, idx[b]]``.
+
+    x: [B, S, ...]; idx: [B] int32 -> [B, ...].  Used to pick each row's
+    true last-token entry out of a right-padded batched prefill."""
+    idx = jnp.clip(idx, 0, x.shape[1] - 1)
+    return jax.vmap(lambda r, i: lax.dynamic_index_in_dim(
+        r, i, axis=0, keepdims=False))(x, idx)
+
+
 def shift_tokens_left(x: Array, ctx: TPContext) -> Array:
     """x_{t+1} for a sequence-sharded [B, S/TP, D] tensor (zero at the end)."""
     if ctx.axis is None or ctx.tp == 1:

@@ -97,8 +97,16 @@ def _selective_scan_chunk(x, dt, b_in, c_in, a, h0):
 
 
 def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
-                chunk: int = 256, with_cache: bool = False):
-    """x: [B, S/TP, D] -> [B, S/TP, D]."""
+                chunk: int = 256, with_cache: bool = False,
+                lengths=None):
+    """x: [B, S/TP, D] -> [B, S/TP, D].
+
+    ``lengths`` ([B] int32, optional): per-row true prompt lengths for a
+    right-padded batched prefill.  Pad positions get dt=0 — decay exp(0)=1
+    and zero input leave the SSM state INVARIANT, so the returned ``ssm``
+    cache is exactly the state after each row's true prompt; the ``conv``
+    tail is sliced per row at its own length.  Outputs at pad positions are
+    garbage and must not be read (prefill selects logits at lengths-1)."""
     d_in, dt_rank, d_state, d_conv = _dims(cfg, ctx.tp)
     d_in_loc = d_in // ctx.tp
     b, s_loc, dm = x.shape
@@ -124,6 +132,9 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     dt_low, b_in, c_in = jnp.split(xdb, [dt_rank, dt_rank + d_state], axis=-1)
     dt = jax.nn.softplus(jnp.einsum("bsr,rc->bsc", dt_low, p["w_dt"])
                          + p["dt_bias"].astype(jnp.float32))
+    if lengths is not None:
+        in_prompt = jnp.arange(s)[None, :] < lengths[:, None]    # [B, S]
+        dt = jnp.where(in_prompt[:, :, None], dt, 0.0)
     a = -jnp.exp(p["a_log"])                             # [C_loc, N]
 
     # chunked scan over the sequence
@@ -149,7 +160,15 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     out = ctx.op("attn_rs")(y, p["w_out"])
     if with_cache:
         # conv cache stores the last d_conv-1 PRE-conv projected inputs
-        conv_tail = xs_raw[:, s - (d_conv - 1):, :]
+        if lengths is None:
+            conv_tail = xs_raw[:, s - (d_conv - 1):, :]
+        else:
+            # per-row tail BEFORE each row's true length; the front zero-pad
+            # makes short prompts (len < d_conv-1) resolve to leading zeros,
+            # matching a from-scratch token-by-token decode.
+            conv_tail = jax.vmap(
+                lambda t, l: lax.dynamic_slice_in_dim(t, l, d_conv - 1,
+                                                      axis=0))(xpad, lengths)
         return out, {"conv": conv_tail.astype(x.dtype), "ssm": hfin}
     return out
 

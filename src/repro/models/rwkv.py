@@ -111,8 +111,15 @@ def _wkv_chunk(r, k, v, logw, u, s0):
 
 
 def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
-                    chunk: int = 64, with_cache: bool = False):
-    """x: [B, S/TP, D] -> [B, S/TP, D]."""
+                    chunk: int = 64, with_cache: bool = False,
+                    lengths=None):
+    """x: [B, S/TP, D] -> [B, S/TP, D].
+
+    ``lengths`` ([B] int32, optional): per-row true prompt lengths for a
+    right-padded batched prefill.  Pad positions get k=0 and logw=0 (decay
+    exp(0)=1): ``S_t = diag(1) S_{t-1} + 0`` leaves the WKV state INVARIANT,
+    so the returned ``state`` cache is exactly each row's state after its
+    true prompt and ``last`` is the true final token's normed input."""
     n_heads, dh, d_attn = _dims(cfg, ctx.tp)
     hl = n_heads // ctx.tp
     b, s_loc, dm = x.shape
@@ -145,6 +152,11 @@ def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         return t.reshape(b, s, hl, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
 
     r_, k_, v_, w_ = heads(r), heads(kk), heads(vv), heads(logw)
+    if lengths is not None:
+        in_prompt = (jnp.arange(s)[None, :]
+                     < lengths[:, None])[:, None, :, None]      # [B,1,S,1]
+        k_ = jnp.where(in_prompt, k_, 0.0)
+        w_ = jnp.where(in_prompt, w_, 0.0)
     # u_bonus / dec_base are head-sharded over TP -> already local here
     u_loc = p["u_bonus"].reshape(hl, dh)
 
@@ -169,12 +181,15 @@ def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     y = y * jax.nn.silu(g)
     out = ctx.op("attn_rs")(y, p["w_o"])
     if with_cache:
-        return out, {"state": sfin, "last": hg[:, -1]}
+        last = (hg[:, -1] if lengths is None
+                else layers.take_rows(hg, lengths - 1))
+        return out, {"state": sfin, "last": last}
     return out
 
 
 def rwkv_channel_train(p: Dict, x: Array, ctx: TPContext,
-                       cfg: ModelConfig, with_cache: bool = False):
+                       cfg: ModelConfig, with_cache: bool = False,
+                       lengths=None):
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     prev = layers.shift_tokens_right(h, ctx)
     delta = prev - h
@@ -189,11 +204,17 @@ def rwkv_channel_train(p: Dict, x: Array, ctx: TPContext,
     out = jax.nn.sigmoid(r) * kv
     if with_cache:
         # last (global) token's normed input: gather the final shard's tail
-        if ctx.axis is not None and ctx.tp > 1:
-            hg_last = lax.all_gather(h[:, -1:], ctx.axis, axis=1,
-                                     tiled=True)[:, -1]
+        # (full gather + per-row take only when ``lengths`` staggers rows)
+        if lengths is None:
+            if ctx.axis is not None and ctx.tp > 1:
+                hg_last = lax.all_gather(h[:, -1:], ctx.axis, axis=1,
+                                         tiled=True)[:, -1]
+            else:
+                hg_last = h[:, -1]
         else:
-            hg_last = h[:, -1]
+            hg = (lax.all_gather(h, ctx.axis, axis=1, tiled=True)
+                  if ctx.axis is not None and ctx.tp > 1 else h)
+            hg_last = layers.take_rows(hg, lengths - 1)
         return out, {"last": hg_last}
     return out
 

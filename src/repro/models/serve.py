@@ -1,10 +1,27 @@
 """Serving paths: prefill (cache-building forward) and single-token decode.
 
 Cache layout is GLOBAL (``compat.shard_map`` slices it): per layer-position
-trees whose
-shapes come from ``cache_specs``.  Decode is the paper's vLLM-style TP
-pattern: replicated activations, local-head attention over the sharded KV
-cache, row-parallel output GEMM + AllReduce (the FLUX decode seam).
+trees whose shapes come from ``cache_specs``.  Decode is the paper's
+vLLM-style TP pattern: replicated activations, local-head attention over the
+sharded KV cache, row-parallel output GEMM + AllReduce (the FLUX decode
+seam).
+
+Continuous-batching contract (what the runtime Server relies on):
+
+* ``decode_step`` takes ``pos: [B]`` — a PER-SLOT position vector.  Every
+  batch row RoPE-rotates at, masks to, and cache-writes at its OWN
+  position (per-row ``dynamic_update_slice``), so slots at staggered
+  sequence positions decode together in one fixed-shape dispatch without
+  touching each other's cache rows.  A scalar ``pos`` still broadcasts (all
+  rows in lockstep — the bench/smoke path).
+* ``prefill_step`` takes optional ``lengths: [B]`` — per-row true prompt
+  lengths of a RIGHT-PADDED token batch.  Attention families are pad-safe
+  by causality; the state families (Mamba SSM/conv, RWKV WKV/token-shift)
+  freeze their recurrent state at each row's true length (identity decay +
+  zero input on pad positions), and the next-token logits are read at
+  ``lengths - 1`` per row.  The returned caches are therefore exactly what
+  a token-by-token decode of the unpadded prompt would have produced —
+  admission scatters them into a slot's rows in one dispatch.
 """
 from __future__ import annotations
 
@@ -149,8 +166,11 @@ def _block_decode(kind_pair, lp: Dict, lc: Dict, x: Array, pos, ctx, cfg,
 
 def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
                 ctx: TPContext, cfg: ModelConfig, par: ParallelConfig):
-    """One greedy decode step.  tokens: [B_loc, 1] int32; pos: scalar int32
-    (current write position).  Returns (next_token [B_loc,1], new caches)."""
+    """One greedy decode step.  tokens: [B_loc, 1] int32; pos: [B_loc] int32
+    per-slot write positions (a scalar broadcasts to all rows).  Returns
+    (next_token [B_loc,1], new caches)."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
+                           (tokens.shape[0],))
     v_pad = pad_vocab(cfg.vocab_size, par.tp)
     x = layers.embed_lookup(params["embed"], tokens, ctx, v_pad,
                             scatter_seq=False)
@@ -210,41 +230,53 @@ def vocab_parallel_argmax(logits_loc: Array, ctx: TPContext,
 # ---------------------------------------------------------------------------
 # Prefill
 # ---------------------------------------------------------------------------
-def _mixer_prefill(kind: str, p, x, ctx, cfg):
+def _mixer_prefill(kind: str, p, x, ctx, cfg, lengths=None):
     if kind == ATTN:
+        # causal mask keeps rows < length independent of right-padding
         return attention.gqa_train(p, x, ctx, cfg, with_cache=True)
     if kind == MLA:
         return attention.mla_train(p, x, ctx, cfg, with_cache=True)
     if kind == MAMBA:
-        return mamba.mamba_train(p, x, ctx, cfg, with_cache=True)
+        return mamba.mamba_train(p, x, ctx, cfg, with_cache=True,
+                                 lengths=lengths)
     if kind == RWKV:
-        return rwkv.rwkv_time_train(p, x, ctx, cfg, with_cache=True)
+        return rwkv.rwkv_time_train(p, x, ctx, cfg, with_cache=True,
+                                    lengths=lengths)
     raise ValueError(kind)
 
 
-def _ffn_prefill(kind: str, p, x, ctx, cfg):
+def _ffn_prefill(kind: str, p, x, ctx, cfg, lengths=None):
     if kind == DENSE_FFN:
         return ffn.ffn_train(p, x, ctx, cfg.norm_eps), {}
     if kind == MOE_FFN:
-        y, _ = ffn.moe_train(p, x, ctx, cfg)
+        y, _ = ffn.moe_train(p, x, ctx, cfg, lengths=lengths)
         return y, {}
     if kind == RWKV:
-        return rwkv.rwkv_channel_train(p, x, ctx, cfg, with_cache=True)
+        return rwkv.rwkv_channel_train(p, x, ctx, cfg, with_cache=True,
+                                       lengths=lengths)
     raise ValueError(kind)
 
 
-def _block_prefill(kind_pair, lp, x, ctx, cfg, par, z3=None, layer=None):
+def _block_prefill(kind_pair, lp, x, ctx, cfg, par, z3=None, layer=None,
+                   lengths=None):
     lp = _maybe_gather_zero3(lp, par, z3)
     ctx = ctx.with_layer(layer)
-    dy, mc = _mixer_prefill(kind_pair[0], lp["mixer"], x, ctx, cfg)
+    dy, mc = _mixer_prefill(kind_pair[0], lp["mixer"], x, ctx, cfg, lengths)
     x = x + dy
-    dy, fc = _ffn_prefill(kind_pair[1], lp["ffn"], x, ctx, cfg)
+    dy, fc = _ffn_prefill(kind_pair[1], lp["ffn"], x, ctx, cfg, lengths)
     return x + dy, {"mixer": mc, "ffn": fc}
 
 
 def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
-                 par: ParallelConfig):
-    """Full-sequence prefill: returns (next_token [B_loc,1], caches)."""
+                 par: ParallelConfig, lengths=None):
+    """Full-sequence prefill: returns (next_token [B_loc,1], caches).
+
+    ``lengths`` ([B_loc] int32, optional): per-row true prompt lengths of a
+    right-padded batch — caches freeze at each row's length (state
+    families) and logits are read at ``lengths - 1`` per row (see module
+    docstring)."""
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32).reshape(-1)
     v_pad = pad_vocab(cfg.vocab_size, par.tp)
     if "embeds" in batch:
         x = batch["embeds"]
@@ -258,7 +290,8 @@ def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
     lead = cfg.leading_dense_layers
     for i in range(lead):
         x, nc = _block_prefill(pat[i], params["lead"][i], x, ctx, cfg, par,
-                               z3["lead"][i] if z3["lead"] else None, layer=i)
+                               z3["lead"][i] if z3["lead"] else None, layer=i,
+                               lengths=lengths)
         caches["lead"].append(nc)
 
     def period_body(x, stacked_p):
@@ -266,7 +299,7 @@ def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
         for p_i, kp in enumerate(cfg.pattern):
             x, nc = _block_prefill(kp, stacked_p[p_i], x, ctx, cfg, par,
                                    z3["periods"][p_i] if z3["periods"] else None,
-                                   layer=lead + p_i)
+                                   layer=lead + p_i, lengths=lengths)
             ncs.append(nc)
         return x, tuple(ncs)
 
@@ -274,11 +307,17 @@ def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
     caches["periods"] = list(stacked_caches)
 
     h = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    # only the LAST position's logits are needed for the next token
-    if ctx.axis is not None and ctx.tp > 1:
-        h_last = lax.all_gather(h[:, -1:], ctx.axis, axis=1, tiled=True)[:, -1:]
+    # only each row's LAST true position's logits feed the next token
+    if lengths is None:
+        if ctx.axis is not None and ctx.tp > 1:
+            h_last = lax.all_gather(h[:, -1:], ctx.axis, axis=1,
+                                    tiled=True)[:, -1:]
+        else:
+            h_last = h[:, -1:]
     else:
-        h_last = h[:, -1:]
+        hg = (lax.all_gather(h, ctx.axis, axis=1, tiled=True)
+              if ctx.axis is not None and ctx.tp > 1 else h)
+        h_last = layers.take_rows(hg, lengths - 1)[:, None]
     logits = jnp.einsum("bsd,vd->bsv", h_last, params["embed"])
     nxt = vocab_parallel_argmax(logits[:, -1], ctx, v_pad, cfg.vocab_size)
     return nxt[:, None], caches

@@ -1,15 +1,29 @@
 """Batched serving runtime: continuous batching over prefill/decode steps.
 
-vLLM-shaped but TPU/JAX-idiomatic: fixed-shape decode batches (static jit
-signatures), slot-based KV cache with per-slot position counters, greedy
-sampling.  Requests are admitted into free slots after a prefill; finished
-slots (EOS or max_len) are recycled.
+vLLM-shaped but TPU/JAX-idiomatic, built on two fixed-shape jit programs:
+
+* **Per-slot decode** — ONE ``decode_step`` dispatch advances every active
+  slot at its OWN position (``pos: [B]`` vector; per-row RoPE, per-row
+  causal mask, per-row KV writes).  Slots at staggered sequence positions
+  never touch each other's cache rows, so continuous batching of
+  mixed-length requests is numerically identical to serving each request
+  alone.
+* **Batched-prefill admission** — ``admit`` pads the prompt into a
+  power-of-two length bucket, runs ONE ``prefill_step`` dispatch (per-row
+  ``lengths`` keep the caches exact under right-padding, including the
+  Mamba/RWKV recurrent states), and scatters the resulting cache tree into
+  the target slot's rows with one donated ``dynamic_update_slice`` program.
+  Admission is O(1) dispatches — never an O(prompt_len) decode loop — and
+  never writes another slot's rows.
+
+Finished slots (EOS or max_len) are recycled; ``serve`` tracks completion
+by request id and drains each finished request exactly once.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +53,25 @@ class Request:
     done: bool = False
 
 
+def _prefill_bucket(n: int, max_seq: int, tp: int = 1) -> int:
+    """Power-of-two length bucket (>= 8) for the admission prefill jit —
+    bounds recompiles to O(log max_seq) signatures.  The bucket must divide
+    by ``tp`` (sequence-sharded prefill: embed psum_scatter / seam gathers)
+    and fit the server cache (<= max_seq)."""
+    b = 8
+    while b < n:
+        b *= 2
+    if b % tp:
+        b = -(-b // tp) * tp
+    if b > max_seq:
+        b = (max_seq // tp) * tp          # largest tp-divisible pad length
+    if b < n:
+        raise ValueError(
+            f"prompt length {n} does not fit a tp={tp}-divisible prefill "
+            f"pad within max_seq={max_seq}")
+    return b
+
+
 class Server:
     def __init__(self, cfg: ModelConfig, par: ParallelConfig, mesh,
                  params, sc: ServeConfig):
@@ -63,77 +96,156 @@ class Server:
         self.positions = np.zeros((sc.max_batch,), np.int32)
         self.slots: List[Optional[Request]] = [None] * sc.max_batch
         self._decode = self._make_decode()
-        self._prefill_cache: Dict[int, object] = {}
+        self._prefill_fns: Dict[int, object] = {}   # bucket len -> jit
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+        self.prefill_dispatches = 0                 # observability/tests
+        self.decode_dispatches = 0
+
+    def _dp_spec(self):
+        dp = self.ctx.dp_axes
+        return dp if len(dp) > 1 else (dp[0] if dp else None)
 
     def _make_decode(self):
         ctx, cfg, par = self.ctx, self.cfg, self.par
-        dp = self.ctx.dp_axes
-        dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+        dp_spec = self._dp_spec()
 
         def fn(params, caches, tokens, pos):
             return S.decode_step(params, caches, tokens, pos, ctx, cfg, par)
 
         sm = compat.shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self.pspecs, self.cache_specs, P(dp_spec, None), P()),
+            in_specs=(self.pspecs, self.cache_specs, P(dp_spec, None),
+                      P(dp_spec)),
             out_specs=(P(dp_spec, None), self.cache_specs),
             check_vma=False)
         return jax.jit(sm, donate_argnums=(1,))
 
+    def _make_prefill(self, s_pad: int):
+        """One-request prefill program for a prompt-length bucket: tokens
+        [1, s_pad] (replicated over DP — batch 1 cannot shard), per-row
+        ``lengths`` masking the right-padding."""
+        ctx, cfg, par = self.ctx, self.cfg, self.par
+        _, cspecs = S.cache_specs(cfg, par, 1, s_pad, dp_axes=())
+
+        def fn(params, tokens, lengths):
+            return S.prefill_step(params, {"tokens": tokens}, ctx, cfg, par,
+                                  lengths=lengths)
+
+        sm = compat.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self.pspecs, P(None, None), P(None)),
+            out_specs=(P(None, None), cspecs),
+            check_vma=False)
+        return jax.jit(sm)
+
+    @staticmethod
+    def _scatter_impl(caches, pcaches, slot):
+        """Write a batch-1 prefill cache tree into one slot's rows.  Seq
+        dims shorter than the server cache update only the prefix (rows
+        beyond the prompt stay untouched and masked until decode overwrites
+        them).  Other slots' rows are never written."""
+        zero = jnp.asarray(0, jnp.int32)
+
+        def at(axis):
+            def leaf(c, pc):
+                starts = [zero] * c.ndim
+                starts[axis] = slot
+                return jax.lax.dynamic_update_slice(
+                    c, pc.astype(c.dtype), starts)
+            return leaf
+
+        # lead leaves are [B, ...]; scanned period leaves carry a leading
+        # repetition axis: [reps, B, ...]
+        return {"lead": jax.tree.map(at(0), caches["lead"], pcaches["lead"]),
+                "periods": jax.tree.map(at(1), caches["periods"],
+                                        pcaches["periods"])}
+
     # ------------------------------------------------------------------ API
     def admit(self, req: Request) -> bool:
-        """Prefill a request into a free slot (single-slot prefill: feeds the
-        prompt token-by-token through decode_step — correct for every arch
-        family; batched flash prefill is the prefill_step path used at
-        scale)."""
-        for slot, cur in enumerate(self.slots):
-            if cur is None:
-                self.slots[slot] = req
-                toks = np.zeros((self.sc.max_batch, 1), np.int32)
-                for t_idx, tok in enumerate(req.prompt):
-                    toks[slot, 0] = tok
-                    nxt, self.caches = self._decode(
-                        self.params, self.caches, jnp.asarray(toks),
-                        jnp.asarray(t_idx, jnp.int32))
-                self.positions[slot] = len(req.prompt)
-                req.output.append(int(np.asarray(nxt)[slot, 0]))
-                return True
-        return False
+        """Prefill a request into a free slot: ONE batched ``prefill_step``
+        dispatch on the bucket-padded prompt + one cache scatter into the
+        slot's rows.  Returns False when no slot is free."""
+        slot = next((i for i, cur in enumerate(self.slots) if cur is None),
+                    None)
+        if slot is None:
+            return False
+        n = len(req.prompt)
+        if not 0 < n < self.sc.max_seq:
+            raise ValueError(f"prompt length {n} outside (0, "
+                             f"{self.sc.max_seq}) for rid {req.rid}")
+        s_pad = _prefill_bucket(n, self.sc.max_seq, self.par.tp)
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :n] = req.prompt
+        fn = self._prefill_fns.get(s_pad)
+        if fn is None:
+            fn = self._prefill_fns[s_pad] = self._make_prefill(s_pad)
+        nxt, pcaches = fn(self.params, jnp.asarray(toks),
+                          jnp.asarray([n], jnp.int32))
+        self.prefill_dispatches += 1
+        self.caches = self._scatter(self.caches, pcaches,
+                                    jnp.asarray(slot, jnp.int32))
+        self.slots[slot] = req
+        self.positions[slot] = n
+        req.output.append(int(np.asarray(nxt)[0, 0]))
+        self._finish_if_done(slot)
+        return True
 
-    def step(self) -> None:
-        """One decode step for every active slot."""
+    def _finish_if_done(self, i: int) -> Optional[Request]:
+        req = self.slots[i]
+        if req is None:
+            return None
+        if (req.output[-1] == self.sc.eos_token
+                or len(req.output) >= self.sc.max_new_tokens
+                or self.positions[i] >= self.sc.max_seq - 1):
+            req.done = True
+            self.slots[i] = None
+            self.positions[i] = 0
+            return req
+        return None
+
+    def step(self) -> List[Request]:
+        """One decode step for every active slot — each at its OWN position.
+        Returns the requests that finished on this step."""
         if not any(s is not None for s in self.slots):
-            return
+            return []
         toks = np.zeros((self.sc.max_batch, 1), np.int32)
         for i, req in enumerate(self.slots):
             if req is not None and req.output:
                 toks[i, 0] = req.output[-1]
-        pos = int(max(self.positions[i] for i, r in enumerate(self.slots)
-                      if r is not None))
         nxt, self.caches = self._decode(self.params, self.caches,
                                         jnp.asarray(toks),
-                                        jnp.asarray(pos, jnp.int32))
+                                        jnp.asarray(self.positions))
+        self.decode_dispatches += 1
         nxt = np.asarray(nxt)
+        finished: List[Request] = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            tok = int(nxt[i, 0])
-            req.output.append(tok)
+            req.output.append(int(nxt[i, 0]))
             self.positions[i] += 1
-            if (tok == self.sc.eos_token
-                    or len(req.output) >= self.sc.max_new_tokens
-                    or self.positions[i] >= self.sc.max_seq - 1):
-                req.done = True
-                self.slots[i] = None
+            fin = self._finish_if_done(i)
+            if fin is not None:
+                finished.append(fin)
+        return finished
 
     def serve(self, requests: List[Request]) -> List[Request]:
-        pending = list(requests)
+        """Run a request queue to completion.  Completion is tracked by rid
+        (each finished request drains exactly once — O(1) per step, no
+        full-queue rescans)."""
+        pending = deque(requests)
         done: List[Request] = []
+        done_rids = set()
+
+        def drain(req: Optional[Request]) -> None:
+            if req is not None and req.rid not in done_rids:
+                done_rids.add(req.rid)
+                done.append(req)
+
         while pending or any(s is not None for s in self.slots):
             while pending and self.admit(pending[0]):
-                pending.pop(0)
-            self.step()
-            for r in requests:
-                if r.done and r not in done:
-                    done.append(r)
+                req = pending.popleft()
+                if req.done:                  # finished at admission (EOS /
+                    drain(req)                # max_new_tokens == 1)
+            for fin in self.step():
+                drain(fin)
         return done

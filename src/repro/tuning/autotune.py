@@ -296,10 +296,24 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
 # ---------------------------------------------------------------------------
 # whole-model tuning
 # ---------------------------------------------------------------------------
+def serving_decode_batch() -> int:
+    """The decode-AR seam's m dimension under the serving runtime: the
+    Server jits ``decode_step`` at ``ServeConfig.max_batch`` rows, so plans
+    tuned for any other batch would miss the server's actual signature."""
+    from repro.runtime.server import ServeConfig
+    return ServeConfig().max_batch
+
+
 def model_seam_shapes(cfg, par, tokens_per_dp: int = 2048,
-                      decode_batch: int = 8) -> Dict[str, Tuple[str, int, int, int]]:
-    """(kind, m, n, k) per model seam, from the arch's padded GEMM shapes."""
+                      decode_batch: Optional[int] = None
+                      ) -> Dict[str, Tuple[str, int, int, int]]:
+    """(kind, m, n, k) per model seam, from the arch's padded GEMM shapes.
+    ``decode_batch`` defaults to the serving runtime's ``ServeConfig.
+    max_batch`` (the server's decode jit batch); pass the actual
+    ``--max-batch`` when tuning for a differently-sized deployment."""
     from repro.parallel.sharding import pad_ff, pad_vocab
+    if decode_batch is None:
+        decode_batch = serving_decode_batch()
     tp = par.tp
     d = cfg.d_model
     ffp = pad_ff(cfg.d_ff, tp)
@@ -328,7 +342,7 @@ def model_seam_shapes(cfg, par, tokens_per_dp: int = 2048,
 
 
 def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
-                   decode_batch: int = 8, measure="auto",
+                   decode_batch: Optional[int] = None, measure="auto",
                    registry=None, save_path: Optional[str] = None,
                    allow_flux: bool = True, allow_q8: bool = False) -> PlanSet:
     """Tune every seam of a model and return the resulting PlanSet.

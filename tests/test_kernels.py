@@ -178,3 +178,27 @@ def test_mla_decode_kernel(b, h, r, dr, s, valid):
     want = ref.mla_decode_attention_ref(qe, qr, c, kr, vl, 0.1)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                atol=2e-5, rtol=2e-5)
+
+
+def test_mla_decode_kernel_per_row_lengths():
+    """Per-slot decode: each batch row masks at its OWN valid length."""
+    from repro.kernels.mla_decode import mla_decode_attention
+    b, h, r, dr, s = 3, 4, 64, 16, 256
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    qe = jax.random.normal(ks[0], (b, h, r), jnp.float32)
+    qr = jax.random.normal(ks[1], (b, h, dr), jnp.float32)
+    c = jax.random.normal(ks[2], (b, s, r), jnp.bfloat16)
+    kr = jax.random.normal(ks[3], (b, s, dr), jnp.bfloat16)
+    vl = jnp.asarray([17, 200, 256], jnp.int32)
+    out = mla_decode_attention(qe, qr, c, kr, vl, scale=0.1, bs=128,
+                               interpret=True)
+    want = ref.mla_decode_attention_ref(qe, qr, c, kr, vl, 0.1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # row b must equal a single-row call at its own length
+    for i in range(b):
+        solo = mla_decode_attention(qe[i:i + 1], qr[i:i + 1], c[i:i + 1],
+                                    kr[i:i + 1], vl[i:i + 1], scale=0.1,
+                                    bs=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(solo[0]),
+                                   atol=2e-5, rtol=2e-5)
