@@ -32,10 +32,8 @@ def measured_us(seam: str, m: int, n: int, k: int, mode: str,
     """Single-device structural timing at reduced dims (TP=1 fallback)."""
     x = jnp.zeros((1, m, k), jnp.bfloat16)
     w = jnp.zeros((k, n), jnp.bfloat16)
-    if seam == "ag":
-        fn = jax.jit(lambda a, b: overlap.ag_matmul(a, b, None, mode))
-    else:
-        fn = jax.jit(lambda a, b: overlap.matmul_rs(a, b, None, mode))
+    op = overlap.FusedOp(kind=seam, mode=mode)
+    fn = jax.jit(lambda a, b: op(a, b))
     fn(x, w).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):

@@ -102,6 +102,29 @@ def main(full: bool = False) -> None:
                             else None) for r in res_g.table],
     })
 
+    # Activation-layout (scatter_axis) sweep: per m, the PAIRED per-layer
+    # seams (AG + RS) under the sequence-sharded vs replicated residual
+    # stream.  Comm volume is layout-invariant by construction (AG+RS over
+    # seq == one ring AllReduce); "seq" keeps 1/tp of the activation
+    # resident between seams — the joint knob autotune_model stamps onto
+    # every residual seam plan.
+    for m in ms:
+        for axis in ("seq", "hidden"):
+            # hidden's RS is the monolithic ring AllReduce (the chunked-AR
+            # transport would move chunks x the bytes); seq rides the rings
+            rs_mode = "xla" if axis == "hidden" else "decomposed"
+            ag = ect.model_overlap("ag", m, n, k, N_TP, "decomposed",
+                                   scatter_axis=axis)
+            rs = ect.model_overlap("rs", m, k, n, N_TP, rs_mode,
+                                   scatter_axis=axis)
+            overall = ag["overall"] + rs["overall"]
+            print(f"tuning_scatteraxis_m{m}_{axis},{overall*1e6:.0f},"
+                  f"{(ag['act_bytes']+rs['act_bytes'])/2**20:.2f}MiB")
+            doc.setdefault("layout", {}).setdefault("scatter_axis", []).append(
+                {"m": m, "scatter_axis": axis, "overall_s": overall,
+                 "act_bytes": ag["act_bytes"] + rs["act_bytes"],
+                 "comm_bytes": ag["comm_bytes"] + rs["comm_bytes"]})
+
     # Fig. 9 (pull/push analogue): ring direction.  On a torus both single
     # directions model identically (reverse is still a real knob — measured
     # tuning discriminates them on hardware with asymmetric links); the

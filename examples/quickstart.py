@@ -23,8 +23,9 @@ def main():
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 128))
     w = jax.random.normal(jax.random.PRNGKey(1), (128, 256)) * 0.1
     for mode in overlap.VALID_MODES:
-        y = overlap.ag_matmul(x, w, None, mode)
-        print(f"ag_matmul[{mode:10s}] -> {y.shape}, mean={float(y.mean()):+.4f}")
+        y = overlap.FusedOp(kind="ag", mode=mode)(x, w)
+        print(f"FusedOp(ag)[{mode:10s}] -> {y.shape}, "
+              f"mean={float(y.mean()):+.4f}")
 
     # --- 2. a reduced architecture from the zoo -----------------------------
     cfg = get_smoke_config("codeqwen15_7b")

@@ -1,12 +1,18 @@
 #!/usr/bin/env bash
 # Tier-1 gate: compat grep-lint + full correctness suite.
 #
-# Usage:  scripts/verify.sh [--fast] [extra pytest args]
+# Usage:  scripts/verify.sh [--fast|--jax-min] [extra pytest args]
 #
-#   --fast   skip the multi-device subprocess sweeps (tests marked
-#            ``multidev`` — everything that spawns a fresh python with
-#            forced host devices).  Quick iteration tier; the FULL suite
-#            remains the default and the PR gate.
+#   --fast     skip the multi-device subprocess sweeps (tests marked
+#              ``multidev`` — everything that spawns a fresh python with
+#              forced host devices).  Quick iteration tier; the FULL suite
+#              remains the default and the PR gate.
+#   --jax-min  run ONLY the compat contract tests with the detected JAX
+#              capped to the 0.4.30 floor of the supported range
+#              (REPRO_COMPAT_ASSUME_JAX) — exercises the oldest-generation
+#              code paths (psum axis-size spelling, no fused-collective
+#              composition) — plus the BENCH_tuning.json layout-sweep
+#              well-formedness check.
 #
 # Runs on CPU CI machines (no TPU): kernels execute in Pallas interpret mode
 # (REPRO_PALLAS_INTERPRET=1).  Every PR must pass this before review.
@@ -14,8 +20,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 FAST=0
+JAX_MIN=0
 if [[ "${1:-}" == "--fast" ]]; then
   FAST=1
+  shift
+elif [[ "${1:-}" == "--jax-min" ]]; then
+  JAX_MIN=1
   shift
 fi
 
@@ -44,18 +54,59 @@ if grep -rn --include='*.py' -E \
   echo "      (model code: ctx.op(seam, epilogue=..., n_weights=...))." >&2
   exit 1
 fi
-# 2. no legacy positional mode-threading: passing plan attributes
-#    (.mode/.comm_chunks/...) into the deprecated ag_matmul/matmul_rs/
-#    matmul_ar wrappers — seams resolve a FusedOp via ctx.op(seam) instead.
+# 2. the pre-FusedOp positional wrappers are GONE (their one-release
+#    deprecation window ended): any call to ag_matmul/matmul_rs/matmul_ar
+#    is an error everywhere — no carve-outs.  (ag_matmul_ref /
+#    matmul_rs_ref / *_fused kernel entry points do not match: the regex
+#    requires the bare name directly before the call paren.)
 if grep -rn --include='*.py' -E \
-     '(ag_matmul|matmul_rs|matmul_ar)\([^)]*\.(mode|comm_chunks|reverse|blocks)' \
-     src/ | grep -v '^src/repro/core/overlap.py'; then
-  echo "FAIL: legacy positional (mode, comm_chunks, ...) threading into the" >&2
-  echo "      deprecated overlap wrappers; resolve a FusedOp via" >&2
-  echo "      ctx.op(seam, ...) instead." >&2
+     '(^|[^_[:alnum:]])(ag_matmul|matmul_rs|matmul_ar)\(' \
+     src/ benchmarks/ examples/ tests/; then
+  echo "FAIL: the removed overlap wrappers (ag_matmul/matmul_rs/matmul_ar)" >&2
+  echo "      are referenced (see above); build an overlap.FusedOp" >&2
+  echo "      (model code: ctx.op(seam, epilogue=..., n_weights=...))." >&2
   exit 1
 fi
 echo "ok"
+
+if [[ "$JAX_MIN" == 1 ]]; then
+  echo "== compat contract tests at the 0.4.30 floor (REPRO_COMPAT_ASSUME_JAX) =="
+  REPRO_COMPAT_ASSUME_JAX=0.4.30 python -m pytest -x -q tests/test_compat.py "$@"
+  REPRO_COMPAT_ASSUME_JAX=0.4.30 python - <<'EOF'
+from repro import compat
+# the cap never RAISES the version: with jax==0.4.30 actually installed
+# this equals the native detection (and version_summary carries no
+# "assumed" marker — the floor paths run natively there)
+assert compat.JAX_VERSION == (0, 4, 30), compat.JAX_VERSION
+# the floor generation cannot compose fused collective kernels in
+# interpret mode: flux seams must report the decomposed fallback
+assert not compat.fused_collective_kernels_composable()
+print("compat floor assumptions ok:", compat.version_summary())
+EOF
+  echo "== BENCH_tuning.json scatter_axis sweep rows =="
+  python - <<'EOF'
+import json
+doc = json.load(open("experiments/BENCH_tuning.json"))
+rows = doc.get("layout", {}).get("scatter_axis", [])
+assert rows, "BENCH_tuning.json has no scatter_axis sweep rows"
+axes = {r["scatter_axis"] for r in rows}
+assert axes == {"seq", "hidden"}, axes
+for r in rows:
+    assert {"m", "overall_s", "act_bytes", "comm_bytes"} <= set(r), r
+by_m = {}
+for r in rows:
+    by_m.setdefault(r["m"], {})[r["scatter_axis"]] = r
+for m, pair in by_m.items():
+    seq, hid = pair["seq"], pair["hidden"]
+    assert abs(seq["comm_bytes"] - hid["comm_bytes"]) < 1e-6 * max(
+        seq["comm_bytes"], 1.0), (m, "layer-pair comm volume must be "
+                                  "layout-invariant")
+    assert seq["act_bytes"] < hid["act_bytes"], (m, "seq must reduce "
+                                                 "activation residency")
+print(f"BENCH_tuning.json scatter_axis sweep ok: {len(rows)} rows")
+EOF
+  exit 0
+fi
 
 echo "== tier-1 test suite =="
 if [[ "$FAST" == 1 ]]; then

@@ -13,7 +13,9 @@ from typing import Any, Callable, Optional
 import jax
 from jax import lax  # noqa: F401  (axis_size fallback)
 
-if hasattr(jax, "shard_map"):                       # jax >= 0.6
+from repro.compat._version import assumed_floor
+
+if hasattr(jax, "shard_map") and not assumed_floor():   # jax >= 0.6
     _shard_map_impl: Callable = jax.shard_map
     _CHECK_KWARG = "check_vma"
 else:                                               # jax 0.4.x / 0.5.x
@@ -73,6 +75,6 @@ def axis_size(axis_name) -> int:
     """
     if axis_name is None:
         return 1
-    if hasattr(lax, "axis_size"):
+    if hasattr(lax, "axis_size") and not assumed_floor():
         return lax.axis_size(axis_name)
     return lax.psum(1, axis_name)

@@ -1,5 +1,14 @@
-"""Installed-JAX version detection for the portability layer."""
+"""Installed-JAX version detection for the portability layer.
+
+``REPRO_COMPAT_ASSUME_JAX=<version>`` caps the detected version (never
+raises it): the ``--jax-min`` CI lane sets it to the 0.4.30 floor so the
+compat contract tests exercise the OLDEST-generation code paths (psum
+axis-size spelling, no fused-collective composition, old compiler-params
+fields) on whatever JAX the container actually ships.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -19,11 +28,22 @@ def _parse(version: str) -> tuple:
     return tuple(parts)
 
 
-JAX_VERSION = _parse(jax.__version__)
+_INSTALLED = _parse(jax.__version__)
+_ASSUMED = os.environ.get("REPRO_COMPAT_ASSUME_JAX")
+
+JAX_VERSION = (min(_INSTALLED, _parse(_ASSUMED)) if _ASSUMED
+               else _INSTALLED)
+
+
+def assumed_floor() -> bool:
+    """True when ``REPRO_COMPAT_ASSUME_JAX`` downgrades the detected
+    version — feature-probed newer spellings must then be IGNORED so the
+    floor-generation code paths actually run."""
+    return JAX_VERSION < _INSTALLED
 
 
 def jax_at_least(*version: int) -> bool:
-    """True when the installed JAX is at least ``version`` (e.g. (0, 5))."""
+    """True when the (possibly capped) JAX is at least ``version``."""
     return JAX_VERSION >= tuple(version)
 
 
@@ -31,5 +51,7 @@ def version_summary() -> str:
     """One-line provenance string for logs and error messages."""
     lo = ".".join(map(str, MIN_JAX))
     hi = ".".join(map(str, MAX_TESTED_JAX))
-    return (f"jax {jax.__version__} (compat range: {lo} .. {hi}; "
+    assumed = (f"; assumed {'.'.join(map(str, JAX_VERSION))} via "
+               f"REPRO_COMPAT_ASSUME_JAX" if assumed_floor() else "")
+    return (f"jax {jax.__version__}{assumed} (compat range: {lo} .. {hi}; "
             f"newer releases resolved best-effort)")

@@ -135,6 +135,9 @@ class ParallelConfig:
     comm_chunks: int = 0             # 0 -> auto (=tp); medium-grained chunking
     plan_profile: Optional[str] = None  # tuned per-seam profile JSON
     #                                  (repro.tuning; stale files are ignored)
+    scatter_axis: str = "auto"       # residual-stream activation layout:
+    #                                  "auto" (profile/default), "seq"
+    #                                  (Megatron-SP) or "hidden" (replicated)
     grad_compress: bool = False      # int8 cross-pod gradient all-reduce
     seq_shard_attn: bool = False     # shard sequence (ring attn) when heads don't divide
     fuse_w13: bool = False           # fuse parallel input projections (w1|w3,

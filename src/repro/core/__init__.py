@@ -1,7 +1,7 @@
 # FLUX core: fine-grained communication overlap for tensor parallelism.
 from repro.core.overlap import (  # noqa: F401
-    Epilogue, FusedOp, VALID_KINDS, VALID_MODES,
-    ag_matmul, matmul_rs, matmul_ar,            # deprecated thin wrappers
+    Epilogue, FusedOp, VALID_KINDS, VALID_MODES, VALID_SCATTER_AXES,
+    gather_seq,
     ag_matmul_ref, matmul_rs_ref,
 )
 from repro.core import ect, planner  # noqa: F401

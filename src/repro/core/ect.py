@@ -95,7 +95,8 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
                   mode: str, dtype_bytes: int = 2,
                   comm_chunks: int = 0, *, n_weights: int = 1,
                   shared_gather: bool = True, epilogue: bool = False,
-                  fuse_epilogue: bool = True) -> Dict[str, float]:
+                  fuse_epilogue: bool = True,
+                  scatter_axis: str = "seq") -> Dict[str, float]:
     """Analytic OverallTime for one TP seam under each overlap strategy.
 
     seam="ag": C = AllGather_m(A[m/n,k]) @ B[k,n/n]   (per-device n_local=n/n_dev)
@@ -117,31 +118,55 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
                        AG only: rs/ar epilogues run once on the reduced
                        output either way, so the knob is a no-op there and
                        is not charged.
-    Returns dict(overall, gemm, comm, epilogue, exposed, ...).
+      scatter_axis   — activation layout of the residual stream
+                       ("seq" | "hidden", matching ``FusedOp``).  "hidden"
+                       makes the AG side comm-free (input already
+                       replicated) and the RS side a full-output AllReduce;
+                       the comm volume of an AG+RS layer pair is
+                       layout-invariant, but the per-device RESIDENT
+                       activation between seams (``act_bytes``) is 1/n_dev
+                       under "seq".
+    Returns dict(overall, gemm, comm, comm_bytes, act_bytes, epilogue,
+    exposed, ...).
     """
     base = mode[:-3] if mode.endswith("_q8") else mode
     links = 2 if mode == "decomposed_bidir" else 1
     if base == "decomposed_bidir":
         base = "decomposed"
+    seq = scatter_axis == "seq"
+    if seam == "rs" and not seq:
+        seam = "ar"                       # rs/hidden IS the all-reduce op
     if seam == "ag":
         gemm = model_gemm_time(m, n // n_dev, k, dtype_bytes) * n_weights
-        comm_bytes = (m // n_dev) * k * dtype_bytes
-        if mode.endswith("_q8"):          # int8 payload rides the gather
-            comm_bytes *= _Q8_BYTES_FACTOR
+        if seq:
+            comm_bytes = (m // n_dev) * k * dtype_bytes
+            if mode.endswith("_q8"):      # int8 payload rides the gather
+                comm_bytes *= _Q8_BYTES_FACTOR
+        else:
+            comm_bytes = 0.0              # hidden: input already replicated
+            base = "xla"                  # nothing to overlap with
         rings = 1 if shared_gather else n_weights   # saved ring hops
         comm = model_collective_time(comm_bytes, n_dev, "ag",
                                      links=links) * rings
         out_elems = m * (n // n_dev) * n_weights
+        # residual-stream activation this seam reads (resident between seams)
+        act_bytes = ((m // n_dev) if seq else m) * k * dtype_bytes
     elif seam == "rs":
         gemm = model_gemm_time(m, n, k // n_dev, dtype_bytes)
         comm_bytes = (m // n_dev) * n * dtype_bytes
         comm = model_collective_time(comm_bytes, n_dev, "rs", links=links)
         out_elems = (m // n_dev) * n
+        act_bytes = out_elems * dtype_bytes
     else:                                 # ar: full [m, n] output all-reduced
         gemm = model_gemm_time(m, n, k // n_dev, dtype_bytes)
-        comm_bytes = m * n * dtype_bytes
+        # ring all-reduce = reduce-scatter + all-gather of the SHARD: each
+        # link moves 2*(n-1) shard-sized hops (not 2*(n-1) full tensors —
+        # this is exactly the seq layout's RS+AG volume, which is what makes
+        # the scatter_axis knob comm-volume-neutral per layer pair).
+        comm_bytes = m * n * dtype_bytes / n_dev
         comm = model_collective_time(comm_bytes, n_dev, "ar", links=links)
         out_elems = m * n
+        act_bytes = out_elems * dtype_bytes
 
     launch_overhead = 5e-6          # per extra kernel launch (GPU-ish; the
     #                                 paper's "scheduling overheads" §2.2)
@@ -150,7 +175,10 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
     elif base == "decomposed":      # medium-grained: per-chunk pipeline with
         # split-GEMM inefficiency (chunk rows = m/chunks) + launch overheads.
         # AR chunks the CONTRACTION dim (m stays whole — the kind="ar"
-        # FusedOp path), so it pays no m-split penalty.
+        # FusedOp path), so it pays no m-split penalty — but every chunk's
+        # psum reduces a FULL [m, n] partial, so the chunked transport
+        # MOVES chunks x the volume (the price of hiding AR latency; the
+        # monolithic xla AR keeps the single-ring volume).
         chunks = max(comm_chunks or n_dev, 1)
         penalty = (1.0 if seam == "ar" else
                    gemm_efficiency(m) / gemm_efficiency(max(m // chunks, 1)))
@@ -159,6 +187,10 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
             # the inter-chunk adds serialize the split GEMMs (paper §2.2
             # second critique): only the hops hide, not the GEMM chunks
             overall = g + comm / chunks
+        elif seam == "ar":
+            comm = comm * chunks
+            comm_bytes = comm_bytes * chunks
+            overall = max(g, comm) + min(g / chunks, comm / chunks)
         else:
             overall = max(g, comm) + min(g, comm) / chunks
     else:                           # flux: fused kernel, unsplit GEMM speed;
@@ -175,6 +207,12 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
         epi_s = 3.0 * out_elems * dtype_bytes / HBM_BW
         overall += epi_s
     exposed = overall - gemm
-    return dict(overall=overall, gemm=gemm, comm=comm, epilogue=epi_s,
-                exposed=exposed, ect=exposed,
+    # total bytes each device's link(s) move for this seam (the "volume"
+    # the scatter_axis sweep compares: layout-invariant per AG+RS pair)
+    rings_f = 1 if (seam != "ag" or shared_gather) else n_weights
+    moved_bytes = ((2.0 if seam == "ar" else 1.0) * (n_dev - 1)
+                   * comm_bytes * rings_f)
+    return dict(overall=overall, gemm=gemm, comm=comm,
+                comm_bytes=moved_bytes, act_bytes=float(act_bytes),
+                epilogue=epi_s, exposed=exposed, ect=exposed,
                 overlap_eff=1.0 - exposed / comm if comm else 0.0)

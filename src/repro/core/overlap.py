@@ -4,16 +4,36 @@ The public surface is ONE declarative op object::
 
     FusedOp(kind="ag"|"rs"|"ar", axis=..., mode=..., comm_chunks=...,
             reverse=..., blocks=..., epilogue=Epilogue(...), n_weights=N,
-            fuse_epilogue=True, shared_gather=True)
+            fuse_epilogue=True, shared_gather=True, scatter_axis="seq")
 
     op(x, *weights, bias=..., scale=..., residual=...) -> Array | tuple
 
-``kind`` names the TP seam collective (paper Fig. 2 shapes):
+``kind`` names the TP seam collective and ``scatter_axis`` the activation
+LAYOUT the seam consumes/produces (paper Fig. 2 shapes; Megatron-SP vs
+plain TP):
 
-  ag   x[B, S/N, D] , w[D, F/N]  ->  (AllGather S) @ w  = y[B, S, F/N]
-  rs   y[B, S, F/N] , w[F/N, D]  ->  ReduceScatter_S(y @ w) = [B, S/N, D]
+  scatter_axis="seq"  — the residual stream is SEQUENCE-SHARDED between
+  seams ([B, S/N, D]); norms/residual/dropout between seams run on 1/N of
+  the activation:
+
+    ag   x[B, S/N, D] , w[D, F/N]  ->  (AllGather S) @ w  = y[B, S, F/N]
+    rs   y[B, S, F/N] , w[F/N, D]  ->  ReduceScatter_S(y @ w) = [B, S/N, D]
+
+  scatter_axis="hidden" — the residual stream stays REPLICATED ([B, S, D]);
+  the only sharding between the paired seams is the hidden dim of the
+  intermediate y, so the AG side needs NO collective (x is already full)
+  and the RS side degenerates to GEMM + AllReduce:
+
+    ag   x[B, S, D]   , w[D, F/N]  ->  x @ w               = y[B, S, F/N]
+    rs   y[B, S, F/N] , w[F/N, D]  ->  AllReduce(y @ w)    = [B, S, D]
+
   ar   y[B, m, F/N] , w[F/N, D]  ->  AllReduce(y @ w)       = [B, m, D]
-       (decode path: m == 1 new token, no sequence sharding)
+       (decode path: m == 1 new token — "ar" IS the hidden layout and
+       always coerces scatter_axis="hidden")
+
+  Total comm volume per layer is layout-invariant (AG+RS over seq ==
+  one AllReduce), but "seq" keeps 1/N of the activation resident between
+  seams — the knob the autotuner sweeps via ``SeamPlan.scatter_axis``.
 
 ``mode`` selects the transport (``VALID_MODES``): ``xla`` is the
 non-overlapping baseline, ``decomposed`` the chunked ``ppermute`` ring
@@ -45,18 +65,22 @@ re-gather for all dW_i.
 
 All ops must be called inside ``compat.shard_map``; ``axis`` names the TP
 mesh axis.  Model code never builds a ``FusedOp`` by hand — it resolves one
-through the plan registry: ``ctx.op(seam, epilogue=..., n_weights=...)``
-(i.e. ``ctx.plans.resolve(seam).op(...)``), so "what is fused" is a
-per-seam ``SeamPlan`` knob the autotuner sweeps, not a call-site constant.
+through the plan registry: ``ctx.op(seam, epilogue=..., n_weights=...,
+scatter_axis=...)`` (i.e. ``ctx.plans.resolve(seam).op(...)``), so "what is
+fused" AND "which layout the seam emits" are per-seam ``SeamPlan`` knobs
+the autotuner sweeps, not call-site constants.
 
-``ag_matmul`` / ``matmul_rs`` / ``matmul_ar`` remain as thin deprecated
-wrappers over ``FusedOp`` (one release; they warn once).
+Non-GEMM sequence payloads that must cross a seam (MLA's shared rope key,
+cache tails) ride :func:`gather_seq` — the same ppermute ring transport —
+so no standalone full-activation ``all_gather`` remains between seams.
+
+(The pre-FusedOp ``ag_matmul`` / ``matmul_rs`` / ``matmul_ar`` wrappers
+finished their one-release deprecation window and are gone.)
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -74,6 +98,12 @@ VALID_MODES = ("xla", "decomposed", "flux", "xla_q8", "decomposed_q8",
                "decomposed_bidir")
 
 VALID_KINDS = ("ag", "rs", "ar")
+
+# activation layout a seam consumes/produces (module docstring):
+#   "seq"    — sequence-sharded residual stream (Megatron-SP)
+#   "hidden" — replicated residual stream; only the intermediate's hidden
+#              dim is sharded (classic TP; the decode layout)
+VALID_SCATTER_AXES = ("seq", "hidden")
 
 
 def _axis_size(axis: Optional[str]) -> int:
@@ -155,6 +185,75 @@ def _ring_perm(axis: str, reverse: bool = False):
     if reverse:
         return [(i, (i - 1) % n) for i in range(n)]
     return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _ring_gather(x: Array, axis: str, reverse: bool = False) -> Array:
+    """Sequence AllGather implemented as a ppermute ring (shard-exact, same
+    assembly order as ``lax.all_gather(tiled=True)``): the transport every
+    seam-adjacent gather rides so no standalone collective appears between
+    seams.  Gathers along dim -2."""
+    n = compat.axis_size(axis)
+    me = lax.axis_index(axis)
+    s_shard = x.shape[-2]
+    out = jnp.zeros((*x.shape[:-2], s_shard * n, x.shape[-1]), x.dtype)
+    buf = x
+    for step in range(n):
+        owner = (me + step) % n if reverse else (me - step) % n
+        out = lax.dynamic_update_slice_in_dim(out, buf, owner * s_shard,
+                                              axis=out.ndim - 2)
+        if step < n - 1:
+            buf = lax.ppermute(buf, axis, _ring_perm(axis, reverse))
+    return out
+
+
+def gather_seq(x: Array, axis: Optional[str], mode: str = "decomposed",
+               reverse: bool = False) -> Array:
+    """Gather a sequence-sharded non-GEMM payload (rope keys, cache tails,
+    boundary rows) to full length along dim -2.
+
+    ``mode`` follows the seam plan's transport family: the ring modes ride
+    ppermute hops (census-clean: no standalone ``all_gather`` in the
+    jaxpr), ``xla*`` uses the monolithic collective.  Values are identical
+    either way."""
+    if axis is None or _axis_size(axis) == 1:
+        return x
+    if mode.startswith("decomposed"):
+        return _ring_gather(x, axis, reverse)
+    return lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
+
+
+def scatter_seq_sum(x: Array, axis: Optional[str], mode: str = "decomposed",
+                    reverse: bool = False) -> Array:
+    """ReduceScatter along dim -2 of a per-rank full-sequence partial (the
+    embedding seam's combining collective under the sequence-sharded
+    layout): out[rows of my shard] = sum over ranks of x[those rows].
+
+    The ring modes ride ppermute hops (same accumulation order as
+    ``_rs_ring``), so BOTH directions of the embed seam stay census-clean:
+    the autodiff transpose of the ppermute/slice chain is a ppermute ring
+    gather, not a monolithic ``all_gather``."""
+    if axis is None or _axis_size(axis) == 1:
+        return x
+    if not mode.startswith("decomposed"):
+        return lax.psum_scatter(x, axis, scatter_dimension=x.ndim - 2,
+                                tiled=True)
+    n = compat.axis_size(axis)
+    me = lax.axis_index(axis)
+    s_shard = x.shape[-2] // n
+
+    def owner_at(s):
+        return ((me - (n - 1 - s)) % n if reverse
+                else (me + n - 1 - s) % n)
+
+    def part(s):
+        return lax.dynamic_slice_in_dim(x, owner_at(s) * s_shard, s_shard,
+                                        axis=x.ndim - 2)
+
+    acc = part(0)
+    for s in range(1, n):
+        acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
+        acc = acc + part(s)
+    return acc
 
 
 def _sub_chunks(s_shard: int, n: int, comm_chunks: int) -> int:
@@ -469,12 +568,18 @@ class FusedOp:
     n_weights: int = 1
     fuse_epilogue: bool = True
     shared_gather: bool = True
+    scatter_axis: str = "seq"
 
     def __post_init__(self):
         if self.kind not in VALID_KINDS:
             raise ValueError(f"invalid kind {self.kind!r}")
         if self.mode not in VALID_MODES:
             raise ValueError(f"invalid overlap mode {self.mode!r}")
+        if self.scatter_axis not in VALID_SCATTER_AXES:
+            raise ValueError(f"invalid scatter_axis {self.scatter_axis!r}")
+        if self.kind == "ar":
+            # "ar" IS the replicated layout (one-token decode GEMMs)
+            object.__setattr__(self, "scatter_axis", "hidden")
         if self.n_weights < 1:
             raise ValueError("n_weights must be >= 1")
         if self.kind != "ag" and self.n_weights != 1:
@@ -491,9 +596,12 @@ class FusedOp:
     @staticmethod
     def from_plan(kind: str, plan, axis: Optional[str] = None,
                   epilogue: Optional[Epilogue] = None,
-                  n_weights: int = 1) -> "FusedOp":
+                  n_weights: int = 1,
+                  scatter_axis: Optional[str] = None) -> "FusedOp":
         """Bind a tuning ``SeamPlan`` (duck-typed: anything with
-        mode/comm_chunks/...) to a concrete seam op."""
+        mode/comm_chunks/...) to a concrete seam op.  ``scatter_axis=None``
+        takes the plan's layout knob (the context layer passes the model's
+        resolved residual layout explicitly, keeping all seams coherent)."""
         blocks = getattr(plan, "blocks", None)
         return FusedOp(
             kind=kind, axis=axis, mode=plan.mode,
@@ -503,7 +611,9 @@ class FusedOp:
             epilogue=epilogue if epilogue is not None else Epilogue(),
             n_weights=n_weights,
             fuse_epilogue=getattr(plan, "fuse_epilogue", True),
-            shared_gather=getattr(plan, "shared_gather", True))
+            shared_gather=getattr(plan, "shared_gather", True),
+            scatter_axis=(scatter_axis if scatter_axis is not None
+                          else getattr(plan, "scatter_axis", "seq")))
 
     @property
     def combines(self) -> bool:
@@ -542,7 +652,10 @@ def _apply_epilogue(op: FusedOp, ys: Sequence[Array], bias, scale, residual):
 def _fused_ag(op: FusedOp, x, ws, bias, scale, residual):
     epi = op.epilogue
     mode = op.mode
-    if op.axis is None or _axis_size(op.axis) == 1:
+    if (op.axis is None or _axis_size(op.axis) == 1
+            or op.scatter_axis == "hidden"):
+        # hidden layout: x is already the FULL replicated activation — the
+        # column-parallel GEMM needs no collective at all (Megatron's "f").
         ys = [jnp.einsum("...sd,df->...sf", x, w) for w in ws]
         return _apply_epilogue(op, ys, bias, scale, residual)
 
@@ -622,9 +735,11 @@ def _fused_ag_flux(op: FusedOp, x, ws, bias, scale, residual):
 
 def _fused_z(op: FusedOp, x, ws):
     """Pre-epilogue output of an rs/ar op (the collective's result)."""
-    if op.kind == "rs":
+    if op.kind == "rs" and op.scatter_axis == "seq":
         return _rs_core((x,), ws, op.axis, op.mode, op.comm_chunks,
                         op.reverse, op.blocks)
+    # rs/hidden degenerates to the row-parallel GEMM + AllReduce
+    # (Megatron's "g" without the sequence scatter) — exactly the "ar" op.
     return _ar_core(x, ws[0], op.axis, op.mode, op.comm_chunks)
 
 
@@ -659,13 +774,18 @@ def _fused_bwd(op: FusedOp, res, g):
     epi = op.epilogue
     single = op.axis is None or _axis_size(op.axis) == 1
 
+    hidden = op.scatter_axis == "hidden"
     if op.kind == "ag":
         # the dW contraction needs the gathered activation anyway (a
         # "sequence-partial + psum" variant was tried and REFUTED: each
         # device's g covers different weight columns, so shard-partials
-        # cannot be psum-combined; see EXPERIMENTS.md §Perf iteration log)
-        xf = x if single else lax.all_gather(x, op.axis, axis=x.ndim - 2,
-                                             tiled=True)
+        # cannot be psum-combined; see EXPERIMENTS.md §Perf iteration log).
+        # hidden layout: x is already full — no re-gather at all.  seq
+        # layout: the re-gather rides the op's own transport (gather_seq:
+        # ppermute ring for the ring modes) so no standalone all_gather
+        # remains in the step.
+        xf = x if (single or hidden) else gather_seq(x, op.axis, op.mode,
+                                                     op.reverse)
         ys = tuple(jnp.einsum("...sd,df->...sf", xf, w) for w in ws)
 
         def epi_fn(ys_, bias_, scale_, residual_):
@@ -676,11 +796,17 @@ def _fused_bwd(op: FusedOp, res, g):
 
         _, epi_vjp = jax.vjp(epi_fn, ys, bias, scale, residual)
         dys, dbias, dscale, dres = epi_vjp(g)
-        # dX: GEMM + ReduceScatter — the interchanged op, ONE ring pass for
-        # all weights (blocks are tuned for the forward shape; the
-        # transposed op auto-plans its own).
+        # dX: the interchanged op.  seq — GEMM + ReduceScatter over the
+        # sequence cotangent, ONE ring pass for all weights (blocks are
+        # tuned for the forward shape; the transposed op auto-plans its
+        # own).  hidden — NO collective: under check_rep=False shard_map,
+        # a replicated tensor's cotangent is a per-rank PARTIAL that sums
+        # to the truth across ranks, and the local sum over this rank's
+        # weight columns IS that partial.  (The completing psum happens at
+        # whichever op consumes the replicated stream with a rank-exclusive
+        # operand — see the rs/ar branch below.)
         wts = tuple(w.T for w in ws)
-        if single:
+        if single or hidden:
             dx = None
             for dy, wt in zip(dys, wts):
                 p = jnp.einsum("...sf,fd->...sd", dy, wt)
@@ -700,65 +826,27 @@ def _fused_bwd(op: FusedOp, res, g):
     _, epi_vjp = jax.vjp(epi_fn, z, bias, scale, residual)
     dz, dbias, dscale, dres = epi_vjp(g)
     w = ws[0]
-    if op.kind == "rs":
-        # dY: AllGather + GEMM — interchanged overlapped op.
+    if op.kind == "rs" and not hidden:
+        # dY: AllGather + GEMM — interchanged overlapped op.  dz is the
+        # cotangent of rank-EXCLUSIVE sequence rows, so it arrives full.
         bwd_op = dataclasses.replace(op, kind="ag", epilogue=Epilogue(),
                                      blocks=None)
         dy = _fused_ag(bwd_op, dz, (w.T,), None, None, None)
-        gf = dz if single else lax.all_gather(dz, op.axis, axis=dz.ndim - 2,
-                                              tiled=True)
+        gf = dz if single else gather_seq(dz, op.axis, op.mode, op.reverse)
         dw = jnp.einsum("...sf,...sd->fd", x, gf)
-    else:                                 # ar
-        dy = jnp.einsum("...md,fd->...mf", dz, w)
-        dw = jnp.einsum("...mf,...md->fd", x, dz)
+    else:
+        # rs/hidden and ar: z is REPLICATED, so its cotangent arrives as a
+        # per-rank partial (check_rep=False convention).  This op's x and w
+        # are rank-exclusive (hidden/contraction shards), so complete the
+        # cotangent with the interchanged collective (psum — the AllReduce
+        # backward of the AllReduce forward) BEFORE the local GEMMs.
+        dzf = dz if single else lax.psum(dz, op.axis)
+        dy = jnp.einsum("...md,fd->...mf", dzf, w)
+        dw = jnp.einsum("...mf,...md->fd", x, dzf)
     return dy.astype(x.dtype), (dw.astype(w.dtype),), dbias, dscale, dres
 
 
 _fused.defvjp(_fused_fwd, _fused_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated thin wrappers (one release: examples/ and external callers)
-# ---------------------------------------------------------------------------
-_DEPRECATED_WARNED = set()
-
-
-def _warn_deprecated(name: str) -> None:
-    if name in _DEPRECATED_WARNED:
-        return
-    _DEPRECATED_WARNED.add(name)
-    warnings.warn(
-        f"overlap.{name} is deprecated; build an overlap.FusedOp instead "
-        f"(model code: ctx.op(seam, epilogue=..., n_weights=...))",
-        DeprecationWarning, stacklevel=3)
-
-
-def ag_matmul(x: Array, w: Array, axis: Optional[str] = None,
-              mode: str = "decomposed", comm_chunks: int = 0,
-              reverse: bool = False,
-              blocks: Optional[Tuple[int, int, int]] = None) -> Array:
-    """DEPRECATED: use ``FusedOp(kind="ag", ...)``."""
-    _warn_deprecated("ag_matmul")
-    return FusedOp(kind="ag", axis=axis, mode=mode, comm_chunks=comm_chunks,
-                   reverse=reverse, blocks=blocks)(x, w)
-
-
-def matmul_rs(y: Array, w: Array, axis: Optional[str] = None,
-              mode: str = "decomposed", comm_chunks: int = 0,
-              reverse: bool = False,
-              blocks: Optional[Tuple[int, int, int]] = None) -> Array:
-    """DEPRECATED: use ``FusedOp(kind="rs", ...)``."""
-    _warn_deprecated("matmul_rs")
-    return FusedOp(kind="rs", axis=axis, mode=mode, comm_chunks=comm_chunks,
-                   reverse=reverse, blocks=blocks)(y, w)
-
-
-def matmul_ar(y: Array, w: Array, axis: Optional[str] = None,
-              mode: str = "decomposed", comm_chunks: int = 0) -> Array:
-    """DEPRECATED: use ``FusedOp(kind="ar", ...)``."""
-    _warn_deprecated("matmul_ar")
-    return FusedOp(kind="ar", axis=axis, mode=mode,
-                   comm_chunks=comm_chunks)(y, w)
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,12 @@ def main() -> None:
                     help="ring sub-chunking (0 = auto)")
     ap.add_argument("--plan-profile", default=None,
                     help="tuned per-seam profile JSON (repro.tuning)")
+    ap.add_argument("--scatter-axis", default="auto",
+                    choices=["auto", "seq", "hidden"],
+                    help="residual-stream activation layout between TP "
+                         "seams: seq = sequence-sharded (Megatron-SP, "
+                         "~1/tp activation residency), hidden = "
+                         "replicated; auto = tuned profile / default")
     ap.add_argument("--autotune", action="store_true",
                     help="tune every seam before training and save the "
                          "profile to experiments/plans/ (measured on real "
@@ -54,6 +60,7 @@ def main() -> None:
                          overlap_mode=args.mode, zero3=args.zero3,
                          comm_chunks=args.comm_chunks,
                          plan_profile=args.plan_profile,
+                         scatter_axis=args.scatter_axis,
                          grad_compress=args.grad_compress,
                          ep_over_dp=(cfg.moe is not None
                                      and cfg.moe.num_experts > 16),

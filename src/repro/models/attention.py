@@ -1,13 +1,15 @@
 """Attention blocks: GQA (with RoPE / M-RoPE) and DeepSeek MLA.
 
-Train/prefill path (sequence-sharded x, Megatron-SP):
-    x[B,S/TP,D] --ag_matmul--> qkv[B,S,local heads]  (FLUX prologue seam)
+Train/prefill path (layout per ``ctx.seq_sharded``; Megatron-SP default):
+    x[B,S/TP,D] --attn_ag op--> qkv[B,S,local heads] (FLUX prologue seam)
     blocked causal attention (local heads, full sequence)
-    attn_out --matmul_rs--> [B,S/TP,D]               (FLUX epilogue seam)
+    attn_out --attn_rs op--> [B,S/TP,D]              (FLUX epilogue seam)
+  Replicated layout: the same seams with scatter_axis="hidden" — x stays
+  [B,S,D], the AG side is a local GEMM and the RS side an AllReduce.
 
 Decode path (x replicated over TP, batch-sharded over DP):
     local-head QKV projections, KV-cache append, single-token attention,
-    output projection via matmul_ar (GEMM+AllReduce seam).
+    output projection via the decode_ar seam (GEMM+AllReduce).
 """
 from __future__ import annotations
 
@@ -133,13 +135,14 @@ def init_gqa(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16) -> Dict:
 
 def gqa_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
               positions_3d: Optional[Array] = None, with_cache: bool = False):
-    """x: [B, S/TP, D] -> [B, S/TP, D] (pre-norm residual block body).
-    with_cache=True additionally returns the prefill KV cache."""
+    """x: [B, S/TP, D] -> [B, S/TP, D] (pre-norm residual block body; the
+    replicated layout runs [B, S, D] -> [B, S, D] — same seams, hidden
+    scatter).  with_cache=True additionally returns the prefill KV cache."""
     tp = ctx.tp
     d = AttnDims.of(cfg, tp)
     hl, hkvl = d.h_pad // tp, d.hkv_pad // tp
     b, s_loc, _ = x.shape
-    s = s_loc * tp
+    s = s_loc * ctx.seq_factor
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     # QKV bias rides the AllGather seam's fused epilogue (per chunk in the
@@ -269,7 +272,7 @@ def mla_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     h_pad = pad_heads(cfg.num_heads, tp)
     hl = h_pad // tp
     b, s_loc, _ = x.shape
-    s = s_loc * tp
+    s = s_loc * ctx.seq_factor
     dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
@@ -294,10 +297,9 @@ def mla_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     kv = kv.reshape(b, s, hl, m.qk_nope_head_dim + m.v_head_dim)
     k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
 
-    if ctx.axis is not None and ctx.tp > 1:
-        k_rope = lax.all_gather(k_rope_s, ctx.axis, axis=1, tiled=True)
-    else:
-        k_rope = k_rope_s
+    # the shared rope key is a non-GEMM seam payload: it rides the seam's
+    # ring transport (no standalone all_gather; no-op when replicated)
+    k_rope = ctx.gather_seq(k_rope_s, "attn_ag")
     pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = layers.apply_rope(q_rope, pos, cfg.rope_theta)
@@ -312,10 +314,7 @@ def mla_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     attn = attn.transpose(0, 2, 1, 3).reshape(b, s, hl * m.v_head_dim)
     out = ctx.op("attn_rs")(attn, p["w_o"])
     if with_cache:
-        if ctx.axis is not None and ctx.tp > 1:
-            c_full = lax.all_gather(kv_lat, ctx.axis, axis=1, tiled=True)
-        else:
-            c_full = kv_lat
+        c_full = ctx.gather_seq(kv_lat, "attn_ag")
         return out, {"c": c_full.astype(jnp.bfloat16),
                      "kr": k_rope.astype(jnp.bfloat16)}
     return out

@@ -134,6 +134,31 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     right-padded prefill batch.  Pad tokens are removed from the capacity
     cumsum, the dispatch, and the combine — without this they would occupy
     expert capacity slots and EVICT real tokens of other rows.
+
+    Layouts: under the sequence-sharded residual stream each rank routes
+    its OWN sequence shard and the EP exchange is the capacity-bucketed
+    all_to_all.  Under the replicated layout every rank holds the same
+    tokens, so an all_to_all over the model axis would dispatch each token
+    TP times — instead each rank computes only its LOCAL experts'
+    contributions for the full token set and a psum over the EP group
+    combines them (the moe_decode strategy, with training capacity
+    semantics).
+
+    CAVEATS (where the two layouts are not interchangeable):
+
+    * capacity EVICTION order is layout-dependent — "seq" buckets per
+      source shard with a per-shard quota, the replicated branch buckets
+      one global arrival order — so WHICH tokens drop at a saturated
+      expert differs.  Drop-free (capacity_factor high enough, as the
+      equivalence tests pin) the layouts agree exactly; under drops they
+      are statistically, not numerically, equivalent.
+    * the replicated TRAIN path supports EP over the model axis only:
+      with ``ep_over_dp`` each rank's local experts contribute to EVERY
+      data shard's tokens, so router/expert grads come out as EP-group
+      partials that the DP grad contract (per-data-shard grads, averaged)
+      mis-sums — that configuration raises instead of training wrong
+      (decode, which is grad-free, keeps the full multi-axis path in
+      ``moe_decode``).
     """
     mc = cfg.moe
     b, s_loc, dm = x.shape
@@ -144,9 +169,18 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         ep = ep * compat.axis_size(a)
     e = mc.num_experts
     e_loc = max(e // ep, 1)
+    replicated = ep > 1 and not ctx.seq_sharded
 
     h = layers.rms_norm(x, p["norm"], eps)
     ht = h.reshape(t, dm)
+    if replicated and any(a != ctx.axis for a in ep_axes):
+        raise NotImplementedError(
+            "replicated activation layout (scatter_axis='hidden') does not "
+            "support training MoE with experts over the data axis "
+            "(ep_over_dp): the local-expert combine yields EP-group "
+            "partial router/expert grads that break the DP grad contract. "
+            "Train ep_over_dp MoE under the sequence-sharded layout "
+            "(scatter_axis='seq').")
 
     # ---- router (fp32) ------------------------------------------------------
     logits = jnp.einsum("td,de->te", ht.astype(jnp.float32), p["router"])
@@ -171,7 +205,7 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # [t*k, E]
     if lengths is not None:
         valid_t = (layers.seq_positions(b, s_loc, ctx)
-                   < lengths[:, None]).reshape(t)        # [t]
+                   < lengths[:, None]).reshape(b * s_loc)    # [t]
         flat_valid = jnp.repeat(valid_t, mc.top_k)       # [t*k]
         oh = oh * flat_valid[:, None].astype(oh.dtype)   # pads don't count
     pos_in_e = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
@@ -180,41 +214,69 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         keep = keep & flat_valid
     slot = jnp.clip(pos_in_e, 0, cap - 1)
 
-    disp = jnp.zeros((e, cap, dm), ht.dtype)
     src = jnp.repeat(jnp.arange(t), mc.top_k)
-    disp = disp.at[flat_e, slot].add(
-        jnp.where(keep[:, None], ht[src], 0))
-
-    # ---- all_to_all over the EP group ---------------------------------------
-    if ep > 1:
-        buf = disp.reshape(ep, e_loc, cap, dm)
-        buf = _all_to_all_grouped(buf, ep_axes)
-        # [ep, e_loc, cap, dm]: leading dim now indexes source EP rank
-        buf = jnp.moveaxis(buf, 0, 1).reshape(e_loc, ep * cap, dm)
-    else:
-        buf = disp.reshape(e_loc, cap, dm)
-
-    # ---- expert GEMMs (batched over local experts) ---------------------------
-    a1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
-    a3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
-    hidden = jax.nn.silu(a1) * a3
-    out = jnp.einsum("ecf,efd->ecd", hidden, p["w2"])
-
-    # ---- return path ----------------------------------------------------------
-    if ep > 1:
-        ret = out.reshape(e_loc, ep, cap, dm)
-        ret = jnp.moveaxis(ret, 1, 0)                    # [ep, e_loc, cap, dm]
-        ret = _all_to_all_grouped(ret, ep_axes)
-        ret = ret.reshape(e, cap, dm)
-    else:
-        ret = out.reshape(e, cap, dm)
-
-    # combine: gather each (token, k) slot's output, weighted by gate
-    vals = ret[flat_e, slot]                             # [t*k, dm]
-    vals = jnp.where(keep[:, None], vals, 0)
     gates = gate.reshape(-1)
-    comb = jax.ops.segment_sum(vals * gates[:, None], src, num_segments=t)
-    y = comb.reshape(b, s_loc, dm).astype(x.dtype)
+    if replicated:
+        # local-experts + psum: every rank holds the same bucketed dispatch
+        # (identical cumsum), computes ONLY its e_loc experts, and the EP
+        # psum combines — no all_to_all (which would dispatch every token
+        # ep times here)
+        ep_rank = jnp.zeros((), jnp.int32)
+        for a in ep_axes:
+            ep_rank = ep_rank * compat.axis_size(a) + lax.axis_index(a)
+        e_start = ep_rank * e_loc
+        local_e = flat_e - e_start
+        is_local = (local_e >= 0) & (local_e < e_loc)
+        local_e = jnp.clip(local_e, 0, e_loc - 1)
+        keep_loc = keep & is_local
+        disp = jnp.zeros((e_loc, cap, dm), ht.dtype)
+        disp = disp.at[local_e, slot].add(
+            jnp.where(keep_loc[:, None], ht[src], 0))
+        a1 = jnp.einsum("ecd,edf->ecf", disp, p["w1"])
+        a3 = jnp.einsum("ecd,edf->ecf", disp, p["w3"])
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(a1) * a3, p["w2"])
+        vals = out[local_e, slot]
+        vals = jnp.where(keep_loc[:, None], vals, 0)
+        comb = jax.ops.segment_sum(vals * gates[:, None], src,
+                                   num_segments=t)
+        for a in ep_axes:
+            comb = lax.psum(comb, a)
+        y = comb.reshape(b, s_loc, dm).astype(x.dtype)
+    else:
+        disp = jnp.zeros((e, cap, dm), ht.dtype)
+        disp = disp.at[flat_e, slot].add(
+            jnp.where(keep[:, None], ht[src], 0))
+
+        # ---- all_to_all over the EP group -----------------------------------
+        if ep > 1:
+            buf = disp.reshape(ep, e_loc, cap, dm)
+            buf = _all_to_all_grouped(buf, ep_axes)
+            # [ep, e_loc, cap, dm]: leading dim now indexes source EP rank
+            buf = jnp.moveaxis(buf, 0, 1).reshape(e_loc, ep * cap, dm)
+        else:
+            buf = disp.reshape(e_loc, cap, dm)
+
+        # ---- expert GEMMs (batched over local experts) -----------------------
+        a1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+        a3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+        hidden = jax.nn.silu(a1) * a3
+        out = jnp.einsum("ecf,efd->ecd", hidden, p["w2"])
+
+        # ---- return path -----------------------------------------------------
+        if ep > 1:
+            ret = out.reshape(e_loc, ep, cap, dm)
+            ret = jnp.moveaxis(ret, 1, 0)                # [ep, e_loc, cap, dm]
+            ret = _all_to_all_grouped(ret, ep_axes)
+            ret = ret.reshape(e, cap, dm)
+        else:
+            ret = out.reshape(e, cap, dm)
+
+        # combine: gather each (token, k) slot's output, weighted by gate
+        vals = ret[flat_e, slot]                         # [t*k, dm]
+        vals = jnp.where(keep[:, None], vals, 0)
+        comb = jax.ops.segment_sum(vals * gates[:, None], src,
+                                   num_segments=t)
+        y = comb.reshape(b, s_loc, dm).astype(x.dtype)
 
     if mc.num_shared_experts:
         sh = {"norm": p["norm"], **{k: v for k, v in p["shared"].items()}}

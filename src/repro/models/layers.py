@@ -1,10 +1,18 @@
 """Shared layers: norms, rotary embeddings, embedding / LM-head seams.
 
-Everything here runs INSIDE ``compat.shard_map`` (see ``repro/compat``)
-with sequence-sharded activations
-(Megatron-SP): x is [B, S/TP, D] between blocks.  The vocabulary-parallel
-embedding + LM head are two of the paper's TP seams (the LM head's
-AllGather-GEMM is the single largest GEMM in most of the assigned archs).
+Everything here runs INSIDE ``compat.shard_map`` (see ``repro/compat``).
+The residual-stream activation LAYOUT between TP seams is a plan knob
+(``ctx.seq_sharded``, resolved from ``SeamPlan.scatter_axis``):
+
+  * sequence-sharded (Megatron-SP, the default): x is [B, S/TP, D] between
+    blocks — norms/residual/dropout touch 1/TP of the activation;
+  * replicated (classic TP, and ALWAYS the S=1 decode path): x is
+    [B, S, D] on every rank.
+
+The vocabulary-parallel embedding + LM head are two of the paper's TP
+seams (the LM head's AllGather-GEMM is the single largest GEMM in most of
+the assigned archs); the embedding's combining collective follows the same
+layout knob (ReduceScatter over sequence vs AllReduce).
 """
 from __future__ import annotations
 
@@ -78,12 +86,17 @@ def apply_mrope(x: Array, positions_3d: Array, theta: float,
 # Vocabulary-parallel embedding (Megatron): table sharded on vocab over TP.
 # ---------------------------------------------------------------------------
 def embed_lookup(table: Array, tokens: Array, ctx: TPContext,
-                 vocab_global: int, scatter_seq: bool = True) -> Array:
+                 vocab_global: int,
+                 scatter_seq: Optional[bool] = None) -> Array:
     """Megatron vocab-parallel embedding.  table: [V/TP, D] local shard;
     tokens: [B, S] REPLICATED over the TP axis.  Out-of-shard tokens
-    contribute 0; the combining collective is a ReduceScatter along the
-    sequence (producing the sequence-sharded activation directly — the
-    embedding's RS seam) or a psum when ``scatter_seq=False`` (decode)."""
+    contribute 0; the combining collective follows the activation layout:
+    a ReduceScatter along the sequence (producing the sequence-sharded
+    activation directly — the embedding's RS seam) when the residual
+    stream is sequence-sharded, a psum (replicated layout / decode)
+    otherwise.  ``scatter_seq=None`` resolves from ``ctx.seq_sharded``."""
+    if scatter_seq is None:
+        scatter_seq = ctx.seq_sharded
     v_loc = table.shape[0]
     start = ctx.tp_index() * v_loc
     local_ids = tokens - start
@@ -93,8 +106,9 @@ def embed_lookup(table: Array, tokens: Array, ctx: TPContext,
     x = jnp.where(in_shard[..., None], x, 0)
     if ctx.axis is not None and ctx.tp > 1:
         if scatter_seq:
-            x = lax.psum_scatter(x, ctx.axis, scatter_dimension=x.ndim - 2,
-                                 tiled=True)
+            # the embed RS seam rides the plan transport (ring modes:
+            # ppermute hops forward AND backward — census-clean)
+            x = ctx.scatter_seq(x, "head_ag")
         else:
             x = lax.psum(x, ctx.axis)
     return x
@@ -144,17 +158,22 @@ def vocab_parallel_xent(logits: Array, labels: Array, ctx: TPContext,
 # ---------------------------------------------------------------------------
 def seq_positions(batch: int, s_local: int, ctx: TPContext,
                   offset: int = 0) -> Array:
-    """Absolute positions of this device's sequence shard: [B, S/TP]."""
-    base = ctx.tp_index() * s_local + offset
+    """Absolute positions of this device's sequence rows: [B, S_local].
+    Sequence-sharded layout adds the shard offset; the replicated layout's
+    local rows ARE the global rows."""
+    base = offset
+    if ctx.seq_sharded:
+        base = ctx.tp_index() * s_local + offset
     pos = base + jnp.arange(s_local, dtype=jnp.int32)
     return jnp.broadcast_to(pos, (batch, s_local))
 
 
 def shift_tokens_right(x: Array, ctx: TPContext) -> Array:
-    """x_{t-1} for a sequence-sharded [B, S/TP, D] tensor: shifts within the
-    shard and pulls the boundary column from the left neighbor (ppermute of
-    ONE token — the token-shift seam of RWKV)."""
-    if ctx.axis is None or ctx.tp == 1:
+    """x_{t-1} for a (possibly sequence-sharded) [B, S_local, D] tensor:
+    shifts within the shard and pulls the boundary column from the left
+    neighbor (ppermute of ONE token — the token-shift seam of RWKV).  The
+    replicated layout shifts locally (no boundary to exchange)."""
+    if ctx.axis is None or ctx.tp == 1 or not ctx.seq_sharded:
         return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
     last = x[:, -1:, :]
     n = ctx.tp
@@ -191,8 +210,9 @@ def take_rows(x: Array, idx: Array) -> Array:
 
 
 def shift_tokens_left(x: Array, ctx: TPContext) -> Array:
-    """x_{t+1} for a sequence-sharded [B, S/TP, D] tensor (zero at the end)."""
-    if ctx.axis is None or ctx.tp == 1:
+    """x_{t+1} for a (possibly sequence-sharded) [B, S_local, D] tensor
+    (zero at the end)."""
+    if ctx.axis is None or ctx.tp == 1 or not ctx.seq_sharded:
         return jnp.pad(x, ((0, 0), (0, 1), (0, 0)))[:, 1:]
     first = x[:, :1, :]
     n = ctx.tp

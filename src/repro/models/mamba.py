@@ -99,7 +99,9 @@ def _selective_scan_chunk(x, dt, b_in, c_in, a, h0):
 def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
                 chunk: int = 256, with_cache: bool = False,
                 lengths=None):
-    """x: [B, S/TP, D] -> [B, S/TP, D].
+    """x: [B, S/TP, D] -> [B, S/TP, D] (replicated layout: [B, S, D] with
+    the same seams under hidden scatter; the conv/scan always see the full
+    sequence either way).
 
     ``lengths`` ([B] int32, optional): per-row true prompt lengths for a
     right-padded batched prefill.  Pad positions get dt=0 — decay exp(0)=1
@@ -110,7 +112,7 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     d_in, dt_rank, d_state, d_conv = _dims(cfg, ctx.tp)
     d_in_loc = d_in // ctx.tp
     b, s_loc, dm = x.shape
-    s = s_loc * ctx.tp
+    s = s_loc * ctx.seq_factor
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     if "w_in_xz" in p:

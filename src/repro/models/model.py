@@ -359,7 +359,10 @@ def _block(kind_pair, lp: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
 
 def backbone(params: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
              par: ParallelConfig) -> Tuple[Array, Array]:
-    """x: [B, S/TP, D] -> (hidden [B, S/TP, D], aux_loss)."""
+    """x: [B, S/TP, D] -> (hidden [B, S/TP, D], aux_loss).  Replicated
+    layout (``ctx.seq_sharded`` False): [B, S, D] -> [B, S, D] — the same
+    seams run with hidden scatter and every between-seam op (norm,
+    residual, shift, RoPE offsets) sees the full sequence."""
     pat = expanded_pattern(cfg)
     z3 = zero3_flags(cfg, par)
     lead = cfg.leading_dense_layers
@@ -396,8 +399,11 @@ def forward_loss(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
                  par: ParallelConfig) -> Array:
     """Training loss (per-device mean; caller psums over DP).
 
-    batch: tokens [B_loc, S/TP] ("model"-sharded sequence) or embeds
-    [B_loc, S/TP, D]; labels [B_loc, S] (full sequence)."""
+    batch: tokens [B_loc, S] (replicated over TP; the embedding's
+    combining collective produces the residual layout) or embeds in the
+    residual layout — [B_loc, S/TP, D] sequence-sharded (default) or
+    [B_loc, S, D] replicated, per ``ctx.seq_sharded``
+    (``sharding.activation_spec``); labels [B_loc, S] (full sequence)."""
     v_pad = pad_vocab(cfg.vocab_size, par.tp)
     if "embeds" in batch:
         x = batch["embeds"]

@@ -123,28 +123,30 @@ def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     n_heads, dh, d_attn = _dims(cfg, ctx.tp)
     hl = n_heads // ctx.tp
     b, s_loc, dm = x.shape
-    s = s_loc * ctx.tp
+    s = s_loc * ctx.seq_factor
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
-    # token shift needs x_{t-1}: boundary ppermute on the shard, then gather
+    # token shift needs x_{t-1}: boundary ppermute on the shard (one-token
+    # exchange; local shift in the replicated layout)
     prev = layers.shift_tokens_right(h, ctx)
-    if ctx.axis is not None and ctx.tp > 1:
-        hg = lax.all_gather(h, ctx.axis, axis=1, tiled=True)
-        pg = lax.all_gather(prev, ctx.axis, axis=1, tiled=True)
-    else:
-        hg, pg = h, prev
-    delta = pg - hg
 
-    def mixed(i):
-        return hg + delta * p["mu"][i]
+    # ALL FIVE token-shift projections ride ONE shared-gather AG seam: the
+    # per-projection mix  mixed_i = (1-mu_i)*h + mu_i*prev  commutes into
+    # the weights —  mixed_i @ W = [h | prev] @ [(1-mu_i)*W ; mu_i*W]  — so
+    # the concatenated [h, prev] activation is gathered ONCE for r/k/v/g
+    # and the decay lora (the pre-refactor code paid two standalone
+    # full-activation all_gathers here).
+    xcat = jnp.concatenate([h, prev], axis=-1)           # [B, S_loc, 2D]
 
-    # projections: local column shards (hg already gathered; the gather IS
-    # the AG seam, amortized over the 5 projections)
-    r = jnp.einsum("bsd,df->bsf", mixed(0), p["w_r"])
-    kk = jnp.einsum("bsd,df->bsf", mixed(1), p["w_k"])
-    vv = jnp.einsum("bsd,df->bsf", mixed(2), p["w_v"])
-    g = jnp.einsum("bsd,df->bsf", mixed(3), p["w_g"])
-    dec_low = jnp.einsum("bsd,dr->bsr", mixed(4), p["w_dec1"])
+    def stacked(i, w):
+        mu_i = p["mu"][i].astype(w.dtype)
+        return jnp.concatenate([(1 - mu_i)[:, None] * w,
+                                mu_i[:, None] * w], axis=0)
+
+    r, kk, vv, g, dec_low = ctx.op("attn_ag", n_weights=5)(
+        xcat, stacked(0, p["w_r"]), stacked(1, p["w_k"]),
+        stacked(2, p["w_v"]), stacked(3, p["w_g"]),
+        stacked(4, p["w_dec1"]))
     dec = jnp.einsum("bsr,rf->bsf", jnp.tanh(dec_low), p["w_dec2"])
     logw = -jnp.exp(p["dec_base"] + dec.astype(jnp.float32))  # [B,S,F] (<0)
 
@@ -181,8 +183,13 @@ def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     y = y * jax.nn.silu(g)
     out = ctx.op("attn_rs")(y, p["w_o"])
     if with_cache:
-        last = (hg[:, -1] if lengths is None
-                else layers.take_rows(hg, lengths - 1))
+        # decode seeds token-shift with the last true token's normed input;
+        # cache payloads ride the seam's ring transport (gather_seq)
+        if lengths is None:
+            last = ctx.gather_seq(h[:, -1:], "attn_ag")[:, -1]
+        else:
+            last = layers.take_rows(ctx.gather_seq(h, "attn_ag"),
+                                    lengths - 1)
         return out, {"state": sfin, "last": last}
     return out
 
@@ -206,15 +213,10 @@ def rwkv_channel_train(p: Dict, x: Array, ctx: TPContext,
         # last (global) token's normed input: gather the final shard's tail
         # (full gather + per-row take only when ``lengths`` staggers rows)
         if lengths is None:
-            if ctx.axis is not None and ctx.tp > 1:
-                hg_last = lax.all_gather(h[:, -1:], ctx.axis, axis=1,
-                                         tiled=True)[:, -1]
-            else:
-                hg_last = h[:, -1]
+            hg_last = ctx.gather_seq(h[:, -1:], "attn_ag")[:, -1]
         else:
-            hg = (lax.all_gather(h, ctx.axis, axis=1, tiled=True)
-                  if ctx.axis is not None and ctx.tp > 1 else h)
-            hg_last = layers.take_rows(hg, lengths - 1)
+            hg_last = layers.take_rows(ctx.gather_seq(h, "attn_ag"),
+                                       lengths - 1)
         return out, {"last": hg_last}
     return out
 

@@ -171,9 +171,11 @@ def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
     (next_token [B_loc,1], new caches)."""
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
                            (tokens.shape[0],))
+    # decode ALWAYS runs the replicated activation layout: a one-token
+    # "sequence" cannot shard, and the decode seams are kind="ar"
+    ctx = ctx.with_layout(False)
     v_pad = pad_vocab(cfg.vocab_size, par.tp)
-    x = layers.embed_lookup(params["embed"], tokens, ctx, v_pad,
-                            scatter_seq=False)
+    x = layers.embed_lookup(params["embed"], tokens, ctx, v_pad)
     x = x.astype(cfg.compute_dtype)
 
     pat = expanded_pattern(cfg)
@@ -271,6 +273,10 @@ def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
                  par: ParallelConfig, lengths=None):
     """Full-sequence prefill: returns (next_token [B_loc,1], caches).
 
+    Prefill runs the plan-resolved activation layout (sequence-sharded by
+    default — the SP memory win applies to the longest activations in
+    serving); decode (``decode_step``) always forces the replicated layout.
+
     ``lengths`` ([B_loc] int32, optional): per-row true prompt lengths of a
     right-padded batch — caches freeze at each row's length (state
     families) and logits are read at ``lengths - 1`` per row (see module
@@ -308,16 +314,12 @@ def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
 
     h = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
     # only each row's LAST true position's logits feed the next token
+    # (gather_seq: no-op in the replicated layout, ring transport under SP)
     if lengths is None:
-        if ctx.axis is not None and ctx.tp > 1:
-            h_last = lax.all_gather(h[:, -1:], ctx.axis, axis=1,
-                                    tiled=True)[:, -1:]
-        else:
-            h_last = h[:, -1:]
+        h_last = ctx.gather_seq(h[:, -1:], "head_ag")[:, -1:]
     else:
-        hg = (lax.all_gather(h, ctx.axis, axis=1, tiled=True)
-              if ctx.axis is not None and ctx.tp > 1 else h)
-        h_last = layers.take_rows(hg, lengths - 1)[:, None]
+        h_last = layers.take_rows(ctx.gather_seq(h, "head_ag"),
+                                  lengths - 1)[:, None]
     logits = jnp.einsum("bsd,vd->bsv", h_last, params["embed"])
     nxt = vocab_parallel_argmax(logits[:, -1], ctx, v_pad, cfg.vocab_size)
     return nxt[:, None], caches

@@ -30,6 +30,12 @@ class TPContext:
                 layers; leading_dense_layers + position for scanned pattern
                 positions) — threaded by model.py/serve.py for per-layer
                 plan overrides
+    seq_shard : the residual-stream activation layout.  None resolves from
+                the plans' joint ``scatter_axis`` knob (default: True —
+                sequence-sharded [B, S/TP, D] between seams, Megatron-SP);
+                True/False force it (decode forces False: one-token
+                activations stay replicated).  Model code consults
+                ``seq_sharded`` / ``seq_factor`` — never the raw field.
     """
     axis: Optional[str] = None
     dp_axes: Tuple[str, ...] = ()
@@ -41,6 +47,7 @@ class TPContext:
     plans: Optional[object] = None   # tuning.plans.PlanSet (kept loose to
     #                                  avoid a hard import edge)
     layer: Optional[int] = None
+    seq_shard: Optional[bool] = None
 
     def plan(self, seam: str):
         """Resolve the overlap plan for one model seam (tuning.KNOWN_SEAMS);
@@ -50,16 +57,73 @@ class TPContext:
         from repro.tuning.plans import SeamPlan
         return SeamPlan(mode=self.mode, comm_chunks=self.comm_chunks)
 
-    def op(self, seam: str, epilogue=None, n_weights: int = 1):
+    @property
+    def seq_sharded(self) -> bool:
+        """True when the residual stream between TP seams is sequence-
+        sharded ([B, S/TP, D]); False when it is replicated ([B, S, D])."""
+        if self.seq_shard is not None:
+            return self.seq_shard
+        if self.plans is not None and hasattr(self.plans, "residual_layout"):
+            return self.plans.residual_layout() == "seq"
+        return True
+
+    @property
+    def seq_factor(self) -> int:
+        """Global sequence length = local length * seq_factor."""
+        return self.tp if self.seq_sharded else 1
+
+    def with_layout(self, seq_shard: Optional[bool]) -> "TPContext":
+        """Force (True/False) or unpin (None) the activation layout —
+        decode paths force the replicated layout for S=1."""
+        if seq_shard == self.seq_shard:
+            return self
+        return dataclasses.replace(self, seq_shard=seq_shard)
+
+    def op(self, seam: str, epilogue=None, n_weights: int = 1,
+           scatter_axis: Optional[str] = None):
         """The resolved ``overlap.FusedOp`` for one model seam: plan knobs
         (mode/chunks/direction/blocks + fuse_epilogue/shared_gather) come
         from the registry, the collective kind from the seam name, and the
-        epilogue/weight-count from the call site.  This is the ONLY way
-        model code should reach the overlap seams."""
+        epilogue/weight-count from the call site.  ``scatter_axis`` defaults
+        to the context's resolved residual layout (all seams coherent); an
+        explicit value overrides per call site.  This is the ONLY way model
+        code should reach the overlap seams."""
         from repro.tuning.plans import SEAM_KINDS
         kind = SEAM_KINDS.get(seam, seam.rsplit("_", 1)[-1])
+        if scatter_axis is None and kind in ("ag", "rs"):
+            scatter_axis = "seq" if self.seq_sharded else "hidden"
         return self.plan(seam).op(kind, self.axis, epilogue=epilogue,
-                                  n_weights=n_weights)
+                                  n_weights=n_weights,
+                                  scatter_axis=scatter_axis)
+
+    def gather_seq(self, x, seam: str = "attn_ag"):
+        """Full-sequence view of a (possibly) sequence-sharded non-GEMM
+        payload (MLA's shared rope key, cache tails).  No-op in the
+        replicated layout; rides ``seam``'s plan transport otherwise (ring
+        modes: ppermute hops — no standalone all_gather between seams)."""
+        if self.axis is None or self.tp == 1 or not self.seq_sharded:
+            return x
+        from repro.core import overlap
+        plan = self.plan(seam)
+        return overlap.gather_seq(x, self.axis, mode=plan.mode,
+                                  reverse=getattr(plan, "reverse", False))
+
+    def scatter_seq(self, x, seam: str = "head_ag"):
+        """ReduceScatter a per-rank full-sequence partial into this rank's
+        sequence shard (the embedding seam's combining collective) — dual
+        of :meth:`gather_seq`, riding the same plan transport.  psum
+        (replicated combine) when the residual stream is not
+        sequence-sharded."""
+        from jax import lax as _lax
+        if self.axis is None or self.tp == 1:
+            return x
+        if not self.seq_sharded:
+            return _lax.psum(x, self.axis)
+        from repro.core import overlap
+        plan = self.plan(seam)
+        return overlap.scatter_seq_sum(x, self.axis, mode=plan.mode,
+                                       reverse=getattr(plan, "reverse",
+                                                       False))
 
     def with_layer(self, layer: Optional[int]) -> "TPContext":
         if layer == self.layer:
@@ -111,3 +175,14 @@ def pad_ff(d_ff: int, tp: int, align: int = 128) -> int:
 
 def pad_vocab(vocab: int, tp: int, align: int = 128) -> int:
     return ceil_mult(vocab, tp * align)
+
+
+def activation_spec(dp_axes: Tuple[str, ...], seq_sharded: bool = True,
+                    tp_axis: str = "model"):
+    """PartitionSpec of a [B, S, D] residual-stream activation at the
+    shard_map boundary under each layout: sequence dim on the TP axis when
+    sequence-sharded, replicated otherwise.  The single place batch/embed
+    specs derive the layout from (trainer, pipelines, tests)."""
+    from jax.sharding import PartitionSpec as P
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    return P(dp, tp_axis if seq_sharded else None, None)

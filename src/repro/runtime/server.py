@@ -82,6 +82,11 @@ class Server:
         self.params = params
         dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         from repro.tuning import plan_set_from_parallel
+        # ONE context for both dispatch programs: prefill runs the plans'
+        # resolved activation layout (sequence-sharded by default — the SP
+        # residency win applies to the longest activations the server
+        # touches), while decode_step internally forces the replicated
+        # layout (S=1 cannot shard).
         self.ctx = TPContext(axis="model", dp_axes=dp_axes,
                              ep_axes=("model",) if cfg.moe else (),
                              mode=par.overlap_mode,

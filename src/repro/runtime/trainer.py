@@ -63,11 +63,17 @@ def make_ctx(cfg: ModelConfig, par: ParallelConfig, mesh,
                      use_kernels=par.kernel_decode, plans=plans)
 
 
-def batch_pspecs(cfg: ModelConfig, mesh) -> Dict:
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    dp = dp if len(dp) > 1 else dp[0]
+def batch_pspecs(cfg: ModelConfig, mesh, seq_sharded: bool = True) -> Dict:
+    """Batch specs at the shard_map boundary.  Frontend embeds arrive in
+    the residual-stream layout (``sharding.activation_spec``): sequence on
+    the model axis under SP, replicated otherwise; tokens/labels are always
+    full-sequence (the embedding's collective produces the layout)."""
+    from repro.parallel.sharding import activation_spec
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     if cfg.frontend:
-        return {"embeds": P(dp, "model", None), "labels": P(dp, None)}
+        return {"embeds": activation_spec(dp_axes, seq_sharded),
+                "labels": P(dp, None)}
     return {"tokens": P(dp, None), "labels": P(dp, None)}
 
 
@@ -79,7 +85,9 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
     pod_axis = "pod" if "pod" in mesh.axis_names else None
     model_rep = adamw.model_replicated_tree(param_spec_tree)
     schedule_fn = sched.get_schedule(train_cfg.schedule)
-    bspecs = batch_pspecs(cfg, mesh)
+    # batch layout follows the plans' resolved residual layout (the
+    # trainer's backward rides the interchanged seam ops either way)
+    bspecs = batch_pspecs(cfg, mesh, ctx.seq_sharded)
 
     params_eval = jax.eval_shape(
         lambda: M.init_model(jax.random.PRNGKey(0), cfg, par))

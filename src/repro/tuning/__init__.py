@@ -43,10 +43,11 @@ Profile JSON schema (``cache.PROFILE_VERSION`` bumps on breaking change)::
 A profile is *stale* (ignored on load) when its ``version`` differs from
 ``PROFILE_VERSION`` or its ``mesh``/``backend`` disagree with the requester's.
 """
-from repro.tuning.plans import (KNOWN_SEAMS, PlanSet, SeamPlan,  # noqa: F401
-                                plan_set_from_parallel)
+from repro.tuning.plans import (KNOWN_SEAMS, RESIDUAL_SEAMS,  # noqa: F401
+                                PlanSet, SeamPlan,
+                                plan_set_from_parallel, seam_of)
 from repro.tuning.cache import (PROFILE_VERSION, PlanRegistry,  # noqa: F401
                                 default_plans_dir)
 from repro.tuning.autotune import (TuneResult, autotune_model,  # noqa: F401
                                    candidate_space, model_seam_shapes,
-                                   tune_seam)
+                                   sweep_model_layout, tune_seam)

@@ -46,6 +46,7 @@ class Candidate:
     blocks: Optional[Tuple[int, int, int]] = None
     shared_gather: bool = True        # one ring pass for N-weight gathers
     fuse_epilogue: bool = True        # epilogue inside the overlapped loop
+    scatter_axis: str = "seq"         # residual-stream layout (seq | hidden)
 
 
 @dataclasses.dataclass
@@ -71,7 +72,8 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
                     *, allow_flux: bool = True, allow_q8: bool = True,
                     modes: Optional[Sequence[str]] = None,
                     n_weights: int = 1,
-                    epilogue: bool = False) -> List[Candidate]:
+                    epilogue: bool = False,
+                    scatter_axis: str = "seq") -> List[Candidate]:
     """All tunable settings for one seam kind.  ``modes`` restricts the mode
     set (used by the measured path to drop flux under interpret mode);
     ``allow_q8=False`` drops the lossy int8-gather modes.  ``n_weights > 1``
@@ -81,21 +83,32 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
     transports that CONSUME a knob sweep it: xla's monolithic gather is
     shared and its epilogue XLA-fused regardless, and rs/ar epilogues run
     once on the reduced output either way, so sweeping there would score
-    byte-identical programs under different labels."""
+    byte-identical programs under different labels.
+
+    ``scatter_axis`` fixes the residual-stream layout the seam runs under
+    (it is swept JOINTLY at the model level by ``autotune_model``, never
+    per seam — a per-seam layout split would be incoherent).  Under
+    "hidden" an AG seam has NO collective (one candidate) and an RS seam
+    behaves like the "ar" kind (contraction-chunked AllReduce)."""
     from repro.kernels.ops import plan_blocks
+    hidden = scatter_axis == "hidden"
+    if kind == "ag" and hidden:
+        # input already replicated: no transport to tune
+        return [Candidate("xla", 0, False, scatter_axis="hidden")]
+    mode_kind = "ar" if (kind == "rs" and hidden) else kind
     sweep_sg = kind == "ag" and n_weights > 1
     sweep_fe = kind == "ag" and epilogue
     fusion_opts = [(sg, fe)
                    for sg in ((True, False) if sweep_sg else (True,))
                    for fe in ((True, False) if sweep_fe else (True,))]
     out: List[Candidate] = []
-    for mode in (modes or _KIND_MODES[kind]):
+    for mode in (modes or _KIND_MODES[mode_kind]):
         if mode == "flux" and not allow_flux:
             continue
         if mode.endswith("_q8") and not allow_q8:
             continue
         if mode in ("xla", "xla_q8"):
-            out.append(Candidate(mode, 0, False))
+            out.append(Candidate(mode, 0, False, scatter_axis=scatter_axis))
             continue
         if mode == "flux":
             # per-device GEMM shape (paper §4.4: tiling is not bound to N_TP)
@@ -109,22 +122,25 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
                     for sg, fe in fusion_opts:
                         out.append(Candidate(mode, 0, reverse, blocks,
                                              shared_gather=sg,
-                                             fuse_epilogue=fe))
+                                             fuse_epilogue=fe,
+                                             scatter_axis=scatter_axis))
             continue
         # ring modes: chunk count x direction (AR chunks the contraction —
         # no ring, so no direction; bidir already rides both directions)
         for chunks in _ring_chunk_options(n_dev):
             for reverse in (False, True):
-                if reverse and (kind == "ar" or mode == "decomposed_bidir"):
+                if reverse and (mode_kind == "ar"
+                                or mode == "decomposed_bidir"):
                     continue
                 for sg, fe in fusion_opts:
                     out.append(Candidate(mode, chunks, reverse,
-                                         shared_gather=sg, fuse_epilogue=fe))
+                                         shared_gather=sg, fuse_epilogue=fe,
+                                         scatter_axis=scatter_axis))
     # dedupe (plan_blocks may collapse block prefs on small shapes)
     seen, uniq = set(), []
     for c in out:
         key = (c.mode, c.comm_chunks, c.reverse, c.blocks, c.shared_gather,
-               c.fuse_epilogue)
+               c.fuse_epilogue, c.scatter_axis)
         if key not in seen:
             seen.add(key)
             uniq.append(c)
@@ -139,7 +155,8 @@ def analytic_estimate(kind: str, m: int, n: int, k: int, n_dev: int,
                             n_weights=n_weights,
                             shared_gather=cand.shared_gather,
                             epilogue=epilogue,
-                            fuse_epilogue=cand.fuse_epilogue)
+                            fuse_epilogue=cand.fuse_epilogue,
+                            scatter_axis=cand.scatter_axis)
     return est["overall"]
 
 
@@ -184,19 +201,25 @@ def _bench_callable(kind: str, m: int, n: int, k: int, n_dev: int,
     nw = n_weights if kind == "ag" else 1
     ws = tuple(jax.random.normal(jax.random.PRNGKey(1 + i), (k, n), dtype)
                / k ** 0.5 for i in range(nw))
+    hidden = cand.scatter_axis == "hidden"
     fused = FusedOp(kind=kind, axis=axis, mode=cand.mode,
                     comm_chunks=cand.comm_chunks, reverse=cand.reverse,
                     blocks=cand.blocks,
                     epilogue=_bench_epilogue(kind, nw, epilogue),
                     n_weights=nw, fuse_epilogue=cand.fuse_epilogue,
-                    shared_gather=cand.shared_gather)
+                    shared_gather=cand.shared_gather,
+                    scatter_axis=cand.scatter_axis)
     if kind == "ag":
-        in_specs = (P(None, axis, None),) + (P(None, axis),) * nw
+        # hidden layout: the activation arrives replicated (no gather)
+        x_spec = P(None, None, None) if hidden else P(None, axis, None)
+        in_specs = (x_spec,) + (P(None, axis),) * nw
         out_spec = (P(None, None, axis) if fused.combines
                     else (P(None, None, axis),) * nw)
-    else:           # rs / ar share operand sharding; ar replicates the out
+    else:           # rs / ar share operand sharding; ar (and rs/hidden)
+        #             replicate the output
         in_specs = (P(None, None, axis), P(axis, None))
-        out_spec = P(None, axis, None) if kind == "rs" else P(None, None, None)
+        out_spec = (P(None, axis, None) if kind == "rs" and not hidden
+                    else P(None, None, None))
 
     if not multi:
         return jax.jit(lambda a, *bs: fused(a, *bs)), (x, *ws)
@@ -227,13 +250,16 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
               modes: Optional[Sequence[str]] = None,
               seam: Optional[str] = None, iters: int = 3,
               warmup: int = 1, n_weights: int = 1,
-              epilogue: bool = False) -> TuneResult:
+              epilogue: bool = False,
+              scatter_axis: str = "seq") -> TuneResult:
     """Tune one seam.  Returns the winning plan plus the full candidate
     table (``table`` rows: mode/comm_chunks/reverse/blocks/shared_gather/
-    fuse_epilogue/predicted_s and, on the measured path, measured_s).
-    ``n_weights``/``epilogue`` describe the FusedOp the seam will run
-    (e.g. the gated FFN's two-weight silu-gate) so the fusion knobs are
-    swept too."""
+    fuse_epilogue/scatter_axis/predicted_s and, on the measured path,
+    measured_s).  ``n_weights``/``epilogue`` describe the FusedOp the seam
+    will run (e.g. the gated FFN's two-weight silu-gate) so the fusion
+    knobs are swept too; ``scatter_axis`` fixes the residual layout the
+    seam is tuned UNDER (the layout itself is a model-level decision —
+    see ``autotune_model``)."""
     assert kind in _KIND_MODES, kind
     if measure == "auto":
         import jax
@@ -246,19 +272,22 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
                 "reverse": c.reverse, "blocks": c.blocks,
                 "shared_gather": c.shared_gather,
                 "fuse_epilogue": c.fuse_epilogue,
+                "scatter_axis": c.scatter_axis,
                 "predicted_s": analytic_estimate(kind, m, n, k, n_dev, c,
                                                  dtype_bytes, n_weights,
                                                  epilogue),
                 "measured_s": measured}
 
+    mode_kind = "ar" if (kind == "rs" and scatter_axis == "hidden") else kind
     if measure:
         import jax.numpy as jnp
         dtype = jnp.bfloat16 if dtype_bytes == 2 else jnp.float32
         cands = candidate_space(kind, m, n, k, n_dev, allow_flux=allow_flux,
                                 allow_q8=allow_q8,
-                                modes=modes or _measurable_modes(kind,
+                                modes=modes or _measurable_modes(mode_kind,
                                                                  allow_flux),
-                                n_weights=n_weights, epilogue=epilogue)
+                                n_weights=n_weights, epilogue=epilogue,
+                                scatter_axis=scatter_axis)
         table = []
         for c in cands:
             fn, args = _bench_callable(kind, m, n, k, n_dev, c, dtype,
@@ -271,7 +300,8 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
     else:
         cands = candidate_space(kind, m, n, k, n_dev, allow_flux=allow_flux,
                                 allow_q8=allow_q8, modes=modes,
-                                n_weights=n_weights, epilogue=epilogue)
+                                n_weights=n_weights, epilogue=epilogue,
+                                scatter_axis=scatter_axis)
         table = [row(c) for c in cands]
         best = min(table, key=lambda r: r["predicted_s"])
         source = "analytic"
@@ -287,6 +317,7 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
                     reverse=best["reverse"], blocks=tuple(blocks),
                     shared_gather=best["shared_gather"],
                     fuse_epilogue=best["fuse_epilogue"],
+                    scatter_axis=best["scatter_axis"],
                     source=source, predicted_s=best["predicted_s"],
                     measured_s=best["measured_s"]).validate()
     return TuneResult(seam=seam or kind, kind=kind, m=m, n=n, k=k,
@@ -307,7 +338,19 @@ def serving_decode_batch() -> int:
 def model_seam_shapes(cfg, par, tokens_per_dp: int = 2048,
                       decode_batch: Optional[int] = None
                       ) -> Dict[str, Tuple[str, int, int, int]]:
-    """(kind, m, n, k) per model seam, from the arch's padded GEMM shapes.
+    """(kind, m, n, k) per model seam SHAPE CELL, from the arch's padded
+    GEMM shapes.
+
+    Keys are seam names, cell-qualified (``"<seam>@<cell>"``, mirroring the
+    dryrun cell naming) when one model seam runs several distinct GEMM
+    shapes: MLA's attention AG seam drives TWO up-projections with very
+    different widths (``attn_ag@q_up``: q_lora_rank -> heads*(nope+rope)
+    vs ``attn_ag@kv_up``: kv_lora_rank -> heads*(nope+v)), while GQA's is
+    one packed QKV GEMM (``attn_ag@qkv``).  ``tuning.plans.seam_of`` maps a
+    cell key back to the model seam; ``autotune_model`` tunes every cell
+    and resolves the seam-level plan from its DOMINANT (largest-FLOPs)
+    cell.
+
     ``decode_batch`` defaults to the serving runtime's ``ServeConfig.
     max_batch`` (the server's decode jit batch); pass the actual
     ``--max-batch`` when tuning for a differently-sized deployment."""
@@ -328,30 +371,95 @@ def model_seam_shapes(cfg, par, tokens_per_dp: int = 2048,
         from repro.parallel.sharding import pad_heads
         mla = cfg.mla
         h_pad = pad_heads(cfg.num_heads, tp)
-        shapes["attn_ag"] = ("ag", tokens_per_dp,
-                             h_pad * (mla.qk_nope_head_dim
-                                      + mla.qk_rope_head_dim), mla.q_lora_rank)
+        shapes["attn_ag@q_up"] = (
+            "ag", tokens_per_dp,
+            h_pad * (mla.qk_nope_head_dim + mla.qk_rope_head_dim),
+            mla.q_lora_rank)
+        shapes["attn_ag@kv_up"] = (
+            "ag", tokens_per_dp,
+            h_pad * (mla.qk_nope_head_dim + mla.v_head_dim),
+            mla.kv_lora_rank)
         shapes["attn_rs"] = ("rs", tokens_per_dp, d, h_pad * mla.v_head_dim)
     elif cfg.num_heads:
         from repro.models.attention import AttnDims
         dims = AttnDims.of(cfg, tp)
-        shapes["attn_ag"] = ("ag", tokens_per_dp,
-                             (dims.h_pad + 2 * dims.hkv_pad) * dims.dh, d)
+        shapes["attn_ag@qkv"] = (
+            "ag", tokens_per_dp,
+            (dims.h_pad + 2 * dims.hkv_pad) * dims.dh, d)
         shapes["attn_rs"] = ("rs", tokens_per_dp, d, dims.h_pad * dims.dh)
     return shapes
+
+
+def sweep_model_layout(cfg, par, *, tokens_per_dp: int = 2048,
+                       dtype_bytes: int = 2) -> Dict:
+    """Joint residual-layout sweep (the ``scatter_axis`` knob): per layout,
+    sum the analytic per-seam OverallTime over the residual-stream seam
+    cells and the per-layer resident activation bytes.
+
+    The layout CANNOT be tuned seam-by-seam — a lone hidden-AG seam always
+    "wins" (it has no collective) while its paired RS seam silently absorbs
+    the full AllReduce, so only the layer-pair totals are comparable.
+    Accounting covers the PAIRED per-layer seams (mlp_ag/mlp_rs,
+    attn_ag/attn_rs); head_ag is stamped with the winner but excluded from
+    the totals (its volume dual is the embed seam's scatter, outside this
+    table).  The comm volume is layout-invariant by construction (AG+RS
+    over seq == one ring AllReduce); the decider is overlap quality vs
+    activation residency, so ties (and near-ties) go to "seq" — 1/tp the
+    resident activation between seams."""
+    from repro.tuning.plans import seam_of
+    layer_seams = ("mlp_ag", "mlp_rs", "attn_ag", "attn_rs")
+    shapes = model_seam_shapes(cfg, par, tokens_per_dp)
+    out: Dict[str, Dict] = {}
+    for axis in ("seq", "hidden"):
+        total_s, act, vol = 0.0, 0.0, 0.0
+        for key, (kind, m, n, k) in shapes.items():
+            if seam_of(key) not in layer_seams:
+                continue
+            # each layout is scored on its best honest lossless transport
+            # per seam (monolithic vs overlapped ring).  Note hidden's RS
+            # always resolves to the monolithic ring AllReduce: the
+            # chunked-AR transport moves chunks x the bytes (see
+            # ect.model_overlap), and its AG side has no collective at all.
+            ests = [ect.model_overlap(kind, m, n, k, par.tp, mode,
+                                      dtype_bytes, scatter_axis=axis)
+                    for mode in ("xla", "decomposed")]
+            est = min(ests, key=lambda e: e["overall"])
+            total_s += est["overall"]
+            act += est["act_bytes"]
+            vol += est["comm_bytes"]
+        out[axis] = {"overall_s": total_s, "act_bytes": act,
+                     "comm_bytes": vol}
+    # near-ties (within 2%) resolve to seq: same comm volume, 1/tp residency
+    seq_s, hid_s = out["seq"]["overall_s"], out["hidden"]["overall_s"]
+    out["winner"] = "seq" if seq_s <= hid_s * 1.02 else "hidden"
+    out["residency_ratio"] = (out["seq"]["act_bytes"]
+                              / max(out["hidden"]["act_bytes"], 1.0))
+    return out
 
 
 def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
                    decode_batch: Optional[int] = None, measure="auto",
                    registry=None, save_path: Optional[str] = None,
-                   allow_flux: bool = True, allow_q8: bool = False) -> PlanSet:
+                   allow_flux: bool = True, allow_q8: bool = False,
+                   sweep_scatter_axis: bool = True) -> PlanSet:
     """Tune every seam of a model and return the resulting PlanSet.
+
+    Attention seams with several GEMM shape cells (MLA q/kv up-projections)
+    are tuned PER CELL (``"attn_ag@q_up"`` ...); the seam-level plan model
+    code resolves is the dominant (largest-FLOPs) cell's winner, and every
+    cell plan stays resolvable under its qualified key.
+
+    ``sweep_scatter_axis`` additionally runs the joint residual-layout
+    sweep (``sweep_model_layout``) and stamps the winning ``scatter_axis``
+    onto the whole PlanSet — layout is one coherent model-level decision,
+    never a per-seam one.
 
     ``registry`` (a ``cache.PlanRegistry``) short-circuits seams it already
     holds and records fresh results; ``save_path`` persists it afterwards.
     ``allow_q8`` defaults to False here: the int8-gather modes are lossy and
     must be an explicit opt-in for whole-model plans.
     """
+    from repro.tuning.plans import seam_of
     if par.tp <= 1:
         return PlanSet.uniform(par.overlap_mode, par.comm_chunks)
     # FusedOp shape of each seam: the gated FFN runs a two-weight silu-gate
@@ -362,21 +470,48 @@ def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
                    "epilogue": True},
         "attn_ag": {"epilogue": bool(getattr(cfg, "qkv_bias", False))},
     }
+    # the layout decision comes FIRST: every seam is tuned UNDER the
+    # winning scatter_axis, so the recorded profile persists the layout
+    # (a post-save stamp would leave "auto" loads on the wrong layout)
+    scatter_axis = "seq"
+    if sweep_scatter_axis:
+        scatter_axis = sweep_model_layout(
+            cfg, par, tokens_per_dp=tokens_per_dp)["winner"]
     seams: Dict[str, SeamPlan] = {}
-    for seam_name, (kind, m, n, k) in model_seam_shapes(
+    flops: Dict[str, Tuple[int, str]] = {}    # seam -> (dominant flops, cell)
+    for cell_key, (kind, m, n, k) in model_seam_shapes(
             cfg, par, tokens_per_dp, decode_batch).items():
-        cached = registry.lookup(seam_name, m, n, k) if registry else None
+        seam_name = seam_of(cell_key)
+        cached = registry.lookup(cell_key, m, n, k) if registry else None
         if cached is not None:
-            seams[seam_name] = cached
-            continue
-        res = tune_seam(kind, m, n, k, par.tp, allow_flux=allow_flux,
-                        allow_q8=allow_q8, measure=measure, seam=seam_name,
-                        **fused_shape.get(seam_name, {}))
-        seams[seam_name] = res.plan
-        if registry is not None:
-            registry.record(seam_name, kind, m, n, k, res.plan)
-    if registry is not None and save_path:
-        registry.save(save_path)
-    return PlanSet(default=SeamPlan(mode=par.overlap_mode,
-                                    comm_chunks=par.comm_chunks).validate(),
-                   seams=seams)
+            seams[cell_key] = cached
+        else:
+            res = tune_seam(kind, m, n, k, par.tp, allow_flux=allow_flux,
+                            allow_q8=allow_q8, measure=measure,
+                            seam=cell_key, scatter_axis=scatter_axis,
+                            **fused_shape.get(seam_name, {}))
+            seams[cell_key] = res.plan
+            if registry is not None:
+                registry.record(cell_key, kind, m, n, k, res.plan)
+        # seam-level resolution: the dominant cell's plan
+        cell_flops = 2 * m * n * k
+        if cell_key != seam_name and (seam_name not in flops
+                                      or cell_flops > flops[seam_name][0]):
+            flops[seam_name] = (cell_flops, cell_key)
+    for seam_name, (_, cell_key) in flops.items():
+        seams[seam_name] = seams[cell_key]
+    if registry is not None:
+        if sweep_scatter_axis:
+            # cached entries may predate this run's layout decision: stamp
+            # the WHOLE registry so the persisted profile stays coherent
+            # (a mixed-layout profile raises at load)
+            registry.stamp_scatter_axis(scatter_axis)
+        if save_path:
+            registry.save(save_path)
+    plans = PlanSet(default=SeamPlan(mode=par.overlap_mode,
+                                     comm_chunks=par.comm_chunks).validate(),
+                    seams=seams)
+    if sweep_scatter_axis:
+        # coherence stamp (covers cached entries tuned under another layout)
+        plans = plans.with_scatter_axis(scatter_axis)
+    return plans

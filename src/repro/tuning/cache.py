@@ -15,7 +15,11 @@ from typing import Dict, Mapping, Optional
 
 from repro.tuning.plans import SeamPlan
 
-PROFILE_VERSION = 1
+# v2: attention seams are recorded per (arch, shape cell) under qualified
+# keys ("attn_ag@q_up" ...) and plans carry scatter_axis — v1 profiles'
+# bare merged-shape attention entries would silently shadow the cell plans,
+# so they are stale wholesale.
+PROFILE_VERSION = 2
 
 
 def default_plans_dir() -> str:
@@ -54,6 +58,15 @@ class PlanRegistry:
             "n_dev": self.n_dev, "dtype_bytes": dtype_bytes,
             "plan": plan.to_json()}
 
+    def stamp_scatter_axis(self, scatter_axis: str) -> None:
+        """Rewrite EVERY entry's plan to one activation layout.  The layout
+        is a model-level decision: a profile mixing layouts (e.g. cached
+        entries from a run whose sweep picked differently) would make
+        ``PlanSet.residual_layout()`` raise at load, so the tuner stamps
+        the whole registry before saving."""
+        for e in self.entries.values():
+            e["plan"] = dict(e["plan"], scatter_axis=scatter_axis)
+
     def lookup(self, seam: str, m: int, n: int, k: int,
                dtype_bytes: int = 2) -> Optional[SeamPlan]:
         e = self.entries.get(entry_key(seam, m, n, k, self.n_dev, dtype_bytes))
@@ -61,11 +74,26 @@ class PlanRegistry:
 
     def seam_plans(self) -> Dict[str, SeamPlan]:
         """Best-known plan per model seam name (insertion order: last wins).
+        Cell-qualified entries (``"attn_ag@kv_up"``) stay resolvable under
+        their own key AND alias the bare seam name to the dominant
+        (largest-FLOPs) cell's plan, unless an exact bare entry exists.
         Used to build a PlanSet when the caller doesn't re-derive exact
         shapes; exact-shape consumers should use :meth:`lookup`."""
+        from repro.tuning.plans import seam_of
         out: Dict[str, SeamPlan] = {}
+        alias: Dict[str, tuple] = {}        # base seam -> (flops, plan)
         for e in self.entries.values():
-            out[e["seam"]] = SeamPlan.from_json(e["plan"])
+            key = e["seam"]
+            plan = SeamPlan.from_json(e["plan"])
+            out[key] = plan
+            base = seam_of(key)
+            if base != key:
+                fl = 2 * e["m"] * e["n"] * e["k"]
+                if base not in alias or fl > alias[base][0]:
+                    alias[base] = (fl, plan)
+        for base, (_, plan) in alias.items():
+            if base not in out:
+                out[base] = plan
         return out
 
     # ----------------------------------------------------------------- io

@@ -35,6 +35,19 @@ SEAM_KINDS: Dict[str, str] = {"mlp_ag": "ag", "mlp_rs": "rs",
                               "attn_ag": "ag", "attn_rs": "rs",
                               "decode_ar": "ar", "head_ag": "ag"}
 
+# the seams that carry the residual stream between blocks: their
+# ``scatter_axis`` plans must AGREE (one activation layout per model) —
+# the tuner sweeps the layout jointly and stamps all of them at once.
+RESIDUAL_SEAMS: Tuple[str, ...] = ("mlp_ag", "mlp_rs", "attn_ag", "attn_rs",
+                                   "head_ag")
+
+
+def seam_of(key: str) -> str:
+    """Model seam behind a (possibly shape-cell-qualified) seam key:
+    ``"attn_ag@kv_up" -> "attn_ag"`` (cells mirror the dryrun cell naming —
+    one tuning record per real GEMM shape of the seam)."""
+    return key.split("@", 1)[0]
+
 
 @dataclasses.dataclass(frozen=True)
 class SeamPlan:
@@ -43,36 +56,48 @@ class SeamPlan:
     ``fuse_epilogue`` / ``shared_gather`` are the FusedOp fusion knobs
     (apply the epilogue per chunk inside the overlapped loop; one ring pass
     for multi-weight gathers) — plan-visible so the autotuner can sweep
-    them per seam."""
+    them per seam.  ``scatter_axis`` is the activation-layout knob
+    ("seq" = sequence-sharded residual stream between seams, Megatron-SP;
+    "hidden" = replicated residual stream, the decode layout) — swept
+    JOINTLY across the residual seams (see ``PlanSet.residual_layout``)."""
     mode: str = "decomposed"
     comm_chunks: int = 0
     reverse: bool = False
     blocks: Optional[Tuple[int, int, int]] = None
     fuse_epilogue: bool = True
     shared_gather: bool = True
+    scatter_axis: str = "seq"
     source: str = "default"          # default | analytic | measured
     predicted_s: float = 0.0
     measured_s: float = 0.0
 
     def validate(self) -> "SeamPlan":
-        from repro.core.overlap import VALID_MODES
+        from repro.core.overlap import VALID_MODES, VALID_SCATTER_AXES
         if self.mode not in VALID_MODES:
             raise ValueError(f"invalid overlap mode {self.mode!r}")
         if self.comm_chunks < 0:
             raise ValueError(f"comm_chunks must be >= 0, got {self.comm_chunks}")
+        if self.scatter_axis not in VALID_SCATTER_AXES:
+            raise ValueError(f"invalid scatter_axis {self.scatter_axis!r}")
         return self
 
-    def op(self, kind: str, axis=None, epilogue=None, n_weights: int = 1):
-        """Bind this plan to a concrete ``overlap.FusedOp`` for one seam."""
+    def op(self, kind: str, axis=None, epilogue=None, n_weights: int = 1,
+           scatter_axis: Optional[str] = None):
+        """Bind this plan to a concrete ``overlap.FusedOp`` for one seam.
+        ``scatter_axis`` overrides the plan's layout knob (the context layer
+        passes the model-level resolved layout so every seam stays
+        coherent)."""
         from repro.core.overlap import FusedOp
         return FusedOp.from_plan(kind, self, axis, epilogue=epilogue,
-                                 n_weights=n_weights)
+                                 n_weights=n_weights,
+                                 scatter_axis=scatter_axis)
 
     def to_json(self) -> Dict:
         d = {"mode": self.mode, "comm_chunks": self.comm_chunks,
              "reverse": self.reverse, "source": self.source,
              "fuse_epilogue": self.fuse_epilogue,
              "shared_gather": self.shared_gather,
+             "scatter_axis": self.scatter_axis,
              "predicted_s": self.predicted_s, "measured_s": self.measured_s}
         d["blocks"] = list(self.blocks) if self.blocks else None
         return d
@@ -85,6 +110,7 @@ class SeamPlan:
                         blocks=tuple(blocks) if blocks else None,
                         fuse_epilogue=bool(d.get("fuse_epilogue", True)),
                         shared_gather=bool(d.get("shared_gather", True)),
+                        scatter_axis=d.get("scatter_axis", "seq"),
                         source=d.get("source", "default"),
                         predicted_s=float(d.get("predicted_s", 0.0)),
                         measured_s=float(d.get("measured_s", 0.0))).validate()
@@ -125,6 +151,33 @@ class PlanSet:
         return PlanSet(default=SeamPlan(mode=mode, comm_chunks=comm_chunks,
                                         reverse=reverse).validate())
 
+    def residual_layout(self) -> str:
+        """The model's activation layout ("seq" | "hidden"), resolved from
+        the residual-stream seam plans.  All residual seams must agree —
+        the RS side of one layer produces exactly the layout the next AG
+        side consumes, so a per-seam mismatch would be an incoherent model
+        and raises."""
+        axes = {s: self.resolve(s).scatter_axis for s in RESIDUAL_SEAMS}
+        distinct = set(axes.values())
+        if len(distinct) > 1:
+            raise ValueError(
+                f"incoherent residual-stream layout: {axes} — stamp ONE "
+                f"scatter_axis across the residual seams "
+                f"(PlanSet.with_scatter_axis)")
+        return distinct.pop()
+
+    def with_scatter_axis(self, scatter_axis: str) -> "PlanSet":
+        """Stamp one activation layout onto EVERY plan (default, seam and
+        per-layer overrides) — the coherent way to flip the residual-stream
+        layout ("ar" seams ignore the knob; they are always replicated)."""
+        repl = lambda p: dataclasses.replace(  # noqa: E731
+            p, scatter_axis=scatter_axis).validate()
+        return PlanSet(
+            default=repl(self.default),
+            seams={s: repl(p) for s, p in self.seams.items()},
+            layers={l: {s: repl(p) for s, p in ov.items()}
+                    for l, ov in self.layers.items()})
+
     def to_json(self) -> Dict:
         return {"default": self.default.to_json(),
                 "seams": {s: p.to_json() for s, p in self.seams.items()},
@@ -145,14 +198,27 @@ def plan_set_from_parallel(par) -> PlanSet:
     """PlanSet for a ParallelConfig: the uniform ``overlap_mode`` default,
     overlaid with the per-seam plans from ``par.plan_profile`` when that
     profile exists, is fresh, and was tuned for this TP degree/backend.
-    (Staleness is version/mesh/backend only — keep one profile per model.)"""
+    (Staleness is version/mesh/backend only — keep one profile per model.)
+    ``par.scatter_axis`` ("seq"/"hidden") force-stamps the activation
+    layout; "auto" keeps the profile's (or the "seq" default)."""
     base = PlanSet.uniform(par.overlap_mode, par.comm_chunks)
     profile = getattr(par, "plan_profile", None)
-    if not profile:
-        return base
-    from repro.tuning.cache import PlanRegistry
-    reg = PlanRegistry.open(profile, n_dev=par.tp)
-    seams = reg.seam_plans()
-    if not seams:
-        return base
-    return dataclasses.replace(base, seams={**dict(base.seams), **seams})
+    if profile:
+        from repro.tuning.cache import PlanRegistry
+        reg = PlanRegistry.open(profile, n_dev=par.tp)
+        seams = reg.seam_plans()
+        if seams:
+            base = dataclasses.replace(
+                base, seams={**dict(base.seams), **seams})
+            # adopt the profile's layout for the WHOLE set: residual seams
+            # the profile doesn't record (arch without that seam) would
+            # otherwise resolve to the default's "seq" and make
+            # residual_layout() raise on a "hidden" profile
+            axes = {p.scatter_axis for s, p in seams.items()
+                    if seam_of(s) in RESIDUAL_SEAMS}
+            if len(axes) == 1:
+                base = base.with_scatter_axis(axes.pop())
+    forced = getattr(par, "scatter_axis", "auto")
+    if forced and forced != "auto":
+        base = base.with_scatter_axis(forced)
+    return base

@@ -2,8 +2,6 @@
 invariant): xla == decomposed == flux for all shapes/dtypes, values and
 gradients — plus hypothesis property tests on the single-device fallback,
 the FusedOp epilogue-fusion sweep, and the shared-gather ring census."""
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,6 +10,35 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import overlap
 from repro.core.overlap import Epilogue, FusedOp
+
+
+def _ag(x, w, axis, mode, chunks=0, reverse=False):
+    return FusedOp(kind="ag", axis=axis, mode=mode, comm_chunks=chunks,
+                   reverse=reverse)(x, w)
+
+
+def _rs(y, w, axis, mode, chunks=0, reverse=False):
+    return FusedOp(kind="rs", axis=axis, mode=mode, comm_chunks=chunks,
+                   reverse=reverse)(y, w)
+
+
+# shared prelude for the multi-device subprocess scripts: ONE definition of
+# the FusedOp convenience wrappers (spliced into every snippet so a future
+# FusedOp signature change edits a single place)
+_OP_HELPERS = r"""
+from repro.core.overlap import Epilogue, FusedOp
+
+def _ag(x, w, axis, mode, chunks=0, reverse=False):
+    return FusedOp(kind="ag", axis=axis, mode=mode, comm_chunks=chunks,
+                   reverse=reverse)(x, w)
+
+def _rs(y, w, axis, mode, chunks=0, reverse=False):
+    return FusedOp(kind="rs", axis=axis, mode=mode, comm_chunks=chunks,
+                   reverse=reverse)(y, w)
+
+def _ar(y, w, axis, mode, chunks=0):
+    return FusedOp(kind="ar", axis=axis, mode=mode, comm_chunks=chunks)(y, w)
+"""
 
 
 # ---------------------------------------------------------------------------
@@ -24,7 +51,7 @@ def test_ag_matmul_single_device(b, s, d, f):
     x = jax.random.normal(jax.random.PRNGKey(0), (b, s, d))
     w = jax.random.normal(jax.random.PRNGKey(1), (d, f))
     for mode in overlap.VALID_MODES:
-        out = overlap.ag_matmul(x, w, None, mode)
+        out = _ag(x, w, None, mode)
         np.testing.assert_allclose(np.asarray(out),
                                    np.asarray(jnp.einsum("bsd,df->bsf", x, w)),
                                    rtol=1e-5, atol=1e-5)
@@ -37,7 +64,7 @@ def test_matmul_rs_single_device(b, s, d, f):
     y = jax.random.normal(jax.random.PRNGKey(0), (b, s, f))
     w = jax.random.normal(jax.random.PRNGKey(1), (f, d))
     for mode in overlap.VALID_MODES:
-        out = overlap.matmul_rs(y, w, None, mode)
+        out = _rs(y, w, None, mode)
         np.testing.assert_allclose(np.asarray(out),
                                    np.asarray(jnp.einsum("bsf,fd->bsd", y, w)),
                                    rtol=1e-5, atol=1e-5)
@@ -49,8 +76,7 @@ def test_grad_single_device():
 
     def loss(mode):
         return lambda xx, ww: jnp.sum(
-            overlap.matmul_rs(jax.nn.gelu(
-                overlap.ag_matmul(xx, ww, None, mode)), ww.T, None, mode) ** 2)
+            _rs(jax.nn.gelu(_ag(xx, ww, None, mode)), ww.T, None, mode) ** 2)
 
     gx_ref, gw_ref = jax.grad(loss("xla"), argnums=(0, 1))(x, w)
     for mode in ("decomposed", "flux"):
@@ -71,7 +97,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import overlap
-
+""" + _OP_HELPERS + r"""
 mesh = Mesh(np.array(jax.devices()), ("model",))
 B, S, D, F = 2, 512, 256, 512
 x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
@@ -85,9 +111,9 @@ def seam(mode, chunks=0):
                                  P("model", None)),
                        out_specs=P(None, "model", None), check_vma=False)
     def f(xs, w1s, w2s):
-        y = overlap.ag_matmul(xs, w1s, "model", mode, chunks)
+        y = _ag(xs, w1s, "model", mode, chunks)
         y = jax.nn.gelu(y)
-        return overlap.matmul_rs(y, w2s, "model", mode, chunks)
+        return _rs(y, w2s, "model", mode, chunks)
     return np.asarray(f(x, w1, w2))
 
 ref = seam("xla")
@@ -104,8 +130,8 @@ def loss(mode):
                                  P("model", None)),
                        out_specs=P(), check_vma=False)
     def f(xs, w1s, w2s):
-        y = overlap.ag_matmul(xs, w1s, "model", mode)
-        z = overlap.matmul_rs(jax.nn.gelu(y), w2s, "model", mode)
+        y = _ag(xs, w1s, "model", mode)
+        z = _rs(jax.nn.gelu(y), w2s, "model", mode)
         return jax.lax.psum(jnp.sum(z * z), "model")
     return lambda a, b, c: f(a, b, c)
 
@@ -124,13 +150,13 @@ y = jax.random.normal(jax.random.PRNGKey(3), (B, 4, F))
                    in_specs=(P(None, None, "model"), P("model", None)),
                    out_specs=P(None, None, None), check_vma=False)
 def ar_dec(ys, ws):
-    return overlap.matmul_ar(ys, ws, "model", "decomposed")
+    return _ar(ys, ws, "model", "decomposed")
 @jax.jit
 @functools.partial(shard_map, mesh=mesh,
                    in_specs=(P(None, None, "model"), P("model", None)),
                    out_specs=P(None, None, None), check_vma=False)
 def ar_ref(ys, ws):
-    return overlap.matmul_ar(ys, ws, "model", "xla")
+    return _ar(ys, ws, "model", "xla")
 err = np.abs(np.asarray(ar_dec(y, w2)) - np.asarray(ar_ref(y, w2))).max()
 assert err < 1e-3, err
 print("MODE_EQ_OK")
@@ -149,7 +175,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import overlap
-
+""" + _OP_HELPERS + r"""
 mesh = Mesh(np.array(jax.devices()), ("model",))
 B, S, D, F = 2, 256, 256, 512
 x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
@@ -161,7 +187,7 @@ def run(mode):
                        in_specs=(P(None, "model", None), P(None, "model")),
                        out_specs=P(None, None, "model"), check_vma=False)
     def f(xs, ws):
-        return overlap.ag_matmul(xs, ws, "model", mode)
+        return _ag(xs, ws, "model", mode)
     return np.asarray(f(x, w))
 
 ref = run("xla")
@@ -186,7 +212,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import overlap
-
+""" + _OP_HELPERS + r"""
 mesh = Mesh(np.array(jax.devices()), ("model",))
 B, S, D, F = 2, 256, 128, 256
 x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
@@ -200,8 +226,8 @@ def seam(mode):
                                  P("model", None)),
                        out_specs=P(None, "model", None), check_vma=False)
     def f(xs, w1s, w2s):
-        y = overlap.ag_matmul(xs, w1s, "model", mode)
-        return overlap.matmul_rs(jax.nn.gelu(y), w2s, "model", mode)
+        y = _ag(xs, w1s, "model", mode)
+        return _rs(jax.nn.gelu(y), w2s, "model", mode)
     return np.asarray(f(x, w1, w2))
 
 ref = seam("xla")
@@ -227,7 +253,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import overlap
-
+""" + _OP_HELPERS + r"""
 mesh = Mesh(np.array(jax.devices()), ("model",))
 B, S, D, F = 2, 256, 128, 256
 x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
@@ -241,8 +267,8 @@ def seam(mode, chunks=0, reverse=False):
                                  P("model", None)),
                        out_specs=P(None, "model", None), check_vma=False)
     def f(xs, w1s, w2s):
-        y = overlap.ag_matmul(xs, w1s, "model", mode, chunks, reverse)
-        return overlap.matmul_rs(jax.nn.gelu(y), w2s, "model", mode, chunks,
+        y = _ag(xs, w1s, "model", mode, chunks, reverse)
+        return _rs(jax.nn.gelu(y), w2s, "model", mode, chunks,
                                  reverse)
     return np.asarray(f(x, w1, w2))
 
@@ -267,7 +293,7 @@ def ag_only(mode, chunks=0):
                        in_specs=(P(None, "model", None), P(None, "model")),
                        out_specs=P(None, None, "model"), check_vma=False)
     def f(xs, ws):
-        return overlap.ag_matmul(xs, ws, "model", mode, chunks)
+        return _ag(xs, ws, "model", mode, chunks)
     return np.asarray(f(x, w1))
 assert np.abs(ag_only("xla_q8") - ag_only("decomposed_q8", 8)).max() < 1e-5
 
@@ -277,7 +303,7 @@ def fwd_jaxpr(mode):
     f = functools.partial(shard_map, mesh=mesh,
                           in_specs=(P(None, "model", None), P(None, "model")),
                           out_specs=P(None, None, "model"), check_vma=False)(
-        lambda xs, ws: overlap.ag_matmul(xs, ws, "model", mode, 8))
+        lambda xs, ws: _ag(xs, ws, "model", mode, 8))
     return str(jax.make_jaxpr(f)(x, w1))
 j = fwd_jaxpr("decomposed_q8")
 assert "ppermute" in j and "all_gather" not in j, "q8 lost ring overlap"
@@ -292,8 +318,8 @@ def loss(mode, chunks=0, reverse=False):
                                  P("model", None)),
                        out_specs=P(), check_vma=False)
     def f(xs, w1s, w2s):
-        y = overlap.ag_matmul(xs, w1s, "model", mode, chunks, reverse)
-        z = overlap.matmul_rs(jax.nn.gelu(y), w2s, "model", mode, chunks,
+        y = _ag(xs, w1s, "model", mode, chunks, reverse)
+        z = _rs(jax.nn.gelu(y), w2s, "model", mode, chunks,
                               reverse)
         return jax.lax.psum(jnp.sum(z * z), "model")
     return f
@@ -324,7 +350,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import overlap
-
+""" + _OP_HELPERS + r"""
 mesh = Mesh(np.array(jax.devices()), ("model",))
 B, M, F, D = 2, 4, 256, 128
 y = jax.random.normal(jax.random.PRNGKey(0), (B, M, F), jnp.float32)
@@ -336,7 +362,7 @@ def ar(mode, chunks=0):
                        in_specs=(P(None, None, "model"), P("model", None)),
                        out_specs=P(None, None, None), check_vma=False)
     def f(ys, ws):
-        return overlap.matmul_ar(ys, ws, "model", mode, chunks)
+        return _ar(ys, ws, "model", mode, chunks)
     return np.asarray(f(y, w))
 
 ref = ar("xla")
@@ -353,7 +379,7 @@ def loss(mode, chunks=0):
                        in_specs=(P(None, None, "model"), P("model", None)),
                        out_specs=P(), check_vma=False)
     def f(ys, ws):
-        z = overlap.matmul_ar(ys, ws, "model", mode, chunks)
+        z = _ar(ys, ws, "model", mode, chunks)
         return jnp.sum(z * z)
     return f
 g_ref = jax.jit(jax.grad(loss("xla"), argnums=(0, 1)))(y, w)
@@ -438,18 +464,37 @@ def test_fused_op_validation():
         FusedOp(kind="ag")(x, w, bias=jnp.ones((8,)))
 
 
-def test_legacy_wrappers_warn_once():
+def test_legacy_wrappers_removed():
+    """The one-release deprecation window (PR 3) is over: the positional
+    wrappers are gone; the reference oracles remain for tests."""
+    for name in ("ag_matmul", "matmul_rs", "matmul_ar"):
+        assert not hasattr(overlap, name), name
+    assert callable(overlap.ag_matmul_ref)
+    assert callable(overlap.matmul_rs_ref)
+
+
+def test_scatter_axis_validation():
+    with pytest.raises(ValueError):
+        FusedOp(kind="ag", scatter_axis="nope")
+    # "ar" IS the replicated layout: the knob coerces
+    assert FusedOp(kind="ar").scatter_axis == "hidden"
+    assert FusedOp(kind="ag").scatter_axis == "seq"
+
+
+def test_hidden_layout_single_device():
+    """scatter_axis="hidden" on one device == the plain GEMM (all modes)."""
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
-    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
-    overlap._DEPRECATED_WARNED.discard("ag_matmul")
-    with pytest.warns(DeprecationWarning):
-        overlap.ag_matmul(x, w, None, "xla")
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        out = overlap.ag_matmul(x, w, None, "decomposed")  # 2nd call: silent
-    np.testing.assert_allclose(np.asarray(out),
-                               np.asarray(jnp.einsum("bsd,df->bsf", x, w)),
-                               rtol=1e-5, atol=1e-5)
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    want_ag = jnp.einsum("bsd,df->bsf", x, w)
+    want_rs = jnp.einsum("bsf,fd->bsd", want_ag, w.T)
+    for mode in overlap.VALID_MODES:
+        got = FusedOp(kind="ag", mode=mode, scatter_axis="hidden")(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want_ag),
+                                   rtol=1e-5, atol=1e-5)
+        got = FusedOp(kind="rs", mode=mode, scatter_axis="hidden")(
+            want_ag, w.T)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want_rs),
+                                   rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------

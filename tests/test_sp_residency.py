@@ -1,0 +1,428 @@
+"""Sequence-parallel activation residency (the ``scatter_axis`` knob).
+
+Three guarantees of the layout refactor:
+
+1. **Layout equivalence** — the SP train step (sequence-sharded residual
+   stream, ``scatter_axis="seq"``) is numerically identical (value AND
+   grad) to the replicated-layout step (``"hidden"``) for every mixer
+   family: GQA, MLA, Mamba, RWKV, MoE FFN.  Grads of model-replicated
+   leaves are compared after the trainer's psum completion (per-rank grads
+   are PARTIALS whose partition differs per layout; their sum must not).
+2. **Zero standalone collectives** — under ring plans the SP train step's
+   jaxpr contains NO ``all_gather``/``psum_scatter`` at all: every
+   sequence gather/scatter (seams, backward re-gathers, MLA's shared rope
+   key, RWKV's token-shift projections, the embed seam) rides ppermute
+   ring transports owned by the seams.
+3. **Residency / comm accounting** — ``ect.model_overlap`` reports the
+   per-layer resident activation reduced ~1/tp under "seq" with the
+   per-layer-pair comm volume unchanged.
+"""
+import pytest
+
+from repro.core import ect
+
+# family -> the smoke arch exercising it (gqa / mla+moe / mamba / rwkv)
+_FAMILY_ARCHS = {
+    "gqa": "codeqwen15_7b",
+    "mla_moe": "deepseek_v3_671b",
+    "mamba": "jamba_v01_52b",
+    "rwkv": "rwkv6_3b",
+}
+
+_EQUIV = r"""
+import dataclasses, functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.configs.base import get_smoke_config, ParallelConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel.sharding import TPContext
+from repro.tuning.plans import PlanSet
+
+arch = "%s"
+cfg = dataclasses.replace(get_smoke_config(arch), d_ff=512,
+                          compute_dtype="float32")
+if cfg.moe:
+    # capacity high enough that no token drops: the two layouts bucket
+    # tokens differently (per-shard vs global cumsum) but a drop-free
+    # combine is layout-invariant
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=16.0))
+par = ParallelConfig(tp=4, dp=1)
+mesh = Mesh(np.array(jax.devices()).reshape(1, 4), ("data", "model"))
+
+key = jax.random.PRNGKey(0)
+B, S = 2, 64
+batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                      cfg.vocab_size)}
+params = M.init_model(jax.random.PRNGKey(0), cfg, par)
+params = jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a, params)
+specs = M.param_specs(cfg, par, params)
+bs = {"tokens": P("data", None), "labels": P("data", None)}
+model_rep = adamw.model_replicated_tree(specs)
+
+def loss_and_grads(plans):
+    ctx = TPContext(axis="model", dp_axes=("data",),
+                    ep_axes=("model",) if cfg.moe else (), plans=plans)
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh, in_specs=(specs, bs),
+                       out_specs=(P(), specs), check_vma=False)
+    def f(p, b):
+        l, g = jax.value_and_grad(
+            lambda pp: jax.lax.pmean(M.forward_loss(pp, b, ctx, cfg, par),
+                                     ("data",)))(p)
+        # complete model-replicated leaves exactly as the trainer does
+        g = jax.tree.map(
+            lambda gr, rep: jax.lax.psum(gr, "model") if rep else gr,
+            g, model_rep)
+        return l, g
+    return f(params, batch)
+
+sp_plans = PlanSet.uniform("decomposed")
+l_sp, g_sp = loss_and_grads(sp_plans)
+l_rep, g_rep = loss_and_grads(sp_plans.with_scatter_axis("hidden"))
+
+assert abs(float(l_sp) - float(l_rep)) < 2e-5, (float(l_sp), float(l_rep))
+for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(g_sp),
+                        jax.tree.leaves(g_rep)):
+    a, b = np.asarray(a), np.asarray(b)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 1e-4, (jax.tree_util.keystr(path), rel)
+print("SP_EQUIV_OK", arch, float(l_sp))
+"""
+
+
+@pytest.mark.parametrize("family", sorted(_FAMILY_ARCHS))
+def test_sp_vs_replicated_value_and_grad(subproc, family):
+    """4-device value+grad equivalence of the two activation layouts, per
+    mixer family."""
+    out = subproc(_EQUIV % _FAMILY_ARCHS[family], n_devices=4, timeout=1800)
+    assert "SP_EQUIV_OK" in out
+
+
+_EQUIV_EP_OVER_DP = r"""
+import dataclasses, functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.configs.base import get_smoke_config, ParallelConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel.sharding import TPContext
+from repro.tuning.plans import PlanSet
+
+# MoE with experts over ("data","model") jointly on a 2x2 mesh: the
+# replicated layout's branch must gather the data-axis tokens, compute
+# local experts for the FULL token set, psum over the EP group, and slice
+# this data shard's rows back out — the multi-axis path the dp=1 sweep
+# never reaches.
+cfg = dataclasses.replace(get_smoke_config("deepseek_v3_671b"), d_ff=512,
+                          compute_dtype="float32")
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, capacity_factor=16.0))
+par = ParallelConfig(tp=2, dp=2, ep_over_dp=True)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+
+key = jax.random.PRNGKey(0)
+B, S = 4, 32
+batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                      cfg.vocab_size)}
+params = M.init_model(jax.random.PRNGKey(0), cfg, par)
+params = jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a, params)
+specs = M.param_specs(cfg, par, params)
+bs = {"tokens": P("data", None), "labels": P("data", None)}
+model_rep = adamw.model_replicated_tree(specs)
+
+def loss_and_grads(plans):
+    ctx = TPContext(axis="model", dp_axes=("data",),
+                    ep_axes=("data", "model"), plans=plans)
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh, in_specs=(specs, bs),
+                       out_specs=(P(), specs), check_vma=False)
+    def f(p, b):
+        l, g = jax.value_and_grad(
+            lambda pp: jax.lax.pmean(M.forward_loss(pp, b, ctx, cfg, par),
+                                     ("data",)))(p)
+        g = jax.tree.map(
+            lambda gr, rep: jax.lax.psum(gr, "model") if rep else gr,
+            g, model_rep)
+        return l, g
+    return f(params, batch)
+
+sp_plans = PlanSet.uniform("decomposed")
+l_sp, g_sp = loss_and_grads(sp_plans)
+assert np.isfinite(float(l_sp))
+assert all(np.all(np.isfinite(np.asarray(g))) for g in jax.tree.leaves(g_sp))
+
+# the replicated layout must REFUSE ep_over_dp training: its local-expert
+# combine yields EP-group partial router/expert grads that the DP grad
+# contract (per-data-shard grads) would silently mis-sum
+try:
+    loss_and_grads(sp_plans.with_scatter_axis("hidden"))
+except NotImplementedError as e:
+    assert "ep_over_dp" in str(e)
+    print("SP_EP_OVER_DP_OK", float(l_sp))
+else:
+    raise AssertionError("replicated ep_over_dp MoE training must raise")
+"""
+
+
+def test_moe_ep_over_dp_layouts(subproc):
+    """Experts over ("data","model") at dp>1: the SP layout trains (the
+    multi-axis all_to_all dispatch), and the replicated layout fails LOUD
+    instead of training with mis-summed router gradients."""
+    out = subproc(_EQUIV_EP_OVER_DP, n_devices=4, timeout=1800)
+    assert "SP_EP_OVER_DP_OK" in out
+
+
+_CENSUS = r"""
+import dataclasses, functools, re
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.configs.base import get_smoke_config, ParallelConfig
+from repro.models import model as M
+from repro.parallel.sharding import TPContext
+from repro.tuning.plans import PlanSet
+
+for arch in ("codeqwen15_7b", "deepseek_v3_671b", "jamba_v01_52b",
+             "rwkv6_3b"):
+    cfg = dataclasses.replace(get_smoke_config(arch), d_ff=512,
+                              compute_dtype="float32")
+    par = ParallelConfig(tp=4, dp=1)
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 4), ("data", "model"))
+    B, S = 2, 64
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    params = M.init_model(jax.random.PRNGKey(0), cfg, par)
+    specs = M.param_specs(cfg, par, params)
+    bs = {"tokens": P("data", None), "labels": P("data", None)}
+    ctx = TPContext(axis="model", dp_axes=("data",),
+                    ep_axes=("model",) if cfg.moe else (),
+                    plans=PlanSet.uniform("decomposed"))
+    f = functools.partial(shard_map, mesh=mesh, in_specs=(specs, bs),
+                          out_specs=(P(), specs), check_vma=False)(
+        lambda p, b: jax.value_and_grad(
+            lambda pp: jax.lax.pmean(M.forward_loss(pp, b, ctx, cfg, par),
+                                     ("data",)))(p))
+    jx = str(jax.make_jaxpr(f)(params, batch))
+    # the SP train step (fwd AND bwd) must contain ZERO standalone
+    # full-activation collectives between seams: every sequence
+    # gather/scatter rides a seam-owned ppermute ring.  (psum remains for
+    # the xent/aux reductions and the ar seams; all_to_all is the MoE EP
+    # dispatch seam.)
+    n_ag = len(re.findall(r"\ball_gather\b", jx))
+    n_ps = len(re.findall(r"\bpsum_scatter\b", jx))
+    n_pp = len(re.findall(r"\bppermute\b", jx))
+    assert n_ag == 0, (arch, "all_gather", n_ag)
+    assert n_ps == 0, (arch, "psum_scatter", n_ps)
+    assert n_pp > 0, (arch, "expected ppermute rings")
+    print("CENSUS_OK", arch, "ppermute", n_pp)
+print("ALL_CENSUS_OK")
+"""
+
+
+def test_sp_train_step_census(subproc):
+    """jaxpr census: zero standalone full-activation collectives between
+    seams in the SP train step (fwd+bwd), for every mixer family."""
+    out = subproc(_CENSUS, n_devices=4, timeout=1800)
+    assert "ALL_CENSUS_OK" in out
+
+
+_HIDDEN_OPS = r"""
+import functools
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import lax
+from repro.compat import shard_map
+from repro.core.overlap import Epilogue, FusedOp
+
+mesh = Mesh(np.array(jax.devices()), ("model",))
+B, S, D, F = 2, 64, 32, 64
+x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D), jnp.float32)
+w1 = jax.random.normal(jax.random.PRNGKey(1), (D, F)) / D**0.5
+w3 = jax.random.normal(jax.random.PRNGKey(2), (D, F)) / D**0.5
+w2 = jax.random.normal(jax.random.PRNGKey(3), (F, D)) / F**0.5
+tg = jax.random.normal(jax.random.PRNGKey(4), (B, S, D), jnp.float32)
+
+# replicated-in, replicated-out gated FFN layer through hidden-scatter ops;
+# oracle = the same math with plain jnp + psum (native transposes)
+def layer(mode):
+    ag = FusedOp(kind="ag", axis="model", mode=mode, comm_chunks=8,
+                 epilogue=Epilogue(activation="silu", gate="pair"),
+                 n_weights=2, scatter_axis="hidden")
+    rs = FusedOp(kind="rs", axis="model", mode=mode, comm_chunks=8,
+                 scatter_axis="hidden")
+    def f(xs, a_, b_, c_):
+        y = ag(xs, a_, b_)
+        z = rs(y, c_)
+        # rank-ASYMMETRIC consumption of the replicated output (the
+        # convention stress: partial cotangents must complete inside ops)
+        r = lax.axis_index("model").astype(jnp.float32) + 1.0
+        return lax.psum(jnp.sum(z * tg) * r, "model") / 10.0
+    return f
+
+def oracle(xs, a_, b_, c_):
+    y = jax.nn.silu(jnp.einsum("bsd,df->bsf", xs, a_)) \
+        * jnp.einsum("bsd,df->bsf", xs, b_)
+    z = lax.psum(jnp.einsum("bsf,fd->bsd", y, c_), "model")
+    r = lax.axis_index("model").astype(jnp.float32) + 1.0
+    return lax.psum(jnp.sum(z * tg) * r, "model") / 10.0
+
+specs = (P(None, None, None), P(None, "model"), P(None, "model"),
+         P("model", None))
+def grads(fn):
+    g = jax.jit(jax.grad(functools.partial(
+        shard_map, mesh=mesh, in_specs=specs, out_specs=P(),
+        check_vma=False)(fn), argnums=(0, 1, 2, 3)))(x, w1, w3, w2)
+    return [np.asarray(a) for a in g]
+
+g_ref = grads(oracle)
+for mode in ("xla", "decomposed", "decomposed_bidir"):
+    g = grads(layer(mode))
+    for i, (a, b) in enumerate(zip(g, g_ref)):
+        rel = np.abs(a - b).max() / (np.abs(b).max() + 1e-9)
+        assert rel < 1e-4, (mode, i, rel)
+    # values too
+    f_op = jax.jit(functools.partial(shard_map, mesh=mesh, in_specs=specs,
+                                     out_specs=P(), check_vma=False)(
+        layer(mode)))
+    f_ref = jax.jit(functools.partial(shard_map, mesh=mesh, in_specs=specs,
+                                      out_specs=P(), check_vma=False)(oracle))
+    assert abs(float(f_op(x, w1, w3, w2)) - float(f_ref(x, w1, w3, w2))) \
+        < 1e-3
+print("HIDDEN_OPS_OK")
+"""
+
+
+def test_hidden_scatter_ops_4dev(subproc):
+    """scatter_axis="hidden" FusedOps: values and grads match the native
+    psum oracle, including under rank-asymmetric consumption of the
+    replicated output (the partial-cotangent convention)."""
+    assert "HIDDEN_OPS_OK" in subproc(_HIDDEN_OPS, n_devices=4, timeout=900)
+
+
+# ---------------------------------------------------------------------------
+# residency / comm-volume accounting (no devices needed)
+# ---------------------------------------------------------------------------
+def test_model_overlap_residency_and_volume():
+    """ect.model_overlap: "seq" keeps 1/tp of the activation resident per
+    seam, and the per-layer-pair comm volume is layout-invariant."""
+    m, d, f, tp = 4096, 1024, 4096, 8
+    for mode in ("xla", "decomposed", "decomposed_bidir"):
+        ag_s = ect.model_overlap("ag", m, f, d, tp, mode)
+        ag_h = ect.model_overlap("ag", m, f, d, tp, mode,
+                                 scatter_axis="hidden")
+        rs_s = ect.model_overlap("rs", m, d, f, tp, mode)
+        # hidden's RS on the MONOLITHIC ring AllReduce (the chunked-AR
+        # transport moves chunks x the bytes and is charged as such)
+        rs_h = ect.model_overlap("rs", m, d, f, tp, "xla",
+                                 scatter_axis="hidden")
+        # activation residency: 1/tp under seq, both seam sides
+        assert ag_s["act_bytes"] * tp == ag_h["act_bytes"]
+        assert rs_s["act_bytes"] * tp == rs_h["act_bytes"]
+        # per-layer-pair comm volume is layout-invariant (AG+RS over the
+        # sequence == one ring AllReduce); hidden's AG side is comm-free
+        assert ag_h["comm_bytes"] == 0.0
+        pair_seq = ag_s["comm_bytes"] + rs_s["comm_bytes"]
+        pair_hid = ag_h["comm_bytes"] + rs_h["comm_bytes"]
+        assert pair_seq == pytest.approx(pair_hid)
+    # the chunked-AR transport is honestly charged chunks x the volume
+    ar_mono = ect.model_overlap("ar", m, d, f, tp, "xla")
+    ar_chunk = ect.model_overlap("ar", m, d, f, tp, "decomposed",
+                                 comm_chunks=4)
+    assert ar_chunk["comm_bytes"] == pytest.approx(4 * ar_mono["comm_bytes"])
+
+
+def test_layout_sweep_prefers_seq_on_ties():
+    from repro.configs.base import ParallelConfig, get_smoke_config
+    from repro.tuning import autotune
+    cfg = get_smoke_config("codeqwen15_7b")
+    par = ParallelConfig(tp=4, dp=1)
+    sweep = autotune.sweep_model_layout(cfg, par, tokens_per_dp=512)
+    assert set(sweep) >= {"seq", "hidden", "winner", "residency_ratio"}
+    # equal comm volume is structural; residency strictly favors seq
+    assert sweep["seq"]["comm_bytes"] == pytest.approx(
+        sweep["hidden"]["comm_bytes"])
+    assert sweep["residency_ratio"] == pytest.approx(1.0 / par.tp)
+    # equal volume + 1/tp residency: the tuner must deliver SP by default
+    assert sweep["winner"] == "seq"
+
+
+def test_plan_scatter_axis_round_trip():
+    from repro.tuning.plans import PlanSet, SeamPlan
+    ps = PlanSet(default=SeamPlan(mode="decomposed"),
+                 seams={"mlp_ag": SeamPlan(mode="xla")})
+    assert ps.residual_layout() == "seq"
+    ph = ps.with_scatter_axis("hidden")
+    assert ph.residual_layout() == "hidden"
+    # JSON round-trip keeps the knob; old profiles (no key) default to seq
+    rt = PlanSet.from_json(ph.to_json())
+    assert rt.residual_layout() == "hidden"
+    assert SeamPlan.from_json({"mode": "decomposed"}).scatter_axis == "seq"
+    # incoherent residual layouts are a config error
+    bad = ps.override("mlp_rs", SeamPlan(mode="decomposed",
+                                         scatter_axis="hidden"))
+    with pytest.raises(ValueError):
+        bad.residual_layout()
+
+
+def test_registry_layout_stamp_keeps_profiles_coherent(tmp_path):
+    """Cached entries tuned under a different layout decision must not
+    persist a mixed-layout profile (which raises at load): the tuner
+    stamps the whole registry before saving."""
+    import jax
+    from repro.configs.base import ParallelConfig
+    from repro.tuning.cache import PlanRegistry
+    from repro.tuning.plans import (PlanSet, SeamPlan,
+                                    plan_set_from_parallel)
+    path = str(tmp_path / "prof.json")
+    reg = PlanRegistry(n_dev=4, backend=jax.default_backend())
+    reg.record("mlp_ag", "ag", 512, 512, 128,
+               SeamPlan(mode="decomposed", scatter_axis="seq"))
+    reg.record("attn_rs", "rs", 512, 128, 256,
+               SeamPlan(mode="decomposed", scatter_axis="hidden"))
+    reg.stamp_scatter_axis("hidden")
+    reg.save(path)
+    par = ParallelConfig(tp=4, dp=1, plan_profile=path,
+                         overlap_mode="decomposed")
+    ps = plan_set_from_parallel(par)
+    # the load adopts the profile's (coherent) layout for the WHOLE set,
+    # including residual seams the profile didn't record
+    assert ps.residual_layout() == "hidden"
+    assert ps.resolve("mlp_ag").scatter_axis == "hidden"
+    assert ps.resolve("mlp_rs").scatter_axis == "hidden"   # unrecorded seam
+    # forcing via ParallelConfig.scatter_axis stamps everything at load too
+    par_forced = ParallelConfig(tp=4, dp=1, plan_profile=path,
+                                overlap_mode="decomposed",
+                                scatter_axis="hidden")
+    assert plan_set_from_parallel(par_forced).residual_layout() == "hidden"
+
+
+def test_seam_shape_cells():
+    """model_seam_shapes keys attention seams per (arch, shape cell):
+    MLA's two up-projection widths become distinct cells; GQA's packed
+    QKV is one."""
+    from repro.configs.base import ParallelConfig, get_smoke_config
+    from repro.tuning import autotune
+    from repro.tuning.plans import seam_of
+    par = ParallelConfig(tp=4, dp=1)
+    mla = autotune.model_seam_shapes(get_smoke_config("deepseek_v3_671b"),
+                                     par, 512)
+    assert "attn_ag@q_up" in mla and "attn_ag@kv_up" in mla
+    assert mla["attn_ag@q_up"][1:] != mla["attn_ag@kv_up"][1:]
+    assert seam_of("attn_ag@q_up") == "attn_ag"
+    gqa = autotune.model_seam_shapes(get_smoke_config("codeqwen15_7b"),
+                                     par, 512)
+    assert "attn_ag@qkv" in gqa and "attn_ag" not in gqa
