@@ -1,8 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 gate: compat grep-lint + full correctness suite.
+# Tier-1 gate: static contracts (lint + jaxpr seam checks) + full
+# correctness suite.
 #
-# Usage:  scripts/verify.sh [--fast|--jax-min] [extra pytest args]
+# Usage:  scripts/verify.sh [--lint|--fast|--jax-min] [extra pytest args]
 #
+#   --lint     run ONLY the static-contract checker
+#              (python -m repro.analysis.check) — AST lint over
+#              src/ benchmarks/ examples/ tests/ plus the jaxpr seam
+#              contracts for every config x both residual layouts.
+#              No pytest; finishes in well under a minute.
 #   --fast     skip the multi-device subprocess sweeps (tests marked
 #              ``multidev`` — everything that spawns a fresh python with
 #              forced host devices).  Quick iteration tier; the FULL suite
@@ -14,14 +20,25 @@
 #              composition) — plus the BENCH_tuning.json layout-sweep
 #              well-formedness check.
 #
+# The static checker replaced the old grep-lint gates: the standing source
+# rules (compat-import, private-backend, removed-wrapper, raw-collective,
+# bare-shard-map) are AST checks in repro.analysis.lint, and the seam
+# invariants (collective census with ring provenance, partial-cotangent
+# completion, layout coherence) are verified on ABSTRACT jaxpr traces in
+# repro.analysis.seamcheck — no devices, no execution.
+#
 # Runs on CPU CI machines (no TPU): kernels execute in Pallas interpret mode
 # (REPRO_PALLAS_INTERPRET=1).  Every PR must pass this before review.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+LINT_ONLY=0
 FAST=0
 JAX_MIN=0
-if [[ "${1:-}" == "--fast" ]]; then
+if [[ "${1:-}" == "--lint" ]]; then
+  LINT_ONLY=1
+  shift
+elif [[ "${1:-}" == "--fast" ]]; then
   FAST=1
   shift
 elif [[ "${1:-}" == "--jax-min" ]]; then
@@ -32,42 +49,14 @@ fi
 export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== compat grep-lint (drifted JAX symbols must live in repro/compat) =="
-if grep -rn --include='*.py' -E \
-     'jax\.shard_map|jax\.experimental\.shard_map|CompilerParams|jax\.experimental\.pallas import tpu|lax\.axis_size' \
-     src/ | grep -v '^src/repro/compat/'; then
-  echo "FAIL: drifted JAX symbols used outside src/repro/compat/ (see above);" >&2
-  echo "      import them through repro.compat instead." >&2
-  exit 1
+if [[ "$LINT_ONLY" == 1 ]]; then
+  echo "== static contracts (repro.analysis.check: lint + seam invariants) =="
+  python -m repro.analysis.check "$@"
+  exit 0
 fi
-echo "ok"
 
-echo "== overlap API lint (seams go through FusedOp / ctx.op) =="
-# 1. overlap's private backends (rings, cores, q8 codecs, ...) are an
-#    implementation detail of src/repro/core/overlap.py — nothing else may
-#    reach into them.
-if grep -rn --include='*.py' -E \
-     'overlap\._|_ag_matmul_|_matmul_rs_(xla|decomposed|bidir|flux|impl)|_matmul_ar_|_ag_ring|_ag_bidir|_rs_ring|_rs_bidir|_rs_core|_ar_core|_fused_impl|_fused_ag|_q8_encode|_q8_decode' \
-     src/ benchmarks/ | grep -v '^src/repro/core/overlap.py'; then
-  echo "FAIL: private overlap backends referenced outside" >&2
-  echo "      src/repro/core/overlap.py (see above); use overlap.FusedOp" >&2
-  echo "      (model code: ctx.op(seam, epilogue=..., n_weights=...))." >&2
-  exit 1
-fi
-# 2. the pre-FusedOp positional wrappers are GONE (their one-release
-#    deprecation window ended): any call to ag_matmul/matmul_rs/matmul_ar
-#    is an error everywhere — no carve-outs.  (ag_matmul_ref /
-#    matmul_rs_ref / *_fused kernel entry points do not match: the regex
-#    requires the bare name directly before the call paren.)
-if grep -rn --include='*.py' -E \
-     '(^|[^_[:alnum:]])(ag_matmul|matmul_rs|matmul_ar)\(' \
-     src/ benchmarks/ examples/ tests/; then
-  echo "FAIL: the removed overlap wrappers (ag_matmul/matmul_rs/matmul_ar)" >&2
-  echo "      are referenced (see above); build an overlap.FusedOp" >&2
-  echo "      (model code: ctx.op(seam, epilogue=..., n_weights=...))." >&2
-  exit 1
-fi
-echo "ok"
+echo "== static contracts (repro.analysis.check: lint + seam invariants) =="
+python -m repro.analysis.check
 
 if [[ "$JAX_MIN" == 1 ]]; then
   echo "== compat contract tests at the 0.4.30 floor (REPRO_COMPAT_ASSUME_JAX) =="

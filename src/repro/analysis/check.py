@@ -1,0 +1,72 @@
+"""``python -m repro.analysis.check`` — the repo's static-contract gate.
+
+Two passes, both CPU-only and execution-free:
+
+- ``--lint``   AST lint over src/ benchmarks/ examples/ tests/
+               (``repro.analysis.lint``) — seconds.
+- ``--seams``  jaxpr-level seam contracts (``repro.analysis.seamcheck``):
+               abstract fwd+bwd / prefill / decode traces for every config
+               x both residual layouts, collective census with ring
+               provenance, cotangent-completion matrix, layout coherence.
+
+No flags runs both.  ``--configs a b`` restricts the seam pass.
+Exit status 0 = all contracts hold; 1 = violations (each printed as an
+actionable report line).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="static seam-contract + lint checker")
+    ap.add_argument("--lint", action="store_true",
+                    help="run only the AST lint pass")
+    ap.add_argument("--seams", action="store_true",
+                    help="run only the jaxpr seam-contract pass")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="restrict the seam pass to these config names")
+    ap.add_argument("--layouts", nargs="*", default=("seq", "hidden"),
+                    choices=("seq", "hidden"))
+    ap.add_argument("--mode", default="decomposed",
+                    help="overlap mode for the traced PlanSet")
+    ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    run_lint = args.lint or not args.seams
+    run_seams = args.seams or not args.lint
+    log = (lambda *_: None) if args.quiet else print
+    failures = 0
+
+    if run_lint:
+        from repro.analysis import lint
+        vs = lint.lint_tree()
+        log(f"[lint] {len(vs)} violation(s) over {'/'.join(lint.LINT_SCOPE)}")
+        for v in vs:
+            print(f"  {v}")
+        failures += len(vs)
+
+    if run_seams:
+        from repro.analysis import seamcheck
+        log("[seams] tracing configs (abstract, no devices)...")
+        errs = seamcheck.run_seam_checks(
+            config_names=args.configs, layouts=tuple(args.layouts),
+            mode=args.mode, tp=args.tp, log=log)
+        log(f"[seams] {len(errs)} violation(s)")
+        for e in errs:
+            print(f"  {e}")
+        failures += len(errs)
+
+    if failures:
+        print(f"FAILED: {failures} static-contract violation(s)")
+        return 1
+    log("all static contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

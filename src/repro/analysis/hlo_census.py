@@ -4,14 +4,20 @@ from __future__ import annotations
 import re
 from typing import Dict
 
+# Async collectives appear as a -start/-done pair naming ONE transfer; the
+# old pattern's optional suffix let "all-gather-done" fall through to a bare
+# "all-gather" match, double-counting every async collective.  Capture the
+# suffix and count only the -start (or the bare synchronous form).
 _COLL_RE = re.compile(
     r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\b")
+    r"(-start|-done)?\b")
 
 
 def hlo_collective_counts(hlo_text: str) -> Dict[str, int]:
     counts: Dict[str, int] = {}
     for m in _COLL_RE.finditer(hlo_text):
+        if m.group(2) == "-done":
+            continue
         k = m.group(1)
         counts[k] = counts.get(k, 0) + 1
     return counts

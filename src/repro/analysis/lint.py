@@ -1,0 +1,214 @@
+"""AST-based repo lint: the standing source rules as machine checks.
+
+Replaces the three ``grep -E`` gates that used to live in
+``scripts/verify.sh`` (compat-import, private-backend, removed-wrapper)
+and adds two rules greps could not express without false positives:
+
+- ``compat-import``     backend-version-dependent JAX APIs (shard_map,
+                        CompilerParams, pallas tpu import, lax.axis_size)
+                        must route through ``repro.compat``.
+- ``private-backend``   ``repro.core.overlap``'s underscore backends are an
+                        implementation detail; call ``FusedOp`` / the
+                        ``*_ref`` oracles.
+- ``removed-wrapper``   the pre-FusedOp wrappers (``ag_matmul``,
+                        ``matmul_rs``, ``matmul_ar``) no longer exist —
+                        the AST sees CALLS, so the ``*_ref`` oracles and
+                        string literals in subprocess-driving tests no
+                        longer trip it (both were grep escapes).
+- ``raw-collective``    raw ``lax.ppermute`` / ``lax.all_gather`` calls
+                        belong to the seam layer (``core/overlap.py``,
+                        ``parallel/sharding.py``); anywhere else they are
+                        invisible to the seam census.
+- ``bare-shard-map``    ``shard_map`` obtained from ``jax`` directly
+                        instead of ``repro.compat`` (signature moved
+                        across jax versions).
+
+Per-line escape: ``# lint: allow(<rule>)`` on the offending line or the
+line directly above it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+RULES = ("compat-import", "private-backend", "removed-wrapper",
+         "raw-collective", "bare-shard-map")
+
+LINT_SCOPE = ("src", "benchmarks", "examples", "tests")
+
+# files exempt per rule (relative path substrings)
+_ALLOWED = {
+    "compat-import": ("src/repro/compat/",),
+    "private-backend": ("src/repro/core/overlap.py",),
+    "removed-wrapper": (),
+    "raw-collective": ("src/repro/core/overlap.py",
+                       "src/repro/parallel/sharding.py"),
+    "bare-shard-map": ("src/repro/compat/",),
+}
+
+_PRIVATE_BACKENDS = {
+    "_ag_ring", "_ag_bidir", "_rs_ring", "_rs_bidir", "_rs_core",
+    "_ar_core", "_fused_impl", "_fused_ag", "_fused_bwd", "_gather_full",
+    "_ring_gather", "_q8_encode", "_q8_decode",
+}
+_PRIVATE_BACKEND_RE = re.compile(
+    r"^_(ag_matmul|matmul_ar|matmul_rs)_(xla|decomposed|bidir|flux|impl)")
+_REMOVED_WRAPPERS = {"ag_matmul", "matmul_rs", "matmul_ar"}
+_RAW_COLLECTIVES = {"ppermute", "all_gather"}
+_COMPILER_PARAMS = {"TPUCompilerParams", "CompilerParams"}
+_ESCAPE_RE = re.compile(r"#\s*lint:\s*allow\(([a-z-]+(?:\s*,\s*[a-z-]+)*)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _is_private_backend(name: str) -> bool:
+    return name in _PRIVATE_BACKENDS or bool(_PRIVATE_BACKEND_RE.match(name))
+
+
+def _escapes(source: str):
+    """line -> set of escaped rules (an escape covers its line AND the
+    next one, so it can sit above a long call)."""
+    out = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _ESCAPE_RE.search(text)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",")}
+            out.setdefault(i, set()).update(rules)
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.found: List[Violation] = []
+
+    def _hit(self, node, rule: str, message: str):
+        if any(a in self.relpath for a in _ALLOWED.get(rule, ())):
+            return
+        self.found.append(Violation(self.relpath, node.lineno, rule, message))
+
+    # ---- imports ----------------------------------------------------------
+    def visit_Import(self, node):
+        for alias in node.names:
+            if alias.name.startswith("jax.experimental.shard_map"):
+                self._hit(node, "compat-import",
+                          "import jax.experimental.shard_map — use "
+                          "repro.compat.shard_map")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node):
+        mod = node.module or ""
+        names = {a.name for a in node.names}
+        if mod == "jax.experimental.shard_map" or (
+                mod == "jax" and "shard_map" in names):
+            rule = ("bare-shard-map" if mod == "jax"
+                    else "compat-import")
+            self._hit(node, rule,
+                      f"shard_map imported from {mod!r} — use "
+                      "repro.compat.shard_map")
+        if mod.startswith("jax.experimental.pallas") and "tpu" in names:
+            self._hit(node, "compat-import",
+                      "pallas tpu backend import — use repro.compat.pltpu")
+        if names & _COMPILER_PARAMS:
+            self._hit(node, "compat-import",
+                      "CompilerParams import — use "
+                      "repro.compat.compiler_params")
+        if mod == "repro.core.overlap" or mod.endswith(".core.overlap"):
+            for a in node.names:
+                if _is_private_backend(a.name):
+                    self._hit(node, "private-backend",
+                              f"import of private backend {a.name!r} from "
+                              "repro.core.overlap")
+        self.generic_visit(node)
+
+    # ---- attributes -------------------------------------------------------
+    def visit_Attribute(self, node):
+        base = node.value
+        base_name = base.id if isinstance(base, ast.Name) else (
+            base.attr if isinstance(base, ast.Attribute) else None)
+        if node.attr == "shard_map" and base_name == "jax":
+            self._hit(node, "bare-shard-map",
+                      "jax.shard_map — use repro.compat.shard_map")
+        if node.attr in _COMPILER_PARAMS:
+            self._hit(node, "compat-import",
+                      f"{node.attr} attribute — use "
+                      "repro.compat.compiler_params")
+        if node.attr == "axis_size" and base_name == "lax":
+            self._hit(node, "compat-import",
+                      "lax.axis_size — use repro.compat.axis_size")
+        if base_name == "overlap" and _is_private_backend(node.attr):
+            self._hit(node, "private-backend",
+                      f"overlap.{node.attr} — private backend; go through "
+                      "FusedOp")
+        self.generic_visit(node)
+
+    # ---- calls ------------------------------------------------------------
+    def visit_Call(self, node):
+        fn = node.func
+        name = None
+        base_name = None
+        if isinstance(fn, ast.Name):
+            name = fn.id
+        elif isinstance(fn, ast.Attribute):
+            name = fn.attr
+            b = fn.value
+            base_name = b.id if isinstance(b, ast.Name) else (
+                b.attr if isinstance(b, ast.Attribute) else None)
+        if name in _REMOVED_WRAPPERS:
+            self._hit(node, "removed-wrapper",
+                      f"call to removed wrapper {name!r} — use "
+                      "overlap.FusedOp (or the *_ref oracle)")
+        if name in _RAW_COLLECTIVES and base_name in ("lax", "jax"):
+            self._hit(node, "raw-collective",
+                      f"raw {base_name}.{name} outside the seam layer — "
+                      "route through core/overlap.py or "
+                      "parallel/sharding.py (or tag + escape)")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, relpath: str) -> List[Violation]:
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as e:
+        return [Violation(relpath, e.lineno or 0, "compat-import",
+                          f"unparseable: {e.msg}")]
+    v = _Visitor(relpath)
+    v.visit(tree)
+    esc = _escapes(source)
+    return [f for f in v.found if f.rule not in esc.get(f.line, ())]
+
+
+def lint_file(path: Path, root: Path) -> List[Violation]:
+    rel = str(path.relative_to(root))
+    return lint_source(path.read_text(), rel)
+
+
+def lint_tree(root: Optional[Path] = None,
+              scope: Sequence[str] = LINT_SCOPE) -> List[Violation]:
+    root = Path(root) if root else _repo_root()
+    out: List[Violation] = []
+    for top in scope:
+        base = root / top
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            out.extend(lint_file(path, root))
+    return out
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/lint.py -> repo root
+    return Path(__file__).resolve().parents[3]

@@ -99,6 +99,19 @@ VALID_MODES = ("xla", "decomposed", "flux", "xla_q8", "decomposed_q8",
 
 VALID_KINDS = ("ag", "rs", "ar")
 
+# Every collective this module emits is wrapped in a ``jax.named_scope``
+# whose name starts with this prefix.  The scope lands on the traced eqn's
+# ``source_info.name_stack`` (surviving jvp/transpose wrapping, scan bodies
+# and custom_vjp backward rules), which is how ``repro.analysis.seamcheck``
+# attributes ring collectives to their owning seam: any full-activation
+# collective WITHOUT a seam scope in a traced step is a census violation.
+SEAM_SCOPE_PREFIX = "seam"
+
+
+def _seam_scope(name: str):
+    """Provenance marker for one seam-owned collective transport."""
+    return jax.named_scope(f"{SEAM_SCOPE_PREFIX}_{name}")
+
 # activation layout a seam consumes/produces (module docstring):
 #   "seq"    — sequence-sharded residual stream (Megatron-SP)
 #   "hidden" — replicated residual stream; only the intermediate's hidden
@@ -197,12 +210,13 @@ def _ring_gather(x: Array, axis: str, reverse: bool = False) -> Array:
     s_shard = x.shape[-2]
     out = jnp.zeros((*x.shape[:-2], s_shard * n, x.shape[-1]), x.dtype)
     buf = x
-    for step in range(n):
-        owner = (me + step) % n if reverse else (me - step) % n
-        out = lax.dynamic_update_slice_in_dim(out, buf, owner * s_shard,
-                                              axis=out.ndim - 2)
-        if step < n - 1:
-            buf = lax.ppermute(buf, axis, _ring_perm(axis, reverse))
+    with _seam_scope("ring_gather"):
+        for step in range(n):
+            owner = (me + step) % n if reverse else (me - step) % n
+            out = lax.dynamic_update_slice_in_dim(out, buf, owner * s_shard,
+                                                  axis=out.ndim - 2)
+            if step < n - 1:
+                buf = lax.ppermute(buf, axis, _ring_perm(axis, reverse))
     return out
 
 
@@ -219,7 +233,8 @@ def gather_seq(x: Array, axis: Optional[str], mode: str = "decomposed",
         return x
     if mode.startswith("decomposed"):
         return _ring_gather(x, axis, reverse)
-    return lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
+    with _seam_scope("gather_seq"):
+        return lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
 
 
 def scatter_seq_sum(x: Array, axis: Optional[str], mode: str = "decomposed",
@@ -235,8 +250,9 @@ def scatter_seq_sum(x: Array, axis: Optional[str], mode: str = "decomposed",
     if axis is None or _axis_size(axis) == 1:
         return x
     if not mode.startswith("decomposed"):
-        return lax.psum_scatter(x, axis, scatter_dimension=x.ndim - 2,
-                                tiled=True)
+        with _seam_scope("scatter_seq"):
+            return lax.psum_scatter(x, axis, scatter_dimension=x.ndim - 2,
+                                    tiled=True)
     n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     s_shard = x.shape[-2] // n
@@ -249,10 +265,11 @@ def scatter_seq_sum(x: Array, axis: Optional[str], mode: str = "decomposed",
         return lax.dynamic_slice_in_dim(x, owner_at(s) * s_shard, s_shard,
                                         axis=x.ndim - 2)
 
-    acc = part(0)
-    for s in range(1, n):
-        acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
-        acc = acc + part(s)
+    with _seam_scope("scatter_seq"):
+        acc = part(0)
+        for s in range(1, n):
+            acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
+            acc = acc + part(s)
     return acc
 
 
@@ -295,20 +312,22 @@ def _ag_ring(x: Array, axis: str, comm_chunks: int, reverse: bool,
             for j in range(sub)]
 
     ys = _out_buffers(x, s_shard * n, sub_len, chunk_fn)
-    for step in range(n):
-        # step 0 consumes the LOCAL shard ("local signals preset to true");
-        # later steps consume the shard arriving from the neighbor.
-        owner = (me + step) % n if reverse else (me - step) % n
-        for j, buf in enumerate(bufs):
-            piece = decode(buf) if decode else buf[0]
-            chunks = chunk_fn(piece)
-            start = owner * s_shard + j * sub_len
-            for b, ch in enumerate(chunks):
-                ys[b] = lax.dynamic_update_slice_in_dim(
-                    ys[b], ch, start, axis=ys[b].ndim - 2)
-        if step < n - 1:
-            bufs = [tuple(lax.ppermute(p, axis, _ring_perm(axis, reverse))
-                          for p in buf) for buf in bufs]
+    with _seam_scope("ag_ring"):
+        for step in range(n):
+            # step 0 consumes the LOCAL shard ("local signals preset to
+            # true"); later steps consume the shard arriving from the
+            # neighbor.
+            owner = (me + step) % n if reverse else (me - step) % n
+            for j, buf in enumerate(bufs):
+                piece = decode(buf) if decode else buf[0]
+                chunks = chunk_fn(piece)
+                start = owner * s_shard + j * sub_len
+                for b, ch in enumerate(chunks):
+                    ys[b] = lax.dynamic_update_slice_in_dim(
+                        ys[b], ch, start, axis=ys[b].ndim - 2)
+            if step < n - 1:
+                bufs = [tuple(lax.ppermute(p, axis, _ring_perm(axis, reverse))
+                              for p in buf) for buf in bufs]
     return tuple(ys)
 
 
@@ -327,19 +346,22 @@ def _ag_bidir(x: Array, axis: str, comm_chunks: int,
 
     ys = _out_buffers(x, s_shard * n, half, chunk_fn)
     buf_r, buf_l = lo, hi
-    for step in range(n):
-        owner_r = (me - step) % n
-        owner_l = (me + step) % n
-        cr = chunk_fn(buf_r)
-        cl = chunk_fn(buf_l)
-        for b in range(len(ys)):
-            ys[b] = lax.dynamic_update_slice_in_dim(
-                ys[b], cr[b], owner_r * s_shard, axis=ys[b].ndim - 2)
-            ys[b] = lax.dynamic_update_slice_in_dim(
-                ys[b], cl[b], owner_l * s_shard + half, axis=ys[b].ndim - 2)
-        if step < n - 1:
-            buf_r = lax.ppermute(buf_r, axis, _ring_perm(axis))
-            buf_l = lax.ppermute(buf_l, axis, _ring_perm(axis, reverse=True))
+    with _seam_scope("ag_bidir"):
+        for step in range(n):
+            owner_r = (me - step) % n
+            owner_l = (me + step) % n
+            cr = chunk_fn(buf_r)
+            cl = chunk_fn(buf_l)
+            for b in range(len(ys)):
+                ys[b] = lax.dynamic_update_slice_in_dim(
+                    ys[b], cr[b], owner_r * s_shard, axis=ys[b].ndim - 2)
+                ys[b] = lax.dynamic_update_slice_in_dim(
+                    ys[b], cl[b], owner_l * s_shard + half,
+                    axis=ys[b].ndim - 2)
+            if step < n - 1:
+                buf_r = lax.ppermute(buf_r, axis, _ring_perm(axis))
+                buf_l = lax.ppermute(buf_l, axis,
+                                     _ring_perm(axis, reverse=True))
     return tuple(ys)
 
 
@@ -367,12 +389,13 @@ def _q8_decode(q: Array, scale: Array, dtype) -> Array:
 
 def _gather_full(x: Array, axis: str, q8: bool) -> Array:
     """Monolithic (xla-mode) sequence gather, optionally int8-compressed."""
-    if not q8:
-        return lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
-    q, sc = _q8_encode(x)
-    qf = lax.all_gather(q, axis, axis=q.ndim - 2, tiled=True)
-    sf = lax.all_gather(sc, axis, axis=sc.ndim - 2, tiled=True)
-    return _q8_decode(qf, sf, x.dtype)
+    with _seam_scope("ag_full"):
+        if not q8:
+            return lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
+        q, sc = _q8_encode(x)
+        qf = lax.all_gather(q, axis, axis=q.ndim - 2, tiled=True)
+        sf = lax.all_gather(sc, axis, axis=sc.ndim - 2, tiled=True)
+        return _q8_decode(qf, sf, x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -408,10 +431,11 @@ def _rs_ring(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis: str,
         return ((me - (n - 1 - s)) % n if reverse
                 else (me + n - 1 - s) % n)
 
-    acc = _rs_partial(ys, ws, owner_at(0), s_shard)
-    for s in range(1, n):
-        acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
-        acc = acc + _rs_partial(ys, ws, owner_at(s), s_shard)
+    with _seam_scope("rs_ring"):
+        acc = _rs_partial(ys, ws, owner_at(0), s_shard)
+        for s in range(1, n):
+            acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
+            acc = acc + _rs_partial(ys, ws, owner_at(s), s_shard)
     return acc
 
 
@@ -430,13 +454,14 @@ def _rs_bidir(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis: str,
                            0 if top else half)
 
     # top halves accumulate rightward, bottom halves leftward
-    acc_r = partial((me + n - 1) % n, True)
-    acc_l = partial((me - (n - 1)) % n, False)
-    for s_ in range(1, n):
-        acc_r = lax.ppermute(acc_r, axis, _ring_perm(axis))
-        acc_l = lax.ppermute(acc_l, axis, _ring_perm(axis, reverse=True))
-        acc_r = acc_r + partial((me + n - 1 - s_) % n, True)
-        acc_l = acc_l + partial((me - (n - 1) + s_) % n, False)
+    with _seam_scope("rs_bidir"):
+        acc_r = partial((me + n - 1) % n, True)
+        acc_l = partial((me - (n - 1)) % n, False)
+        for s_ in range(1, n):
+            acc_r = lax.ppermute(acc_r, axis, _ring_perm(axis))
+            acc_l = lax.ppermute(acc_l, axis, _ring_perm(axis, reverse=True))
+            acc_r = acc_r + partial((me + n - 1 - s_) % n, True)
+            acc_l = acc_l + partial((me - (n - 1) + s_) % n, False)
     return jnp.concatenate([acc_r, acc_l], axis=acc_r.ndim - 2)
 
 
@@ -458,8 +483,10 @@ def _rs_core(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis, mode: str,
         for y, w in zip(ys, ws):
             p = jnp.einsum("...sf,fd->...sd", y, w)
             acc = p if acc is None else acc + p
-        return lax.psum_scatter(acc, axis, scatter_dimension=acc.ndim - 2,
-                                tiled=True)
+        with _seam_scope("rs_scatter"):
+            return lax.psum_scatter(acc, axis,
+                                    scatter_dimension=acc.ndim - 2,
+                                    tiled=True)
     if mode == "flux":
         # multi-pair RS == single RS of the concatenated operands (the
         # contraction dim stacks): still one fused kernel / one ring pass.
@@ -487,15 +514,18 @@ def _ar_core(y: Array, w: Array, axis, mode: str, comm_chunks: int) -> Array:
             chunks -= 1
         ck = k // chunks
         parts = []
-        for c in range(chunks):
-            yc = lax.dynamic_slice_in_dim(y, c * ck, ck, axis=y.ndim - 1)
-            wc = lax.dynamic_slice_in_dim(w, c * ck, ck, axis=0)
-            parts.append(lax.psum(jnp.einsum("...mf,fd->...md", yc, wc), axis))
+        with _seam_scope("ar"):
+            for c in range(chunks):
+                yc = lax.dynamic_slice_in_dim(y, c * ck, ck, axis=y.ndim - 1)
+                wc = lax.dynamic_slice_in_dim(w, c * ck, ck, axis=0)
+                parts.append(lax.psum(jnp.einsum("...mf,fd->...md", yc, wc),
+                                      axis))
         out = parts[0]
         for p in parts[1:]:
             out = out + p
         return out
-    return lax.psum(jnp.einsum("...mf,fd->...md", y, w), axis)
+    with _seam_scope("ar"):
+        return lax.psum(jnp.einsum("...mf,fd->...md", y, w), axis)
 
 
 # ---------------------------------------------------------------------------
@@ -840,7 +870,11 @@ def _fused_bwd(op: FusedOp, res, g):
         # are rank-exclusive (hidden/contraction shards), so complete the
         # cotangent with the interchanged collective (psum — the AllReduce
         # backward of the AllReduce forward) BEFORE the local GEMMs.
-        dzf = dz if single else lax.psum(dz, op.axis)
+        if single:
+            dzf = dz
+        else:
+            with _seam_scope("cotangent_ar"):
+                dzf = lax.psum(dz, op.axis)
         dy = jnp.einsum("...md,fd->...mf", dzf, w)
         dw = jnp.einsum("...mf,...md->fd", x, dzf)
     return dy.astype(x.dtype), (dw.astype(w.dtype),), dbias, dscale, dres

@@ -239,8 +239,9 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         vals = jnp.where(keep_loc[:, None], vals, 0)
         comb = jax.ops.segment_sum(vals * gates[:, None], src,
                                    num_segments=t)
-        for a in ep_axes:
-            comb = lax.psum(comb, a)
+        with jax.named_scope("seam_moe_combine"):
+            for a in ep_axes:
+                comb = lax.psum(comb, a)
         y = comb.reshape(b, s_loc, dm).astype(x.dtype)
     else:
         disp = jnp.zeros((e, cap, dm), ht.dtype)
@@ -323,8 +324,12 @@ def moe_decode(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     # gather tokens across the data portion of the EP group (tokens are
     # already replicated over the model axis)
     gather_axes = tuple(a for a in ep_axes if a != ctx.axis)
-    for a in gather_axes:
-        ht = lax.all_gather(ht, a, axis=0, tiled=True)
+    with jax.named_scope("seam_moe_gather"):
+        for a in gather_axes:
+            # EP-group token exchange over the DATA axes (never the TP
+            # axis); one token per data shard at decode scale
+            ht = lax.all_gather(  # lint: allow(raw-collective)
+                ht, a, axis=0, tiled=True)
     t = ht.shape[0]
 
     logits = jnp.einsum("td,de->te", ht.astype(jnp.float32), p["router"])
@@ -364,8 +369,9 @@ def moe_decode(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     vals = jnp.where(keep[:, None], vals, 0)
     comb = jax.ops.segment_sum(vals * gate.reshape(-1)[:, None], src,
                                num_segments=t)
-    for a in ep_axes:
-        comb = lax.psum(comb, a)
+    with jax.named_scope("seam_moe_combine"):
+        for a in ep_axes:
+            comb = lax.psum(comb, a)
     # keep this data shard's rows (gather order: axis-major blocks)
     if gather_axes:
         # sequential all_gathers make the LAST gathered axis outermost

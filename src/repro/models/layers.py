@@ -110,7 +110,8 @@ def embed_lookup(table: Array, tokens: Array, ctx: TPContext,
             # ppermute hops forward AND backward — census-clean)
             x = ctx.scatter_seq(x, "head_ag")
         else:
-            x = lax.psum(x, ctx.axis)
+            with jax.named_scope("seam_embed_ar"):
+                x = lax.psum(x, ctx.axis)
     return x
 
 
@@ -177,7 +178,11 @@ def shift_tokens_right(x: Array, ctx: TPContext) -> Array:
         return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
     last = x[:, -1:, :]
     n = ctx.tp
-    prev = lax.ppermute(last, ctx.axis, [(i, (i + 1) % n) for i in range(n)])
+    with jax.named_scope("seam_token_shift"):
+        # one boundary row between neighbors — the RWKV/mamba token-shift
+        # seam, not a transport any FusedOp ring owns
+        prev = lax.ppermute(  # lint: allow(raw-collective)
+            last, ctx.axis, [(i, (i + 1) % n) for i in range(n)])
     # rank 0's incoming boundary is garbage (wrapped) -> zero it
     is_first = (ctx.tp_index() == 0)
     prev = jnp.where(is_first, jnp.zeros_like(prev), prev)
@@ -216,7 +221,9 @@ def shift_tokens_left(x: Array, ctx: TPContext) -> Array:
         return jnp.pad(x, ((0, 0), (0, 1), (0, 0)))[:, 1:]
     first = x[:, :1, :]
     n = ctx.tp
-    nxt = lax.ppermute(first, ctx.axis, [(i, (i - 1) % n) for i in range(n)])
+    with jax.named_scope("seam_token_shift"):
+        nxt = lax.ppermute(  # lint: allow(raw-collective)
+            first, ctx.axis, [(i, (i - 1) % n) for i in range(n)])
     is_last = (ctx.tp_index() == n - 1)
     nxt = jnp.where(is_last, jnp.zeros_like(nxt), nxt)
     return jnp.concatenate([x[:, 1:, :], nxt], axis=1)

@@ -316,7 +316,9 @@ def _maybe_gather_zero3(lp: Dict, par: ParallelConfig, flags=None,
 
     def gather(w, flag):
         if flag:
-            return lax.all_gather(w, dp_axis, axis=0, tiled=True)
+            # ZeRO-3 weight gather over the DATA axis (not a TP seam)
+            return lax.all_gather(  # lint: allow(raw-collective)
+                w, dp_axis, axis=0, tiled=True)
         return w
 
     return jax.tree.map(gather, lp, flags)

@@ -38,8 +38,8 @@ from repro.configs.base import (ATTN, DENSE_FFN, MLA, MAMBA, MOE_FFN, RWKV,
 from repro.models import attention, ffn, layers, mamba, rwkv
 from repro.models.model import (_maybe_gather_zero3, expanded_pattern,
                                 n_periods, zero3_flags)
-from repro.parallel.sharding import (TPContext, ceil_mult, pad_kv_heads,
-                                     pad_heads, pad_vocab)
+from repro.parallel.sharding import (TPContext, ceil_mult, gather_ranks,
+                                     pad_kv_heads, pad_heads, pad_vocab)
 
 Array = jax.Array
 
@@ -222,8 +222,8 @@ def vocab_parallel_argmax(logits_loc: Array, ctx: TPContext,
     if ctx.axis is None or ctx.tp == 1:
         return loc_idx.astype(jnp.int32)
     glob_idx = loc_idx + ctx.tp_index() * v_loc
-    vals = lax.all_gather(loc_val, ctx.axis, axis=-1)     # [B, TP]
-    idxs = lax.all_gather(glob_idx, ctx.axis, axis=-1)    # [B, TP]
+    vals = gather_ranks(loc_val, ctx.axis)                # [B, TP]
+    idxs = gather_ranks(glob_idx, ctx.axis)               # [B, TP]
     best = jnp.argmax(vals, axis=-1)
     return jnp.take_along_axis(idxs, best[:, None], axis=-1)[:, 0].astype(
         jnp.int32)

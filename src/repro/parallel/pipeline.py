@@ -61,8 +61,10 @@ def pipeline_forward(stage_fn: Callable[[Array, int], Array], x: Array,
             out, jnp.where(emit, y, lax.dynamic_index_in_dim(
                 out, mb_idx, axis=0, keepdims=False)),
             mb_idx, axis=0)
-        # forward the activation to the next stage
-        buf = lax.ppermute(y, axis, fwd_perm) if p > 1 else y
+        # forward the activation to the next stage (the PIPELINE axis, not
+        # a TP seam ring)
+        buf = (lax.ppermute(y, axis, fwd_perm)  # lint: allow(raw-collective)
+               if p > 1 else y)
         return (buf, out), None
 
     buf0 = jnp.zeros((mb, *x.shape[1:]), x.dtype)

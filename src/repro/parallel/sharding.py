@@ -118,7 +118,8 @@ class TPContext:
         if self.axis is None or self.tp == 1:
             return x
         if not self.seq_sharded:
-            return _lax.psum(x, self.axis)
+            with jax.named_scope("seam_replicated_sum"):
+                return _lax.psum(x, self.axis)
         from repro.core import overlap
         plan = self.plan(seam)
         return overlap.scatter_seq_sum(x, self.axis, mode=plan.mode,
@@ -145,6 +146,17 @@ class TPContext:
         if self.axis is None:
             return 0
         return lax.axis_index(self.axis)
+
+
+def gather_ranks(x, axis: Optional[str]):
+    """Stack every rank's copy of ``x`` along a NEW trailing dim:
+    [...] -> [..., TP].  The tiny cross-rank reduction seam (vocab-parallel
+    argmax candidates, per-rank stats) — lives here so model code never
+    emits a raw ``lax.all_gather`` (the seamcheck raw-collective rule)."""
+    if axis is None or compat.axis_size(axis) == 1:
+        return x[..., None]
+    with jax.named_scope("seam_rank_gather"):
+        return lax.all_gather(x, axis, axis=-1)
 
 
 def ceil_mult(x: int, m: int) -> int:

@@ -21,6 +21,13 @@ period positions use ``leading_dense_layers + position``.  All repetitions
 of a scanned period share one trace, hence one plan per pattern position —
 finer per-repetition overrides are structurally impossible under
 ``lax.scan`` and are rejected nowhere (they simply never match).
+
+Every collective transport a resolved plan schedules runs under a
+``seam_*`` ``jax.named_scope`` (``repro.core.overlap.SEAM_SCOPE_PREFIX``);
+``repro.analysis.seamcheck`` statically verifies — for every config x both
+layouts — that NO full-activation TP collective escapes that provenance
+and that ``residual_layout()``'s coherence contract holds in the traced
+jaxprs (``python -m repro.analysis.check --seams``).
 """
 from __future__ import annotations
 

@@ -95,6 +95,25 @@ print("COLL_OK")
     assert "COLL_OK" in subproc(code, n_devices=4)
 
 
+def test_hlo_census_async_pairs_count_once():
+    """An async collective lowers to a -start/-done pair naming ONE
+    transfer; the census must not double-count it (the old regex let
+    "all-gather-done" fall through to a bare "all-gather" match)."""
+    from repro.analysis.hlo_census import hlo_collective_counts
+
+    hlo = """
+  %ags = bf16[4,128] all-gather-start(%x), dimensions={0}
+  %agd = bf16[4,128] all-gather-done(%ags)
+  %ar = f32[128] all-reduce(%y), to_apply=%sum
+  %cps = bf16[32] collective-permute-start(%z)
+  %cpd = bf16[32] collective-permute-done(%cps)
+  %rs = f32[32] reduce-scatter(%w), dimensions={0}
+"""
+    assert hlo_collective_counts(hlo) == {
+        "all-gather": 1, "all-reduce": 1, "collective-permute": 1,
+        "reduce-scatter": 1}
+
+
 def test_roofline_terms_dominance():
     c = JC.Cost(flops=197e12, bytes=0, collective_bytes=0)
     t = JC.roofline_terms(c)

@@ -1,8 +1,7 @@
 """Portability-layer contract: every compat symbol resolves on the installed
 JAX, behaves sanely, and no module outside ``repro/compat`` touches the
-drifted JAX surface directly (grep-based lint)."""
+drifted JAX surface directly (AST lint — ``repro.analysis.lint``)."""
 import os
-import re
 import warnings
 
 import jax
@@ -93,50 +92,30 @@ def test_pallas_call_end_to_end():
 
 
 # ---------------------------------------------------------------------------
-# (b) grep lint: drifted symbols only inside repro/compat
+# (b) AST lint: drifted symbols only inside repro/compat
 # ---------------------------------------------------------------------------
-FORBIDDEN = [
-    # symbol drift this PR exists to contain:
-    re.compile(r"jax\.shard_map"),
-    re.compile(r"jax\.experimental\.shard_map"),
-    re.compile(r"CompilerParams"),          # TPU/plain spelling both
-    re.compile(r"from jax\.experimental\.pallas import tpu"),
-    re.compile(r"jax\.experimental\.pallas\.tpu"),
-    re.compile(r"lax\.axis_size"),
-]
+# The old grep-based scan lived here; it could not tell an import from a
+# string mentioning one (the AST linter's own rule tables tripped it).
+# repro.analysis.lint parses the files, so only REAL imports/attributes
+# of the drifted surface count.
+_COMPAT_RULES = ("compat-import", "bare-shard-map")
 
 
-def _scan(root, skip_dirs=()):
-    hits = []
-    for dirpath, dirnames, filenames in os.walk(root):
-        dirnames[:] = [d for d in dirnames if d not in ("__pycache__",)]
-        if any(os.path.join(root, s) == dirpath or
-               dirpath.startswith(os.path.join(root, s) + os.sep)
-               for s in skip_dirs):
-            continue
-        for fn in filenames:
-            if not fn.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fn)
-            for i, line in enumerate(open(path, encoding="utf-8"), 1):
-                for pat in FORBIDDEN:
-                    if pat.search(line):
-                        hits.append(f"{os.path.relpath(path, REPO)}:{i}: "
-                                    f"{line.strip()}")
-    return hits
+def _compat_violations(tops):
+    from repro.analysis import lint
+    return [v for v in lint.lint_tree(REPO, scope=tops)
+            if v.rule in _COMPAT_RULES]
 
 
 def test_no_drifted_symbols_outside_compat():
-    hits = _scan(os.path.join(REPO, "src"), skip_dirs=("repro/compat",))
+    hits = _compat_violations(("src",))
     assert not hits, ("drifted JAX symbols outside repro/compat "
                       "(import through repro.compat instead):\n"
-                      + "\n".join(hits))
+                      + "\n".join(map(str, hits)))
 
 
 def test_no_drifted_symbols_in_tests():
-    here = os.path.abspath(__file__)
-    hits = [h for h in _scan(os.path.join(REPO, "tests"))
-            if not h.startswith(os.path.relpath(here, REPO))]
+    hits = _compat_violations(("tests", "benchmarks", "examples"))
     assert not hits, ("drifted JAX symbols in tests "
                       "(import through repro.compat instead):\n"
-                      + "\n".join(hits))
+                      + "\n".join(map(str, hits)))

@@ -299,15 +299,17 @@ assert np.abs(ag_only("xla_q8") - ag_only("decomposed_q8", 8)).max() < 1e-5
 
 # ... and it must actually ride the ring: the forward jaxpr carries
 # ppermute hops, no monolithic all_gather (the pre-fix regression)
-def fwd_jaxpr(mode):
+from repro.analysis.seamcheck import collective_counts
+def fwd_counts(mode):
     f = functools.partial(shard_map, mesh=mesh,
                           in_specs=(P(None, "model", None), P(None, "model")),
                           out_specs=P(None, None, "model"), check_vma=False)(
         lambda xs, ws: _ag(xs, ws, "model", mode, 8))
-    return str(jax.make_jaxpr(f)(x, w1))
-j = fwd_jaxpr("decomposed_q8")
-assert "ppermute" in j and "all_gather" not in j, "q8 lost ring overlap"
-assert "all_gather" in fwd_jaxpr("xla_q8")
+    return collective_counts(jax.make_jaxpr(f)(x, w1))
+cq = fwd_counts("decomposed_q8")
+assert cq.get("ppermute", 0) > 0 and cq.get("all_gather", 0) == 0, \
+    ("q8 lost ring overlap", cq)
+assert fwd_counts("xla_q8").get("all_gather", 0) > 0
 
 # gradients vs the xla oracle (bidir is exact; q8's custom_vjp runs the
 # interchanged ops on full-precision cotangents so grads stay within the

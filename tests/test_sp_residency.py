@@ -183,10 +183,11 @@ def test_moe_ep_over_dp_layouts(subproc):
 
 
 _CENSUS = r"""
-import dataclasses, functools, re
+import dataclasses, functools
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.analysis.seamcheck import collective_counts
 from repro.compat import shard_map
 from repro.configs.base import get_smoke_config, ParallelConfig
 from repro.models import model as M
@@ -215,17 +216,18 @@ for arch in ("codeqwen15_7b", "deepseek_v3_671b", "jamba_v01_52b",
         lambda p, b: jax.value_and_grad(
             lambda pp: jax.lax.pmean(M.forward_loss(pp, b, ctx, cfg, par),
                                      ("data",)))(p))
-    jx = str(jax.make_jaxpr(f)(params, batch))
+    cc = collective_counts(jax.make_jaxpr(f)(params, batch))
     # the SP train step (fwd AND bwd) must contain ZERO standalone
     # full-activation collectives between seams: every sequence
     # gather/scatter rides a seam-owned ppermute ring.  (psum remains for
     # the xent/aux reductions and the ar seams; all_to_all is the MoE EP
-    # dispatch seam.)
-    n_ag = len(re.findall(r"\ball_gather\b", jx))
-    n_ps = len(re.findall(r"\bpsum_scatter\b", jx))
-    n_pp = len(re.findall(r"\bppermute\b", jx))
+    # dispatch seam; psum_scatter traces as a reduce_scatter eqn — the
+    # old string census looked for the wrong name and was vacuous.)
+    n_ag = cc.get("all_gather", 0)
+    n_ps = cc.get("reduce_scatter", 0)
+    n_pp = cc.get("ppermute", 0)
     assert n_ag == 0, (arch, "all_gather", n_ag)
-    assert n_ps == 0, (arch, "psum_scatter", n_ps)
+    assert n_ps == 0, (arch, "reduce_scatter", n_ps)
     assert n_pp > 0, (arch, "expected ppermute rings")
     print("CENSUS_OK", arch, "ppermute", n_pp)
 print("ALL_CENSUS_OK")
