@@ -154,6 +154,41 @@ def main(full: bool = False) -> None:
                             else None) for r in res_ar.table],
     })
 
+    # MoE EP exchange (kind="a2a"): chunk sweep on the interleaved ring —
+    # dispatch/combine ppermute chunks hidden under the per-local-expert
+    # GEMMs — plus the tuner's pick over the full a2a candidate space.
+    # m = routed rows (tokens x top_k), k = d_model, n = expert_ffn.
+    ma, na, ka = 8192, 8192, 12288
+    for chunks in (N_TP, 2 * N_TP, 4 * N_TP):
+        est = ect.model_overlap("a2a", ma, na, ka, N_TP, "decomposed",
+                                comm_chunks=chunks)
+        print(f"tuning_a2a_commtile_c{chunks},{est['overall']*1e6:.0f},"
+              f"{est['overall']*1e3:.3f}")
+        doc.setdefault("moe", {}).setdefault("a2a_chunks", []).append(
+            {"m": ma, "n": na, "k": ka, "comm_chunks": chunks,
+             "overall_s": est["overall"], "comm_s": est["comm"],
+             "comm_bytes": est["comm_bytes"],
+             "overlap_eff": est["overlap_eff"]})
+    est_bar = ect.model_overlap("a2a", ma, na, ka, N_TP, "xla")
+    print(f"tuning_a2a_barrier,{est_bar['overall']*1e6:.0f},"
+          f"{est_bar['overall']*1e3:.3f}")
+    doc["moe"]["a2a_barrier"] = {
+        "m": ma, "n": na, "k": ka, "overall_s": est_bar["overall"],
+        "comm_s": est_bar["comm"], "comm_bytes": est_bar["comm_bytes"]}
+    res_a2a = autotune.tune_seam("a2a", ma, na, ka, N_TP, seam="moe_a2a")
+    pa = res_a2a.plan
+    print(f"tuning_moe_a2a_pick_{pa.mode}_c{pa.comm_chunks}"
+          f"{'_rev' if pa.reverse else ''},"
+          f"{(pa.measured_s or pa.predicted_s)*1e6:.0f},{res_a2a.source}")
+    doc["seams"].append({
+        "seam": "moe_a2a", "kind": res_a2a.kind, "m": res_a2a.m,
+        "n": res_a2a.n, "k": res_a2a.k, "n_dev": res_a2a.n_dev,
+        "n_weights": 3, "epilogue": True,
+        "source": res_a2a.source, "plan": pa.to_json(),
+        "candidates": [dict(r, blocks=list(r["blocks"]) if r["blocks"]
+                            else None) for r in res_a2a.table],
+    })
+
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as f:
         json.dump(doc, f, indent=1)

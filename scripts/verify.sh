@@ -58,6 +58,36 @@ fi
 echo "== static contracts (repro.analysis.check: lint + seam invariants) =="
 python -m repro.analysis.check
 
+echo "== MoE a2a seam: census provenance on both transports =="
+# runs in EVERY lane (incl. --fast): abstractly trace one MoE config's
+# train step under the barrier and ring a2a transports and demand the EP
+# exchange shows up seam-tagged — the all_to_all census blind spot stays
+# closed even when the multi-device sweeps are skipped.
+python - <<'EOF'
+from repro.analysis import seamcheck
+from repro.configs.base import ParallelConfig, get_smoke_config
+from repro.tuning.plans import PlanSet, SeamPlan
+
+cfg = get_smoke_config("deepseek_v3_671b")
+par = ParallelConfig(tp=4, dp=1)
+for layout in ("seq", "hidden"):
+    for a2a_mode in ("xla", "decomposed"):
+        plans = PlanSet.uniform("decomposed").override(
+            "moe_a2a", SeamPlan(mode=a2a_mode)).with_scatter_axis(layout)
+        colls = seamcheck.collect_collectives(
+            seamcheck.trace_train(cfg, par, plans))
+        a2a = [c for c in colls if c.prim == "all_to_all"]
+        assert all(c.seam_tagged for c in a2a), \
+            [c.describe() for c in a2a if not c.seam_tagged]
+        if layout == "seq" and a2a_mode == "xla":
+            assert a2a, "barrier plan must trace all_to_all dispatch/combine"
+        if layout == "seq" and a2a_mode == "decomposed":
+            assert not a2a, "ring plan must decompose the a2a into ppermute"
+            assert any(c.prim == "ppermute" and "seam_moe" in c.scope
+                       for c in colls), "no seam_moe ppermute ring traced"
+print("moe a2a census ok: both layouts x both transports")
+EOF
+
 if [[ "$JAX_MIN" == 1 ]]; then
   echo "== compat contract tests at the 0.4.30 floor (REPRO_COMPAT_ASSUME_JAX) =="
   REPRO_COMPAT_ASSUME_JAX=0.4.30 python -m pytest -x -q tests/test_compat.py "$@"
@@ -93,6 +123,23 @@ for m, pair in by_m.items():
     assert seq["act_bytes"] < hid["act_bytes"], (m, "seq must reduce "
                                                  "activation residency")
 print(f"BENCH_tuning.json scatter_axis sweep ok: {len(rows)} rows")
+EOF
+  echo "== BENCH_tuning.json MoE a2a rows =="
+  python - <<'EOF'
+import json
+doc = json.load(open("experiments/BENCH_tuning.json"))
+chunks = doc.get("moe", {}).get("a2a_chunks", [])
+assert chunks, "BENCH_tuning.json has no a2a chunk-sweep rows"
+assert len({r["comm_chunks"] for r in chunks}) >= 3, chunks
+for r in chunks:
+    assert {"m", "n", "k", "overall_s", "comm_bytes"} <= set(r), r
+    assert r["comm_bytes"] > 0, r
+a2a_seams = [s for s in doc["seams"] if s["seam"] == "moe_a2a"]
+assert a2a_seams, "no moe_a2a planner row in BENCH_tuning.json"
+modes = {c["mode"] for c in a2a_seams[0]["candidates"]}
+assert {"xla", "decomposed"} <= modes, modes
+print(f"BENCH_tuning.json moe a2a ok: {len(chunks)} chunk rows, "
+      f"pick={a2a_seams[0]['plan']['mode']}")
 EOF
   exit 0
 fi

@@ -15,10 +15,14 @@ and adds two rules greps could not express without false positives:
                         the AST sees CALLS, so the ``*_ref`` oracles and
                         string literals in subprocess-driving tests no
                         longer trip it (both were grep escapes).
-- ``raw-collective``    raw ``lax.ppermute`` / ``lax.all_gather`` calls
+- ``raw-collective``    raw ``lax.ppermute`` / ``lax.all_gather`` /
+                        ``lax.all_to_all`` / ``lax.psum_scatter`` calls
                         belong to the seam layer (``core/overlap.py``,
                         ``parallel/sharding.py``); anywhere else they are
-                        invisible to the seam census.
+                        invisible to the seam census.  (all_to_all and
+                        psum_scatter were blind spots until the MoE a2a
+                        seam landed — exactly the transports the EP
+                        exchange and the ZeRO-1 reduce use.)
 - ``bare-shard-map``    ``shard_map`` obtained from ``jax`` directly
                         instead of ``repro.compat`` (signature moved
                         across jax versions).
@@ -57,7 +61,7 @@ _PRIVATE_BACKENDS = {
 _PRIVATE_BACKEND_RE = re.compile(
     r"^_(ag_matmul|matmul_ar|matmul_rs)_(xla|decomposed|bidir|flux|impl)")
 _REMOVED_WRAPPERS = {"ag_matmul", "matmul_rs", "matmul_ar"}
-_RAW_COLLECTIVES = {"ppermute", "all_gather"}
+_RAW_COLLECTIVES = {"ppermute", "all_gather", "all_to_all", "psum_scatter"}
 _COMPILER_PARAMS = {"TPUCompilerParams", "CompilerParams"}
 _ESCAPE_RE = re.compile(r"#\s*lint:\s*allow\(([a-z-]+(?:\s*,\s*[a-z-]+)*)\)")
 

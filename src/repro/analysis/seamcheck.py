@@ -11,9 +11,10 @@ execution, runs on CPU CI) of every config's train/prefill/decode step:
    name starts with ``overlap.SEAM_SCOPE_PREFIX`` ("seam").  The scope
    lands on the eqn's ``source_info.name_stack`` and survives jvp/transpose
    wrapping, scan bodies and custom_vjp backward rules — so any
-   full-activation ``psum``/``all_gather``/``psum_scatter``/``ppermute``
-   over the TP axis WITHOUT a seam scope is a standalone collective no seam
-   owns: a census violation, reported with the eqn's shapes/provenance.
+   full-activation ``psum``/``all_gather``/``psum_scatter``/``ppermute``/
+   ``all_to_all`` over the TP axis WITHOUT a seam scope is a standalone
+   collective no seam owns: a census violation, reported with the eqn's
+   shapes/provenance.
 
 2. **Partial-cotangent completion.**  Under the repo's check_rep=False
    convention a replicated tensor's cotangent arrives as a per-rank
@@ -48,10 +49,13 @@ import jax.numpy as jnp
 from repro.core.overlap import SEAM_SCOPE_PREFIX
 
 # primitive names as they appear in traced jaxprs (``lax.psum_scatter``
-# traces as a ``reduce_scatter`` eqn; ``pmean`` lowers to psum + div)
+# traces as a ``reduce_scatter`` eqn; ``pmean`` lowers to psum + div).
+# ``all_to_all`` joined the census with the MoE EP exchange seam: a
+# full-activation dispatch/combine without a seam scope is exactly the
+# unattributed-transport class the census exists to catch.
 CENSUS_PRIMS = ("psum", "all_gather", "reduce_scatter", "ppermute",
-                "pmax", "pmin")
-ALL_COLLECTIVE_PRIMS = CENSUS_PRIMS + ("all_to_all",)
+                "pmax", "pmin", "all_to_all")
+ALL_COLLECTIVE_PRIMS = CENSUS_PRIMS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -316,8 +320,9 @@ def fusedop_cotangent_errors(tp: int = 4, modes: Sequence[str] = (
         "decomposed", "xla")) -> List[str]:
     """The completion matrix over every FusedOp (kind, layout): replicated
     outputs (ar, rs/hidden) must complete their cotangent; rank-exclusive
-    outputs (seq seams, ag/hidden's partial dx) must not."""
-    from repro.core.overlap import FusedOp
+    outputs (seq seams, ag/hidden's partial dx, the a2a exchange's routed
+    rows and local-expert weights) must not."""
+    from repro.core.overlap import Epilogue, FusedOp
 
     b, s, d, f = 2, 16, 16, 32
     sl = s // tp
@@ -347,6 +352,31 @@ def fusedop_cotangent_errors(tp: int = 4, modes: Sequence[str] = (
                 fn, (x, w), ct, tp_axis="model", axis_env=env,
                 expect_complete=expect,
                 label=f"FusedOp kind={kind} layout={lay} mode={mode}"))
+    # EP exchange op: dispatch a2a + batched expert SwiGLU + combine a2a in
+    # one seam.  Its outputs are rank-exclusive on every path — dx is this
+    # rank's own routed rows, and dw is the LOCAL experts' full gradient
+    # (every EP peer's token contribution arrives through the backward
+    # exchange, never through a completing psum) — so any psum over the TP
+    # axis on the cotangent path double-counts.
+    e_loc, cap = 2, 4
+    for mode in modes:
+        op = FusedOp(kind="a2a", axis=("model",), mode=mode,
+                     epilogue=Epilogue(activation="silu", gate="pair"),
+                     n_weights=3)
+        x = jax.ShapeDtypeStruct((tp, e_loc, cap, d), jnp.float32)
+        w1 = jax.ShapeDtypeStruct((e_loc, d, f), jnp.float32)
+        w3 = jax.ShapeDtypeStruct((e_loc, d, f), jnp.float32)
+        w2 = jax.ShapeDtypeStruct((e_loc, f, d), jnp.float32)
+
+        def a2a_fn(x_, a_, b_, c_, op=op):
+            return op(x_, a_, b_, c_)
+
+        ct_aval = jax.make_jaxpr(a2a_fn, axis_env=env)(
+            x, w1, w3, w2).out_avals[0]
+        ct = jax.ShapeDtypeStruct(ct_aval.shape, ct_aval.dtype)
+        errs.extend(check_cotangent_completion(
+            a2a_fn, (x, w1, w3, w2), ct, tp_axis="model", axis_env=env,
+            expect_complete=False, label=f"FusedOp kind=a2a mode={mode}"))
     return errs
 
 

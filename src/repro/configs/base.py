@@ -119,14 +119,22 @@ class ModelConfig:
 class ParallelConfig:
     """How a model maps onto the device mesh.
 
-    mesh axes are ("pod", "data", "model"); single-pod meshes drop "pod".
-    - dp axes: ("pod", "data") -> batch
+    mesh axes are ("pod", "ep", "data", "model"); single-pod meshes drop
+    "pod" and ep == 0 (the default) drops "ep".
+    - dp axes: ("pod", "ep", "data") -> batch (a dedicated EP axis still
+      carries batch outside the MoE seam — tokens are sharded over it and
+      the expert exchange is what crosses it)
     - tp/sp axis: "model"      -> Megatron TP with sequence sharding
-    - ep: experts sharded over ep_axes (subset of axes, e.g. ("data","model"))
+    - ep: EITHER a dedicated "ep" mesh axis (``ep > 0``: experts sharded
+      over it, first-class factor of total_devices) OR implied — experts
+      over "model" by default, over ("data","model") jointly when
+      ``ep_over_dp`` (DeepSeek-scale expert counts)
     """
     tp: int = 1
     dp: int = 1
     pods: int = 1
+    ep: int = 0                      # dedicated EP axis size (0 -> no axis;
+    #                                  EP implied by ep_over_dp / "model")
     ep_over_dp: bool = False         # experts sharded over (data, model) jointly
     zero3: bool = False              # FSDP-style param gather per layer
     pp: int = 1                      # pipeline stages (reinterprets pod axis)
@@ -146,7 +154,7 @@ class ParallelConfig:
 
     @property
     def total_devices(self) -> int:
-        return self.tp * self.dp * self.pods
+        return self.tp * self.dp * self.pods * max(self.ep, 1)
 
 
 @dataclass(frozen=True)

@@ -82,7 +82,7 @@ def model_collective_time(shard_bytes: float, n_dev: int,
     """Ring-collective time on ICI.  ``shard_bytes`` is the PER-DEVICE shard
     (AG input / RS output); a ring moves (n-1) shards over every link, twice
     for all-reduce."""
-    mult = 2.0 if kind in ("ar", "allreduce") else 1.0
+    mult = 2.0 if kind in ("ar", "allreduce", "a2a") else 1.0
     return mult * (n_dev - 1) * shard_bytes / (ICI_BW * links)
 
 
@@ -102,6 +102,11 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
     seam="ag": C = AllGather_m(A[m/n,k]) @ B[k,n/n]   (per-device n_local=n/n_dev)
     seam="rs": C = RS_m(A[m,k/n] @ B[k/n,n])
     seam="ar": C = AllReduce(A[m,k/n] @ B[k/n,n])     (decode row-parallel)
+    seam="a2a": MoE EP exchange — m routed rows [m, k=d_model] all_to_all'd
+                over the EP group, three per-expert GEMMs (w1/w3 up to
+                n=expert_ffn, w2 down), all_to_all back; each direction
+                moves the (n_dev-1)/n_dev non-local share of the buffer
+                (the ISSUE's 2·t·k·dm payload, per direction)
     Modes: the ``overlap.VALID_MODES`` set — ``*_q8`` scales the AG payload
     by the int8+scales factor, ``decomposed_bidir`` rides both full-duplex
     link directions (2 links).
@@ -151,6 +156,16 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
         out_elems = m * (n // n_dev) * n_weights
         # residual-stream activation this seam reads (resident between seams)
         act_bytes = ((m // n_dev) if seq else m) * k * dtype_bytes
+    elif seam == "a2a":
+        # MoE EP exchange: the dispatch buffer is [m, k] routed rows; the
+        # gated up-projections (w1, w3) and the down-projection (w2) run
+        # batched per local expert between the two exchange directions
+        gemm = (2.0 * model_gemm_time(m, n, k, dtype_bytes)
+                + model_gemm_time(m, k, n, dtype_bytes))
+        comm_bytes = m * k * dtype_bytes / n_dev      # per-direction shard
+        comm = model_collective_time(comm_bytes, n_dev, "a2a", links=links)
+        out_elems = m * k
+        act_bytes = m * k * dtype_bytes
     elif seam == "rs":
         gemm = model_gemm_time(m, n, k // n_dev, dtype_bytes)
         comm_bytes = (m // n_dev) * n * dtype_bytes
@@ -210,7 +225,7 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
     # total bytes each device's link(s) move for this seam (the "volume"
     # the scatter_axis sweep compares: layout-invariant per AG+RS pair)
     rings_f = 1 if (seam != "ag" or shared_gather) else n_weights
-    moved_bytes = ((2.0 if seam == "ar" else 1.0) * (n_dev - 1)
+    moved_bytes = ((2.0 if seam in ("ar", "a2a") else 1.0) * (n_dev - 1)
                    * comm_bytes * rings_f)
     return dict(overall=overall, gemm=gemm, comm=comm,
                 comm_bytes=moved_bytes, act_bytes=float(act_bytes),

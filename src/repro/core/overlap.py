@@ -31,6 +31,18 @@ plain TP):
        (decode path: m == 1 new token — "ar" IS the hidden layout and
        always coerces scatter_axis="hidden")
 
+  a2a  x[EP, E/EP, C, D], (w1, w3, w2)[E/EP, ...]  ->  out[EP, E/EP, C, D]
+       the MoE expert-parallel token exchange: ``x[j]`` holds the
+       capacity-bucketed tokens this rank routes to EP rank j's local
+       experts; ``out[j] = E_j(x[j])`` returns them expert-processed.
+       ``axis`` is the EP axis TUPLE (possibly multi-axis, e.g.
+       ``("data", "model")`` under ep_over_dp; rank order is axis-major).
+       Dispatch AND combine ride per-shift ppermute chunks interleaved
+       with the per-local-expert gated GEMMs (w1/w3/w2 compute on chunk i
+       hides the transfer of chunk i+1); ``xla*`` modes run the two
+       barrier ``lax.all_to_all`` exchanges instead.  Epilogue must be the
+       pure ``gate="pair"`` spec (silu(x@w1) * (x@w3) @ w2).
+
   Total comm volume per layer is layout-invariant (AG+RS over seq ==
   one AllReduce), but "seq" keeps 1/N of the activation resident between
   seams — the knob the autotuner sweeps via ``SeamPlan.scatter_axis``.
@@ -97,7 +109,7 @@ Array = jax.Array
 VALID_MODES = ("xla", "decomposed", "flux", "xla_q8", "decomposed_q8",
                "decomposed_bidir")
 
-VALID_KINDS = ("ag", "rs", "ar")
+VALID_KINDS = ("ag", "rs", "ar", "a2a")
 
 # Every collective this module emits is wrapped in a ``jax.named_scope``
 # whose name starts with this prefix.  The scope lands on the traced eqn's
@@ -529,6 +541,209 @@ def _ar_core(y: Array, w: Array, axis, mode: str, comm_chunks: int) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# kind="a2a": the MoE expert-parallel token exchange (dispatch + combine)
+# ---------------------------------------------------------------------------
+def _ep_group_size(axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= compat.axis_size(a)
+    return n
+
+
+def a2a_exchange(buf: Array, axes: Sequence[str]) -> Array:
+    """Barrier all-to-all of ``buf[EP, ...]`` over an EP group spanning one
+    or more mesh axes (rank order axis-major, matching the router's
+    ``ep_rank = ep_rank * size(a) + axis_index(a)`` computation).  The
+    exchange is an involution — and its own transpose — so the same call
+    serves dispatch, combine, and both backward directions.  Callers wrap
+    it in a ``seam_*`` scope (census provenance)."""
+    if len(axes) == 1:
+        return lax.all_to_all(buf, axes[0], split_axis=0, concat_axis=0,
+                              tiled=True)
+    sizes = [compat.axis_size(a) for a in axes]
+    shaped = buf.reshape(*sizes, *buf.shape[1:])
+    for i, a in enumerate(axes):
+        shaped = lax.all_to_all(shaped, a, split_axis=i, concat_axis=i,
+                                tiled=True)
+    return shaped.reshape(buf.shape)
+
+
+def _expert_fn(epi: Epilogue, b: Array, w1: Array, w3: Array,
+               w2: Array) -> Array:
+    """Per-local-expert gated FFN on one (sub-)chunk of the received
+    dispatch buffer: b[..., e_loc, c, dm] @ (w1, w3)[e_loc, dm, df] ->
+    pair-gate -> @ w2[e_loc, df, dm]."""
+    a1 = jnp.einsum("...ecd,edf->...ecf", b, w1)
+    a3 = jnp.einsum("...ecd,edf->...ecf", b, w3)
+    h = epi.apply([a1, a3])
+    return jnp.einsum("...ecf,efd->...ecd", h, w2)
+
+
+def _ep_shifts(op: FusedOp, axes, sizes):
+    """Per-axis shift vectors enumerating every EP partner exactly once
+    (mixed-radix digits of the step index; ``reverse`` flips the ring
+    direction).  For each shift vector the send map ``idx -> idx + sh``
+    (per-axis modular) is a bijection realized by one ppermute per
+    involved axis."""
+    strides = []
+    for k in range(len(sizes)):
+        st = 1
+        for nj in sizes[k + 1:]:
+            st *= nj
+        strides.append(st)
+    ep = _ep_group_size(axes)
+    out = []
+    for s in range(ep):
+        shs = [(s // st) % nk for st, nk in zip(strides, sizes)]
+        if op.reverse:
+            shs = [(nk - sh) % nk for sh, nk in zip(shs, sizes)]
+        out.append(shs)
+    return out, strides
+
+
+def _ep_flat(idx, shs, sizes, strides, sign: int):
+    """Axis-major flat EP rank of (idx +/- shs) per-axis modular."""
+    flat = 0
+    for ix, sh, nk, st in zip(idx, shs, sizes, strides):
+        flat = flat + ((ix + sign * sh) % nk) * st
+    return flat
+
+
+def _a2a_ring(op: FusedOp, x, ws, epi: Epilogue):
+    """Over-decomposed EP exchange: per (shift, sub-chunk) stage, the chunk
+    destined for the shifted partner hops forward on ppermutes, the local
+    experts' gated GEMMs consume what arrived, and the result hops back on
+    the inverse ppermutes — chunk i's GEMM is dataflow-independent of chunk
+    i+1's hops, so the scheduler overlaps them (paper §4.3, applied to the
+    dispatch AND combine directions at once).  Returns ``(out, buf)`` with
+    ``buf[i] = x_i[me]`` (the assembled received buffer, the backward's
+    saved residual) identical to the barrier path's."""
+    axes = op.axis
+    sizes = [compat.axis_size(a) for a in axes]
+    idx = [lax.axis_index(a) for a in axes]
+    shifts, strides = _ep_shifts(op, axes, sizes)
+    ep = len(shifts)
+    e_loc, cap, dm = x.shape[1:]
+    sub = _sub_chunks(cap, ep, op.comm_chunks)
+    sub_len = cap // sub
+
+    out = jnp.zeros_like(x)
+    buf = jnp.zeros_like(x)
+    with _seam_scope("moe_a2a_ring"):
+        for shs in shifts:
+            dst = _ep_flat(idx, shs, sizes, strides, +1)
+            src = _ep_flat(idx, shs, sizes, strides, -1)
+            fwd = [(a, [(i, (i + sh) % nk) for i in range(nk)])
+                   for a, sh, nk in zip(axes, shs, sizes) if sh]
+            inv = [(a, [(i, (i - sh) % nk) for i in range(nk)])
+                   for a, sh, nk in zip(axes, shs, sizes) if sh]
+            for j in range(sub):
+                off = j * sub_len
+                chunk = lax.dynamic_slice(x, (dst, 0, off, 0),
+                                          (1, e_loc, sub_len, dm))
+                for a, perm in fwd:
+                    chunk = lax.ppermute(chunk, a, perm)
+                # arrived = x_src[me]: the partner's tokens for MY experts
+                buf = lax.dynamic_update_slice(buf, chunk, (src, 0, off, 0))
+                y = _expert_fn(epi, chunk, *ws)
+                for a, perm in reversed(inv):
+                    y = lax.ppermute(y, a, perm)
+                # received = E_dst(x_me[dst]): my tokens, expert-processed
+                out = lax.dynamic_update_slice(out, y.astype(out.dtype),
+                                               (dst, 0, off, 0))
+    return out, buf
+
+
+def _a2a_impl(op: FusedOp, x, ws):
+    """(out, received_buf) of the EP exchange.  ``xla*`` modes run the two
+    barrier all_to_alls around the batched expert GEMMs; every other mode
+    rides the interleaved ppermute pipeline."""
+    epi = op.epilogue
+    axes = op.axis
+    if not axes or _ep_group_size(axes) == 1:
+        return _expert_fn(epi, x, *ws), x
+    if op.mode in ("xla", "xla_q8"):
+        with _seam_scope("moe_a2a_dispatch"):
+            buf = a2a_exchange(x, axes)
+        y = _expert_fn(epi, buf, *ws)
+        with _seam_scope("moe_a2a_combine"):
+            out = a2a_exchange(y, axes)
+        return out.astype(x.dtype), buf
+    return _a2a_ring(op, x, ws, epi)
+
+
+def _a2a_bwd_ring(op: FusedOp, x, ws, buf, g, epi: Epilogue):
+    """Backward rides the interchanged op: the combine cotangent chunk hops
+    along the DISPATCH perms (pairing it with the saved received buffer for
+    the per-chunk expert vjp), and the input cotangent returns on the
+    inverse hops.  dW accumulates locally — each rank's experts are
+    rank-exclusive, so the sum over arriving chunks IS the full gradient
+    (no completing psum; seamcheck expects none)."""
+    axes = op.axis
+    sizes = [compat.axis_size(a) for a in axes]
+    idx = [lax.axis_index(a) for a in axes]
+    shifts, strides = _ep_shifts(op, axes, sizes)
+    ep = len(shifts)
+    e_loc, cap, dm = x.shape[1:]
+    sub = _sub_chunks(cap, ep, op.comm_chunks)
+    sub_len = cap // sub
+
+    dx = jnp.zeros_like(x)
+    dws = None
+    with _seam_scope("moe_a2a_ring"):
+        for shs in shifts:
+            dst = _ep_flat(idx, shs, sizes, strides, +1)
+            src = _ep_flat(idx, shs, sizes, strides, -1)
+            fwd = [(a, [(i, (i + sh) % nk) for i in range(nk)])
+                   for a, sh, nk in zip(axes, shs, sizes) if sh]
+            inv = [(a, [(i, (i - sh) % nk) for i in range(nk)])
+                   for a, sh, nk in zip(axes, shs, sizes) if sh]
+            for j in range(sub):
+                off = j * sub_len
+                gc = lax.dynamic_slice(g, (dst, 0, off, 0),
+                                       (1, e_loc, sub_len, dm))
+                for a, perm in fwd:
+                    gc = lax.ppermute(gc, a, perm)
+                # gc = g_src[me]: cotangent of MY experts' output on the
+                # chunk received from src — pair with the saved input
+                bc = lax.dynamic_slice(buf, (src, 0, off, 0),
+                                       (1, e_loc, sub_len, dm))
+                _, vjp = jax.vjp(functools.partial(_expert_fn, epi),
+                                 bc, *ws)
+                db, *dw = vjp(gc.astype(bc.dtype))
+                dws = dw if dws is None else [a_ + b_ for a_, b_
+                                              in zip(dws, dw)]
+                for a, perm in reversed(inv):
+                    db = lax.ppermute(db, a, perm)
+                dx = lax.dynamic_update_slice(dx, db.astype(dx.dtype),
+                                              (dst, 0, off, 0))
+    return dx, tuple(d.astype(w.dtype) for d, w in zip(dws, ws))
+
+
+def _a2a_bwd(op: FusedOp, res, g):
+    x, ws, buf, _, _, _ = res
+    epi = op.epilogue
+    axes = op.axis
+
+    def local_vjp(b, ct):
+        _, vjp = jax.vjp(functools.partial(_expert_fn, epi), b, *ws)
+        db, *dw = vjp(ct.astype(b.dtype))
+        return db, tuple(d.astype(w.dtype) for d, w in zip(dw, ws))
+
+    if not axes or _ep_group_size(axes) == 1:
+        dx, dws = local_vjp(x, g)
+    elif op.mode in ("xla", "xla_q8"):
+        with _seam_scope("moe_a2a_combine"):
+            gb = a2a_exchange(g, axes)      # combine's transpose
+        db, dws = local_vjp(buf, gb)
+        with _seam_scope("moe_a2a_dispatch"):
+            dx = a2a_exchange(db, axes)     # dispatch's transpose
+    else:
+        dx, dws = _a2a_bwd_ring(op, x, ws, buf, g, epi)
+    return dx.astype(x.dtype), dws, None, None, None
+
+
+# ---------------------------------------------------------------------------
 # mode="flux": fused Pallas kernels (see repro/kernels/)
 # ---------------------------------------------------------------------------
 def _flux_available() -> bool:
@@ -612,6 +827,26 @@ class FusedOp:
             object.__setattr__(self, "scatter_axis", "hidden")
         if self.n_weights < 1:
             raise ValueError("n_weights must be >= 1")
+        if self.kind == "a2a":
+            # EP exchange: axis is a TUPLE of mesh axes (rank order is
+            # axis-major); the op owns the whole expert computation, so it
+            # takes the (w1, w3, w2) triple and the pure pair-gate epilogue.
+            axes = self.axis
+            if axes is None:
+                axes = ()
+            elif isinstance(axes, str):
+                axes = (axes,)
+            object.__setattr__(self, "axis", tuple(axes))
+            if self.n_weights != 3:
+                raise ValueError(
+                    'kind="a2a" takes the expert (w1, w3, w2) triple')
+            e = self.epilogue
+            if e.gate != "pair" or e.bias or e.scale or e.residual:
+                raise ValueError(
+                    'kind="a2a" needs a pure gate="pair" epilogue')
+            if self.blocks is not None:
+                object.__setattr__(self, "blocks", tuple(self.blocks))
+            return
         if self.kind != "ag" and self.n_weights != 1:
             raise ValueError(f"kind={self.kind!r} ops take exactly one weight")
         if self.epilogue.gate == "pair":
@@ -776,6 +1011,8 @@ def _fused_z(op: FusedOp, x, ws):
 def _fused_impl(op: FusedOp, x, ws, bias, scale, residual):
     if op.kind == "ag":
         return _fused_ag(op, x, ws, bias, scale, residual)
+    if op.kind == "a2a":
+        return _a2a_impl(op, x, ws)[0]
     z = _fused_z(op, x, ws)
     return op.epilogue.apply([z], bias=bias, scale=scale, residual=residual)
 
@@ -794,12 +1031,21 @@ def _fused_fwd(op: FusedOp, x, ws, bias, scale, residual):
         # re-gather (one all_gather serves the epilogue-vjp AND every dW)
         out = _fused_ag(op, x, ws, bias, scale, residual)
         return out, (x, ws, None, bias, scale, residual)
+    if op.kind == "a2a":
+        # the RECEIVED dispatch buffer rides the z residual slot: backward
+        # pairs it with the returning combine cotangent per chunk
+        out, buf = _a2a_impl(op, x, ws)
+        return out, (x, ws, buf, bias, scale, residual)
     z = _fused_z(op, x, ws)
     out = op.epilogue.apply([z], bias=bias, scale=scale, residual=residual)
     return out, (x, ws, z, bias, scale, residual)
 
 
 def _fused_bwd(op: FusedOp, res, g):
+    if op.kind == "a2a":
+        # rides the interchanged exchange (axis is a TUPLE here — before
+        # the scalar-axis handling below)
+        return _a2a_bwd(op, res, g)
     x, ws, z, bias, scale, residual = res
     epi = op.epilogue
     single = op.axis is None or _axis_size(op.axis) == 1

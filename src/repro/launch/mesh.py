@@ -19,13 +19,21 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_mesh(pods: int, dp: int, tp: int) -> Mesh:
+def make_mesh(pods: int, dp: int, tp: int, ep: int = 1) -> Mesh:
     """General mesh: drops the pod axis when pods == 1 and dp axis when dp == 1?
 
     No — axes are kept stable ("pod","data","model") whenever pods > 1, and
     ("data","model") otherwise, so PartitionSpecs in the model code can always
     address "data" and "model"; the pod axis only appears at multi-pod scale.
+    ``ep > 1`` inserts a dedicated expert-parallel axis ("ep") between "pod"
+    and "data" — outermost short of pods, so an EP group spans adjacent DPxTP
+    blocks and the a2a ring maps onto neighboring slices.
     """
+    if ep > 1:
+        if pods > 1:
+            return jax.make_mesh((pods, ep, dp, tp),
+                                 ("pod", "ep", "data", "model"))
+        return jax.make_mesh((ep, dp, tp), ("ep", "data", "model"))
     if pods > 1:
         return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
     return jax.make_mesh((dp, tp), ("data", "model"))
@@ -38,8 +46,10 @@ def smoke_mesh() -> Mesh:
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
-    """Axes that carry data parallelism (batch)."""
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    """Axes that carry data parallelism (batch).  A dedicated "ep" axis
+    still shards the batch — tokens live on their own EP slice and the MoE
+    a2a seam is the only thing that crosses it."""
+    return tuple(a for a in ("pod", "ep", "data") if a in mesh.axis_names)
 
 
 def elastic_remesh(surviving_devices: int, tp: int) -> Mesh:

@@ -28,6 +28,10 @@ def main() -> None:
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--ep", type=int, default=0,
+                    help="dedicated expert-parallel mesh axis size (0 = no "
+                         "'ep' axis; EP implied over 'model' or, for big "
+                         "expert counts, ('data','model'))")
     from repro.core.overlap import VALID_MODES
     ap.add_argument("--mode", default="decomposed", choices=list(VALID_MODES))
     ap.add_argument("--comm-chunks", type=int, default=0,
@@ -57,12 +61,14 @@ def main() -> None:
     logging.basicConfig(level=logging.INFO)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     par = ParallelConfig(tp=args.tp, dp=args.dp, pods=args.pods,
+                         ep=args.ep,
                          overlap_mode=args.mode, zero3=args.zero3,
                          comm_chunks=args.comm_chunks,
                          plan_profile=args.plan_profile,
                          scatter_axis=args.scatter_axis,
                          grad_compress=args.grad_compress,
-                         ep_over_dp=(cfg.moe is not None
+                         ep_over_dp=(args.ep <= 1
+                                     and cfg.moe is not None
                                      and cfg.moe.num_experts > 16),
                          fuse_w13=True)
     if args.autotune and args.tp > 1:
@@ -75,7 +81,7 @@ def main() -> None:
                        registry=reg, save_path=path)
         par = dataclasses.replace(par, plan_profile=path)
         logging.info("autotuned seam plans -> %s", path)
-    mesh = make_mesh(args.pods, args.dp, args.tp)
+    mesh = make_mesh(args.pods, args.dp, args.tp, ep=max(args.ep, 1))
 
     schedule = args.schedule or (
         "wsd" if args.arch.startswith("minicpm") else "cosine")

@@ -1,10 +1,12 @@
 """FFN blocks: dense SwiGLU (Megatron TP seams) and expert-parallel MoE.
 
-MoE dispatch is capacity-bucketed all_to_all over the EP group (the "model"
-axis, or ("data","model") jointly for DeepSeek-scale expert counts).  The
-routed-expert GEMMs are batched per local expert; the shared-expert path is
-a regular dense TP FFN whose compute can hide the all_to_all (hillclimb
-lever; see EXPERIMENTS.md §Perf).
+MoE dispatch is a capacity-bucketed exchange over the EP group (a dedicated
+"ep" axis, the "model" axis, or ("data","model") jointly for DeepSeek-scale
+expert counts).  The whole middle — dispatch a2a, batched per-local-expert
+GEMMs, combine a2a — is ONE ``overlap.FusedOp(kind="a2a")`` seam
+(``ctx.op("moe_a2a")``): ring modes decompose both exchanges into ppermute
+chunks hidden under the chunked expert compute, the FLUX move applied to
+expert parallelism.  The shared-expert path is a regular dense TP FFN.
 """
 from __future__ import annotations
 
@@ -117,7 +119,7 @@ def init_moe(key, cfg: ModelConfig, ep: int, tp: int,
     return p
 
 
-def _capacity(tokens: int, mc: MoEConfig, ep: int) -> int:
+def _capacity(tokens: int, mc: MoEConfig) -> int:
     per_expert = tokens * mc.top_k / mc.num_experts
     c = int(per_expert * mc.capacity_factor) + 1
     return max(c, 4)
@@ -127,8 +129,9 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
               eps: float = 1e-5, lengths=None) -> Tuple[Array, Array]:
     """x: [B, S/TP, D] -> ([B, S/TP, D], aux_loss).
 
-    Stages: router -> capacity-bucketed dispatch (scatter) -> all_to_all over
-    the EP group -> batched expert GEMMs -> all_to_all back -> combine.
+    Stages: router -> capacity-bucketed dispatch (scatter) -> ONE fused
+    ``kind="a2a"`` op (EP all_to_all out + batched expert GEMMs + all_to_all
+    back, ring modes overlapped; ``ctx.op("moe_a2a")``) -> combine.
 
     ``lengths`` ([B] int32, optional): per-row true prompt lengths of a
     right-padded prefill batch.  Pad tokens are removed from the capacity
@@ -188,29 +191,41 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     gate, eidx = lax.top_k(probs, mc.top_k)             # [t, k]
     gate = gate / jnp.clip(jnp.sum(gate, -1, keepdims=True), 1e-9)
 
-    # load-balance aux loss (Switch-style).  me/ce are GLOBAL token means —
-    # they must be pmean'd over the token-sharding axes BEFORE the product
-    # (a product of shard-means is not the mean of the product).
-    me = jnp.mean(probs, axis=0)
-    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], e), axis=0)
-    for ax in ((ctx.axis,) if ctx.axis else ()) + tuple(ctx.dp_axes):
-        if compat.axis_size(ax) > 1:
-            me = lax.pmean(me, ax)
-            ce = lax.pmean(ce, ax)
-    aux = e * jnp.sum(me * ce)
-
-    # ---- capacity bucketing --------------------------------------------------
-    cap = _capacity(t, mc, 1)                           # per (global) expert here
-    flat_e = eidx.reshape(-1)                           # [t*k]
-    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # [t*k, E]
+    # pad mask of a right-padded prefill batch: pad rows must not count in
+    # the router statistics, the capacity cumsum, the dispatch or the combine
+    valid_t = None
     if lengths is not None:
         valid_t = (layers.seq_positions(b, s_loc, ctx)
                    < lengths[:, None]).reshape(b * s_loc)    # [t]
+
+    # load-balance aux loss (Switch-style).  me/ce are GLOBAL VALID-token
+    # means: sum masked per-shard contributions and divide by the psum'd
+    # valid count.  Per-shard valid counts differ under right-padding, so a
+    # pmean of per-shard means would weight shards unequally — and unmasked
+    # pad rows would bias the loss toward whatever garbage pads route to.
+    vmask = (jnp.ones((t,), probs.dtype) if valid_t is None
+             else valid_t.astype(probs.dtype))
+    me = jnp.sum(probs * vmask[:, None], axis=0)
+    ce = jnp.sum(jax.nn.one_hot(eidx[:, 0], e) * vmask[:, None], axis=0)
+    cnt = jnp.sum(vmask)
+    for ax in ((ctx.axis,) if ctx.axis else ()) + tuple(ctx.dp_axes):
+        if compat.axis_size(ax) > 1:
+            me = lax.psum(me, ax)
+            ce = lax.psum(ce, ax)
+            cnt = lax.psum(cnt, ax)
+    cnt = jnp.maximum(cnt, 1.0)
+    aux = e * jnp.sum((me / cnt) * (ce / cnt))
+
+    # ---- capacity bucketing --------------------------------------------------
+    cap = _capacity(t, mc)                              # per (global) expert here
+    flat_e = eidx.reshape(-1)                           # [t*k]
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # [t*k, E]
+    if valid_t is not None:
         flat_valid = jnp.repeat(valid_t, mc.top_k)       # [t*k]
         oh = oh * flat_valid[:, None].astype(oh.dtype)   # pads don't count
     pos_in_e = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
     keep = pos_in_e < cap
-    if lengths is not None:
+    if valid_t is not None:
         keep = keep & flat_valid
     slot = jnp.clip(pos_in_e, 0, cap - 1)
 
@@ -248,29 +263,19 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         disp = disp.at[flat_e, slot].add(
             jnp.where(keep[:, None], ht[src], 0))
 
-        # ---- all_to_all over the EP group -----------------------------------
-        if ep > 1:
-            buf = disp.reshape(ep, e_loc, cap, dm)
-            buf = _all_to_all_grouped(buf, ep_axes)
-            # [ep, e_loc, cap, dm]: leading dim now indexes source EP rank
-            buf = jnp.moveaxis(buf, 0, 1).reshape(e_loc, ep * cap, dm)
-        else:
-            buf = disp.reshape(e_loc, cap, dm)
-
-        # ---- expert GEMMs (batched over local experts) -----------------------
-        a1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
-        a3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
-        hidden = jax.nn.silu(a1) * a3
-        out = jnp.einsum("ecf,efd->ecd", hidden, p["w2"])
-
-        # ---- return path -----------------------------------------------------
-        if ep > 1:
-            ret = out.reshape(e_loc, ep, cap, dm)
-            ret = jnp.moveaxis(ret, 1, 0)                # [ep, e_loc, cap, dm]
-            ret = _all_to_all_grouped(ret, ep_axes)
-            ret = ret.reshape(e, cap, dm)
-        else:
-            ret = out.reshape(e, cap, dm)
+        # ---- overlapped EP exchange + expert GEMMs ---------------------------
+        # ONE FusedOp owns the whole middle: the dispatch all_to_all, the
+        # batched per-local-expert SwiGLU GEMMs, and the combine all_to_all
+        # (kind="a2a"; ring modes decompose both exchanges into ppermute
+        # chunks hidden under the chunked expert compute).  Dim 0 of the
+        # [ep, e_loc, cap, dm] buffer indexes the DESTINATION EP rank
+        # (experts are blocked: global expert = ep_rank * e_loc + local),
+        # and the op returns the same layout.
+        buf = disp.reshape(ep, e_loc, cap, dm)
+        ret = ctx.op("moe_a2a", epilogue=overlap.Epilogue(
+            activation="silu", gate="pair"),
+            n_weights=3)(buf, p["w1"], p["w3"], p["w2"])
+        ret = ret.reshape(e, cap, dm)
 
         # combine: gather each (token, k) slot's output, weighted by gate
         vals = ret[flat_e, slot]                         # [t*k, dm]
@@ -283,23 +288,6 @@ def moe_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         sh = {"norm": p["norm"], **{k: v for k, v in p["shared"].items()}}
         y = y + ffn_train(sh, x, ctx, eps)
     return y, aux.astype(jnp.float32)
-
-
-def _all_to_all_grouped(buf: Array, ep_axes: Tuple[str, ...]) -> Array:
-    """all_to_all over possibly-multiple mesh axes: buf [ep, ...] split on dim
-    0 across the flattened EP group, concatenated back on dim 0."""
-    if len(ep_axes) == 1:
-        return lax.all_to_all(buf, ep_axes[0], split_axis=0, concat_axis=0,
-                              tiled=True)
-    # multi-axis: split dim 0 as (a0, a1, ...) and a2a per axis sequentially
-    sizes = [compat.axis_size(a) for a in ep_axes]
-    out = buf
-    n = buf.shape[0]
-    # reshape [ep, ...] -> [s0, s1, ...rest] and exchange one axis at a time
-    out = out.reshape(*sizes, *buf.shape[1:])
-    for i, a in enumerate(ep_axes):
-        out = lax.all_to_all(out, a, split_axis=i, concat_axis=i, tiled=True)
-    return out.reshape(n, *buf.shape[1:])
 
 
 def moe_decode(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,

@@ -294,12 +294,16 @@ def param_specs(cfg: ModelConfig, par: ParallelConfig,
 def _ep_axes(cfg: ModelConfig, par: ParallelConfig) -> Tuple[str, ...]:
     if cfg.moe is None:
         return ()
+    if par.ep > 1:                   # dedicated first-class EP mesh axis
+        return ("ep",)
     return ("data", "model") if par.ep_over_dp else ("model",)
 
 
 def _ep_size(cfg: ModelConfig, par: ParallelConfig) -> int:
     if cfg.moe is None:
         return 1
+    if par.ep > 1:
+        return par.ep
     return par.dp * par.tp if par.ep_over_dp else par.tp
 
 

@@ -49,8 +49,8 @@ class AdamWConfig:
 # ---------------------------------------------------------------------------
 # spec-derived leaf metadata
 # ---------------------------------------------------------------------------
-def dp_replicated_tree(specs: Dict) -> Dict:
-    """True for leaves with no 'data' in their PartitionSpec."""
+def axis_replicated_tree(specs: Dict, axis: str) -> Dict:
+    """True for leaves with no ``axis`` in their PartitionSpec."""
     def rep(spec):
         names = set()
         for part in spec:
@@ -60,22 +60,17 @@ def dp_replicated_tree(specs: Dict) -> Dict:
                 names |= set(part)
             else:
                 names.add(part)
-        return "data" not in names
+        return axis not in names
     return jax.tree.map(rep, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_replicated_tree(specs: Dict) -> Dict:
+    """True for leaves with no 'data' in their PartitionSpec."""
+    return axis_replicated_tree(specs, "data")
 
 
 def model_replicated_tree(specs: Dict) -> Dict:
-    def rep(spec):
-        names = set()
-        for part in spec:
-            if part is None:
-                continue
-            if isinstance(part, tuple):
-                names |= set(part)
-            else:
-                names.add(part)
-        return "model" not in names
-    return jax.tree.map(rep, specs, is_leaf=lambda x: isinstance(x, P))
+    return axis_replicated_tree(specs, "model")
 
 
 def _sharddable(p: Array, n: int) -> bool:
@@ -131,10 +126,10 @@ def init_opt_state(params: Dict, moment_dtype: str = "float32") -> Dict:
 
 
 def opt_state_specs(param_specs: Dict, params: Dict, dp: int, tp: int = 1,
-                    dp_axis: str = "data") -> Dict:
+                    ep: int = 1, dp_axis: str = "data") -> Dict:
     """PartitionSpecs for the ZeRO-1 moments.  The sharddable test must see
-    the LOCAL dim0 (after any 'model' sharding) so it matches the runtime
-    ``_dp_shard`` decision made inside shard_map."""
+    the LOCAL dim0 (after any 'model'/'ep' sharding) so it matches the
+    runtime ``_dp_shard`` decision made inside shard_map."""
     dp_rep = dp_replicated_tree(param_specs)
 
     def one(spec, rep, p):
@@ -145,6 +140,8 @@ def opt_state_specs(param_specs: Dict, params: Dict, dp: int, tp: int = 1,
         d0_names = parts[0] if isinstance(parts[0], tuple) else (parts[0],)
         if "model" in d0_names:
             dim0 //= tp
+        if "ep" in d0_names:
+            dim0 //= max(ep, 1)
         if parts[0] is not None or dim0 % dp or dim0 < dp:
             # dim0 taken (model-sharded) or not divisible: runtime falls back
             # to pmean + replicated moments for model-free dim0; for
@@ -170,19 +167,25 @@ def opt_state_specs(param_specs: Dict, params: Dict, dp: int, tp: int = 1,
 # ---------------------------------------------------------------------------
 def adamw_update(params: Dict, grads: Dict, opt: Dict, cfg: AdamWConfig,
                  lr: Array, *, specs: Dict, dp_axis: Optional[str] = "data",
-                 pod_axis: Optional[str] = None,
+                 pod_axis: Optional[str] = None, ep_axis: Optional[str] = None,
                  grad_compress: bool = False) -> Tuple[Dict, Dict]:
     dp_rep = dp_replicated_tree(specs)
     model_rep = model_replicated_tree(specs)
+    ep_rep = (axis_replicated_tree(specs, ep_axis)
+              if ep_axis is not None else jax.tree.map(
+                  lambda _: True, dp_rep))
     dp_n = compat.axis_size(dp_axis) if dp_axis is not None else 1
+    ep_n = compat.axis_size(ep_axis) if ep_axis is not None else 1
 
     # ---- phase 1: sync ------------------------------------------------------
     def sync(g, rep):
         g = g.astype(jnp.float32)
         if rep and dp_axis is not None and dp_n > 1:
             if _sharddable(g, dp_n):
-                g = lax.psum_scatter(g, dp_axis, scatter_dimension=0,
-                                     tiled=True) / dp_n
+                # ZeRO-1 grad reduce over the DATA axis (optimizer collective,
+                # not a TP seam)
+                g = lax.psum_scatter(  # lint: allow(raw-collective)
+                    g, dp_axis, scatter_dimension=0, tiled=True) / dp_n
             else:
                 g = lax.pmean(g, dp_axis)
         return pod_allreduce(g, pod_axis, grad_compress)
@@ -190,7 +193,7 @@ def adamw_update(params: Dict, grads: Dict, opt: Dict, cfg: AdamWConfig,
     gsync = jax.tree.map(sync, grads, dp_rep)
 
     # ---- phase 2: global grad norm ------------------------------------------
-    def leaf_sq(g, rep_dp, rep_m, p):
+    def leaf_sq(g, rep_dp, rep_m, rep_e, p):
         s = jnp.sum(g * g)
         # dp accounting: dp-sharded grads (either via RS or natively) are
         # unique per dp-rank -> count once under psum(dp); leaves that stayed
@@ -199,16 +202,22 @@ def adamw_update(params: Dict, grads: Dict, opt: Dict, cfg: AdamWConfig,
             s = s / dp_n
         if rep_m:
             s = s / compat.axis_size("model")
+        # caller (train_step) already ep-averaged ep-replicated grads, so
+        # they are identical across the EP axis -> count once under psum(ep)
+        if ep_axis is not None and rep_e:
+            s = s / ep_n
         return s
 
     # note: model-sharded leaves are NOT psum'd over 'model' here; instead
     # every leaf's local sq enters a psum over ('model',) weighted above.
     # grads are already pod-identical after sync -> no pod psum.
     total = sum(jax.tree.leaves(
-        jax.tree.map(leaf_sq, gsync, dp_rep, model_rep, params)))
+        jax.tree.map(leaf_sq, gsync, dp_rep, model_rep, ep_rep, params)))
     axes = ["model"]
     if dp_axis is not None:
         axes.append(dp_axis)
+    if ep_axis is not None:
+        axes.append(ep_axis)
     total = lax.psum(total, tuple(axes))
     gnorm = jnp.sqrt(total)
     clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-6))

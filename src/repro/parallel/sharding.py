@@ -92,7 +92,11 @@ class TPContext:
         kind = SEAM_KINDS.get(seam, seam.rsplit("_", 1)[-1])
         if scatter_axis is None and kind in ("ag", "rs"):
             scatter_axis = "seq" if self.seq_sharded else "hidden"
-        return self.plan(seam).op(kind, self.axis, epilogue=epilogue,
+        # the EP exchange runs over the context's EP group (a TUPLE of mesh
+        # axes — multi-axis under ep_over_dp), not the scalar TP axis
+        axis = (tuple(self.ep_axes) or ((self.axis,) if self.axis else ())
+                if kind == "a2a" else self.axis)
+        return self.plan(seam).op(kind, axis, epilogue=epilogue,
                                   n_weights=n_weights,
                                   scatter_axis=scatter_axis)
 

@@ -51,6 +51,7 @@ class Request:
     prompt: np.ndarray            # [S_prompt] int32
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None   # set when the server rejected the request
 
 
 def _prefill_bucket(n: int, max_seq: int, tp: int = 1) -> int:
@@ -80,7 +81,8 @@ class Server:
         self.mesh = mesh
         self.sc = sc
         self.params = params
-        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_axes = tuple(a for a in ("pod", "ep", "data")
+                        if a in mesh.axis_names)
         from repro.tuning import plan_set_from_parallel
         # ONE context for both dispatch programs: prefill runs the plans'
         # resolved activation layout (sequence-sharded by default — the SP
@@ -88,7 +90,7 @@ class Server:
         # touches), while decode_step internally forces the replicated
         # layout (S=1 cannot shard).
         self.ctx = TPContext(axis="model", dp_axes=dp_axes,
-                             ep_axes=("model",) if cfg.moe else (),
+                             ep_axes=M._ep_axes(cfg, par),
                              mode=par.overlap_mode,
                              plans=plan_set_from_parallel(par))
         params_eval = jax.eval_shape(
@@ -247,7 +249,20 @@ class Server:
                 done.append(req)
 
         while pending or any(s is not None for s in self.slots):
-            while pending and self.admit(pending[0]):
+            while pending:
+                try:
+                    admitted = self.admit(pending[0])
+                except ValueError as e:
+                    # unadmittable request (e.g. prompt >= max_seq): reject
+                    # it gracefully and keep serving — one bad prompt must
+                    # not kill every other in-flight request
+                    req = pending.popleft()
+                    req.done = True
+                    req.error = str(e)
+                    drain(req)
+                    continue
+                if not admitted:
+                    break
                 req = pending.popleft()
                 if req.done:                  # finished at admission (EOS /
                     drain(req)                # max_new_tokens == 1)

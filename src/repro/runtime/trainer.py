@@ -49,10 +49,10 @@ class TrainConfig:
 
 def make_ctx(cfg: ModelConfig, par: ParallelConfig, mesh,
              plans=None) -> TPContext:
-    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    ep_axes = ()
-    if cfg.moe is not None:
-        ep_axes = ("data", "model") if par.ep_over_dp else ("model",)
+    # a dedicated "ep" axis also carries batch: tokens live on their own EP
+    # slice and only the moe_a2a seam crosses it
+    dp_axes = tuple(a for a in ("pod", "ep", "data") if a in mesh.axis_names)
+    ep_axes = M._ep_axes(cfg, par)
     if plans is None:
         # uniform PlanSet from overlap_mode, overlaid with par.plan_profile
         # (the tuned per-seam profile) when present and fresh
@@ -69,7 +69,7 @@ def batch_pspecs(cfg: ModelConfig, mesh, seq_sharded: bool = True) -> Dict:
     the model axis under SP, replicated otherwise; tokens/labels are always
     full-sequence (the embedding's collective produces the layout)."""
     from repro.parallel.sharding import activation_spec
-    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_axes = tuple(a for a in ("pod", "ep", "data") if a in mesh.axis_names)
     dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     if cfg.frontend:
         return {"embeds": activation_spec(dp_axes, seq_sharded),
@@ -83,7 +83,11 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
     """Returns jitted (params, opt, batch, step) -> (params, opt, metrics)."""
     ctx = make_ctx(cfg, par, mesh)
     pod_axis = "pod" if "pod" in mesh.axis_names else None
+    ep_axis = "ep" if "ep" in mesh.axis_names else None
+    ep_n = dict(zip(mesh.axis_names, mesh.devices.shape)).get("ep", 1)
     model_rep = adamw.model_replicated_tree(param_spec_tree)
+    ep_rep = (adamw.axis_replicated_tree(param_spec_tree, "ep")
+              if ep_axis else None)
     schedule_fn = sched.get_schedule(train_cfg.schedule)
     # batch layout follows the plans' resolved residual layout (the
     # trainer's backward rides the interchanged seam ops either way)
@@ -92,7 +96,7 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
     params_eval = jax.eval_shape(
         lambda: M.init_model(jax.random.PRNGKey(0), cfg, par))
     opt_specs = adamw.opt_state_specs(param_spec_tree, params_eval,
-                                      par.dp, par.tp)
+                                      par.dp, par.tp, ep=max(par.ep, 1))
 
     def step_fn(params, opt, batch, step):
         loss, grads = jax.value_and_grad(
@@ -101,13 +105,22 @@ def make_train_step(cfg: ModelConfig, par: ParallelConfig, mesh,
         grads = jax.tree.map(
             lambda g, rep: lax.psum(g, "model") if rep else g,
             grads, model_rep)
+        if ep_axis is not None:
+            # dedicated EP axis: ep-replicated leaves carry per-EP-shard
+            # partial grads (the EP axis shards the batch) -> average them;
+            # the EP-sharded expert leaves already SUM every EP rank's token
+            # contribution through the a2a backward -> rescale that sum into
+            # the same per-shard average
+            grads = jax.tree.map(
+                lambda g, rep: lax.pmean(g, ep_axis) if rep else g / ep_n,
+                grads, ep_rep)
         loss = lax.pmean(loss, ctx.dp_axes)
         lr = schedule_fn(step, base_lr=train_cfg.base_lr,
                          warmup=train_cfg.warmup_steps,
                          total=train_cfg.total_steps)
         params, opt = adamw.adamw_update(
             params, grads, opt, opt_cfg, lr, specs=param_spec_tree,
-            dp_axis="data", pod_axis=pod_axis,
+            dp_axis="data", pod_axis=pod_axis, ep_axis=ep_axis,
             grad_compress=par.grad_compress)
         metrics = {"loss": loss, "lr": lr,
                    "grad_count": opt["count"].astype(jnp.float32)}
@@ -162,7 +175,8 @@ class Trainer:
             params_eval = jax.eval_shape(
                 lambda: M.init_model(jax.random.PRNGKey(0), self.cfg, self.par))
             opt_specs = adamw.opt_state_specs(self.pspecs, params_eval,
-                                              self.par.dp, self.par.tp)
+                                              self.par.dp, self.par.tp,
+                                              ep=max(self.par.ep, 1))
             opt_shardings = jax.tree.map(
                 lambda s: NamedSharding(self.mesh, s), opt_specs,
                 is_leaf=lambda x: isinstance(x, P))

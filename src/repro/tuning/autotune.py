@@ -32,6 +32,9 @@ _KIND_MODES: Dict[str, Tuple[str, ...]] = {
            "decomposed_q8", "flux"),
     "rs": ("xla", "decomposed", "decomposed_bidir", "flux"),
     "ar": ("xla", "decomposed"),
+    # MoE EP exchange: barrier all_to_alls vs the interleaved ppermute ring
+    # (chunk count x direction swept; no flux kernel, no lossy q8 dispatch)
+    "a2a": ("xla", "decomposed"),
 }
 # flux block-preference sweep (the CUTLASS-template-parameter analogue)
 _FLUX_BLOCK_PREFS: Tuple[Tuple[int, int, int], ...] = (
@@ -171,6 +174,10 @@ def _bench_epilogue(kind: str, n_weights: int, epilogue: bool):
     """The representative Epilogue benched for a seam: the gated-FFN pair
     for two-weight AG seams, a plain activation otherwise."""
     from repro.core.overlap import Epilogue
+    if kind == "a2a":
+        # the EP exchange op REQUIRES the pure gated pair (its backward
+        # differentiates the expert SwiGLU as one closure)
+        return Epilogue(activation="silu", gate="pair")
     if not epilogue:
         return Epilogue()
     if kind == "ag" and n_weights == 2:
@@ -196,6 +203,32 @@ def _bench_callable(kind: str, m: int, n: int, k: int, n_dev: int,
     n = _round_to(n, n_dev)
     k = _round_to(k, n_dev)
     key = jax.random.PRNGKey(0)
+
+    if kind == "a2a":
+        # EP exchange: local [ep, e_loc, cap, k=d_model] dispatch buffer and
+        # the global (w1, w3, w2) expert stacks (m routed rows per device,
+        # n = expert_ffn).  Global buffer dim 0 carries both the shard and
+        # the destination-rank dims (n_dev * n_dev).
+        e_loc = 2
+        cap = max(m // (n_dev * e_loc), 1)
+        x = jax.random.normal(key, (n_dev * n_dev, e_loc, cap, k), dtype)
+        ws = (jax.random.normal(jax.random.PRNGKey(1),
+                                (n_dev * e_loc, k, n), dtype) / k ** 0.5,
+              jax.random.normal(jax.random.PRNGKey(2),
+                                (n_dev * e_loc, k, n), dtype) / k ** 0.5,
+              jax.random.normal(jax.random.PRNGKey(3),
+                                (n_dev * e_loc, n, k), dtype) / n ** 0.5)
+        fused = FusedOp(kind="a2a", axis=(axis,) if axis else (),
+                        mode=cand.mode, comm_chunks=cand.comm_chunks,
+                        reverse=cand.reverse,
+                        epilogue=_bench_epilogue(kind, 3, True), n_weights=3)
+        if not multi:
+            return jax.jit(lambda a, *bs: fused(a, *bs)), (x, *ws)
+        mesh = Mesh(np.array(jax.devices()[:n_dev]), ("tune",))
+        fn = compat.shard_map(lambda a, *bs: fused(a, *bs), mesh=mesh,
+                              in_specs=(P(axis),) * 4, out_specs=P(axis),
+                              check_vma=False)
+        return jax.jit(fn), (x, *ws)
 
     x = jax.random.normal(key, (1, m, k), dtype)
     nw = n_weights if kind == "ag" else 1
@@ -387,6 +420,11 @@ def model_seam_shapes(cfg, par, tokens_per_dp: int = 2048,
             "ag", tokens_per_dp,
             (dims.h_pad + 2 * dims.hkv_pad) * dims.dh, d)
         shapes["attn_rs"] = ("rs", tokens_per_dp, d, dims.h_pad * dims.dh)
+    if cfg.moe is not None:
+        # EP exchange seam: m = routed rows (tokens x top_k), k = d_model
+        # (the a2a payload width), n = the per-expert FFN width
+        shapes["moe_a2a"] = ("a2a", tokens_per_dp * cfg.moe.top_k,
+                             cfg.moe.expert_ffn, d)
     return shapes
 
 
@@ -469,6 +507,7 @@ def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
         "mlp_ag": {"n_weights": 1 if getattr(par, "fuse_w13", False) else 2,
                    "epilogue": True},
         "attn_ag": {"epilogue": bool(getattr(cfg, "qkv_bias", False))},
+        "moe_a2a": {"n_weights": 3, "epilogue": True},
     }
     # the layout decision comes FIRST: every seam is tuned UNDER the
     # winning scatter_axis, so the recorded profile persists the layout

@@ -12,6 +12,8 @@ the layer is doing), not collective-level:
   decode_ar row-parallel GEMM + AllReduce seams (decode paths of all mixers
             and FFNs, plus mamba's train-path x-projection AR)
   head_ag   LM-head AllGather-GEMM (the biggest single GEMM)
+  moe_a2a   MoE expert-parallel token exchange (dispatch + expert GEMMs +
+            combine as ONE overlapped op over the EP axis tuple)
 
 Unknown seams fall back to the set's default, so the vocabulary is
 extensible without touching this file.
@@ -35,12 +37,13 @@ import dataclasses
 from typing import Dict, Mapping, Optional, Tuple
 
 KNOWN_SEAMS: Tuple[str, ...] = ("mlp_ag", "mlp_rs", "attn_ag", "attn_rs",
-                                "decode_ar", "head_ag")
+                                "decode_ar", "head_ag", "moe_a2a")
 
 # collective kind behind each model seam (candidate spaces differ per kind)
 SEAM_KINDS: Dict[str, str] = {"mlp_ag": "ag", "mlp_rs": "rs",
                               "attn_ag": "ag", "attn_rs": "rs",
-                              "decode_ar": "ar", "head_ag": "ag"}
+                              "decode_ar": "ar", "head_ag": "ag",
+                              "moe_a2a": "a2a"}
 
 # the seams that carry the residual stream between blocks: their
 # ``scatter_axis`` plans must AGREE (one activation layout per model) —

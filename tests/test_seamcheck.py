@@ -26,8 +26,26 @@ def _colls(fn, *args):
 # ---------------------------------------------------------------------------
 def test_walker_psum_scatter_traces_as_reduce_scatter():
     x = jax.ShapeDtypeStruct((TP, 8), jnp.float32)
-    cs = _colls(lambda a: lax.psum_scatter(a, "model"), x)
+    cs = _colls(  # lint: allow(raw-collective)
+        lambda a: lax.psum_scatter(a, "model"), x)
     assert [c.prim for c in cs] == ["reduce_scatter"]
+
+
+def test_walker_counts_all_to_all():
+    x = jax.ShapeDtypeStruct((TP, 8), jnp.float32)
+    cs = _colls(  # lint: allow(raw-collective)
+        lambda a: lax.all_to_all(a, "model", 0, 0, tiled=True), x)
+    assert [c.prim for c in cs] == ["all_to_all"]
+    assert "all_to_all" in seamcheck.CENSUS_PRIMS
+
+
+def test_census_reports_stray_all_to_all():
+    x = jax.ShapeDtypeStruct((TP, 16, 64), jnp.float32)
+    cs = _colls(  # lint: allow(raw-collective)
+        lambda a: lax.all_to_all(a, "model", 0, 0, tiled=True), x)
+    errs = seamcheck.census_errors(cs, "model", min_elems=TP * 16 * 64)
+    assert len(errs) == 1
+    assert "unattributed" in errs[0] and "all_to_all" in errs[0]
 
 
 def test_walker_counts_scan_trips_weighted():
@@ -214,6 +232,12 @@ def test_lint_removed_wrapper_rule():
 def test_lint_raw_collective_rule_and_escape():
     src = "y = lax.ppermute(x, 'model', perm)\n"
     assert [v.rule for v in _lint(src)] == ["raw-collective"]
+    # the MoE-exchange blind spot: all_to_all and psum_scatter are seam
+    # transports too (PR 7) — a raw call outside the seam layer must trip
+    assert [v.rule for v in _lint("y = lax.all_to_all(x, 'model', 0, 0)\n")] \
+        == ["raw-collective"]
+    assert [v.rule for v in _lint("y = lax.psum_scatter(x, 'data')\n")] == \
+        ["raw-collective"]
     # allowed files
     assert _lint(src, "src/repro/core/overlap.py") == []
     assert _lint(src, "src/repro/parallel/sharding.py") == []

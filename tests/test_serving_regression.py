@@ -78,6 +78,33 @@ def test_admit_is_one_prefill_dispatch(served):
     assert srv.positions[0] == len(prompts[2])
 
 
+def test_oversized_prompt_rejected_gracefully(served):
+    """An unadmittable prompt (>= max_seq) must not crash ``serve`` and
+    must not starve the rest of the queue: the bad request drains with
+    ``error`` set and every other request completes as if served alone.
+    (The seed Server let ``admit``'s ValueError propagate out of the serve
+    loop, killing every in-flight request.)"""
+    cfg, par, mesh, params, sc, prompts, _, isolated = served
+    rng = np.random.default_rng(11)
+    too_long = rng.integers(0, cfg.vocab_size,
+                            size=(sc.max_seq,)).astype(np.int32)
+    srv = Server(cfg, par, mesh, params, sc)
+    reqs = [Request(rid=0, prompt=prompts[0]),
+            Request(rid=1, prompt=too_long),
+            Request(rid=2, prompt=prompts[1])]
+    done = srv.serve(reqs)
+    by_rid = {r.rid: r for r in done}
+    assert set(by_rid) == {0, 1, 2}            # nothing lost, nothing stuck
+    assert by_rid[1].error is not None and "prompt length" in by_rid[1].error
+    assert by_rid[1].output == []              # rejected before any token
+    assert by_rid[0].error is None and by_rid[2].error is None
+    assert list(by_rid[0].output) == isolated[0]
+    assert list(by_rid[2].output) == isolated[1]
+    # empty prompts are the other unadmittable shape
+    empty = srv.serve([Request(rid=3, prompt=np.zeros((0,), np.int32))])
+    assert empty[0].error is not None
+
+
 def test_admission_preserves_other_slots(served):
     """Admitting a LONG prompt while a short request is mid-decode must not
     perturb the short request's output (the seed rewrote its rows)."""
