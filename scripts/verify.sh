@@ -156,19 +156,37 @@ else
 fi
 
 echo "== serving smoke bench (BENCH_serving.json well-formedness) =="
+# open-loop Poisson traffic through the paged runtime: TTFT / per-token
+# percentiles must be finite, the paged pool must beat the dense-cache
+# footprint, and overlap modes must not change outputs
 python benchmarks/serving.py --smoke
 python - <<'EOF'
 import json
+import math
 doc = json.load(open("experiments/BENCH_serving.json"))
+assert doc["arrival_rate_rps"] > 0, "smoke bench must run open-loop traffic"
+assert doc["slo_ttft_s"] > 0, doc
 rows = doc["modes"]
 assert len(rows) >= 2, f"need >= 2 overlap modes, got {len(rows)}"
 for r in rows:
     assert r["tokens_per_s"] > 0 and r["new_tokens"] > 0, r
-    assert r["prefill_dispatches"] == r["requests"], \
-        f"admission must be ONE prefill dispatch per request: {r}"
-    assert {"mean", "p50", "max"} <= set(r["request_latency_s"]), r
+    # chunked admission: at least one chunk dispatch per request, never a
+    # per-token decode loop (<= ceil(max_seq / chunk) chunks per request)
+    assert r["requests"] <= r["prefill_dispatches"], r
+    assert r["prefill_dispatches"] < r["requests"] * doc["max_seq"], r
+    for key in ("ttft_s", "per_token_s"):
+        stats = r[key]
+        assert {"mean", "p50", "p95", "p99"} <= set(stats), (key, stats)
+        assert all(math.isfinite(v) and v >= 0 for v in stats.values()), \
+            (key, stats)
+        assert stats["p50"] <= stats["p95"] <= stats["p99"], (key, stats)
+    assert 0 <= r["slo"]["attainment"] <= 1, r["slo"]
+    pool = r["pool"]
+    assert 0 < pool["blocks_in_use_peak"] < pool["dense_equiv_blocks"], \
+        f"paged pool must beat the dense-cache footprint: {pool}"
     assert r["outputs_match_reference"], \
         f"overlap mode {r['mode']} changed serving outputs"
 print("BENCH_serving.json ok:",
-      ", ".join(f"{r['mode']}={r['tokens_per_s']:.0f} tok/s" for r in rows))
+      ", ".join(f"{r['mode']}={r['tokens_per_s']:.0f} tok/s "
+                f"ttft_p99={r['ttft_s']['p99'] * 1e3:.1f}ms" for r in rows))
 EOF

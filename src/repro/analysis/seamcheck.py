@@ -459,19 +459,33 @@ def trace_prefill(cfg, par, plans, tp: int = 4, b: int = 2, s: int = 64):
         params_l, batch)
 
 
-def trace_decode(cfg, par, plans, tp: int = 4, b: int = 2, s_max: int = 64):
+def trace_decode(cfg, par, plans, tp: int = 4, b: int = 2, s_max: int = 64,
+                 paged: bool = False):
+    """``paged=True`` traces block-table decode (``decode_step`` with
+    ``block_tables`` over ``paged_cache_specs`` pools) — same seam
+    contract as dense decode: kind="ar" only, replicated layout."""
     from repro.models import serve as S
     sizes = {"data": 1, "model": tp}
     params_l = _local_params(cfg, par, sizes)
-    csds, cspec = S.cache_specs(cfg, par, b, s_max, ("data",))
+    if paged:
+        bs = 8
+        pages = s_max // bs
+        csds, cspec = S.paged_cache_specs(cfg, par, b * pages + 1, bs, b)
+        bt = jax.ShapeDtypeStruct((b, pages), jnp.int32)
+    else:
+        csds, cspec = S.cache_specs(cfg, par, b, s_max, ("data",))
+        bt = None
     caches_l = _local_sds(csds, cspec, sizes)
     tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
     pos = jax.ShapeDtypeStruct((b,), jnp.int32)
     ctx = _ctx_for(cfg, par, plans)
 
-    def step(p, c, t, po):
-        return S.decode_step(p, c, t, po, ctx, cfg, par)
+    def step(p, c, t, po, bt_=None):
+        return S.decode_step(p, c, t, po, ctx, cfg, par, block_tables=bt_)
 
+    if paged:
+        return jax.make_jaxpr(step, axis_env=[("data", 1), ("model", tp)])(
+            params_l, caches_l, tokens, pos, bt)
     return jax.make_jaxpr(step, axis_env=[("data", 1), ("model", tp)])(
         params_l, caches_l, tokens, pos)
 
@@ -571,12 +585,20 @@ def check_config(name: str, layout: str, mode: str = "decomposed",
     dc = None
     if layout == "hidden":
         # decode ALWAYS forces the replicated layout — trace it once, on
-        # the hidden pass (the layout knob cannot change its jaxpr)
+        # the hidden pass (the layout knob cannot change its jaxpr).
+        # Both lanes: dense per-slot caches AND block-table paged pools
+        # (the serving runtime runs the paged lane exclusively).
         par_d = _dc.replace(par, scatter_axis="hidden")
         decode = trace_decode(cfg, par_d, plans, tp=tp, b=b, s_max=s)
         dc = collect_collectives(decode)
         errs += [f"{prefix}/decode: {e}"
                  for e in census_errors(dc, "model", threshold)]
+        paged = trace_decode(cfg, par_d, plans, tp=tp, b=b, s_max=s,
+                             paged=True)
+        pgc = collect_collectives(paged)
+        errs += [f"{prefix}/decode-paged: {e}"
+                 for e in census_errors(pgc, "model", threshold)]
+        dc = list(dc) + list(pgc)
 
     errs += [f"{prefix}: {e}"
              for e in layout_errors(tc, dc, layout, mode, threshold)]

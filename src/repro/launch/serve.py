@@ -37,6 +37,11 @@ def main() -> None:
                     help="concurrent decode slots (the server's jit batch)")
     ap.add_argument("--eos", type=int, default=-1,
                     help="EOS token id (-1: never stop early)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV pool block (page) size in tokens")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill rows per dispatch (bounds how "
+                         "long a long prompt stalls running decodes)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -61,7 +66,9 @@ def main() -> None:
     params = M.init_model(jax.random.PRNGKey(0), cfg, par)
 
     sc = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
-                     eos_token=args.eos, max_new_tokens=args.max_new)
+                     eos_token=args.eos, max_new_tokens=args.max_new,
+                     block_size=args.block_size,
+                     prefill_chunk=args.prefill_chunk)
     server = Server(cfg, par, mesh, params, sc)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(
@@ -69,7 +76,15 @@ def main() -> None:
         for i in range(args.requests)]
     done = server.serve(reqs)
     for r in sorted(done, key=lambda x: x.rid):
-        print(f"req {r.rid}: +{len(r.output)} tokens: {r.output[:12]}")
+        ttft = r.ttft_s()
+        ttft_ms = f"{ttft * 1e3:.1f}ms" if ttft is not None else "n/a"
+        print(f"req {r.rid}: +{len(r.output)} tokens ttft={ttft_ms}: "
+              f"{r.output[:12]}")
+    pool = server.pool
+    print(f"pool: peak {pool.peak_blocks_in_use}/{pool.num_blocks - 1} "
+          f"blocks (dense equiv {server.dense_equiv_blocks}), "
+          f"reuse_hits={pool.reuse_hits} reused_tokens={pool.reused_tokens} "
+          f"evictions={pool.evictions}")
 
 
 if __name__ == "__main__":

@@ -227,6 +227,108 @@ def gqa_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     return out, {"k": ck, "v": cv}
 
 
+def gqa_decode_paged(p: Dict, x: Array, cache: Dict, bt: Array, pos: Array,
+                     ctx: TPContext, cfg: ModelConfig) -> Tuple[Array, Dict]:
+    """``gqa_decode`` through the paged KV pool: identical math, but K/V
+    rows live in shared physical blocks addressed through each slot's
+    block table.  cache: {k,v: [N_blocks, bs, Hkv_l, Dh]}; bt: [B, P]
+    int32 (inactive slots pass all-zero rows — their writes land in the
+    null block and their outputs are discarded by the server)."""
+    tp = ctx.tp
+    d = AttnDims.of(cfg, tp)
+    hl, hkvl = d.h_pad // tp, d.hkv_pad // tp
+    b = x.shape[0]
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    qkv = jnp.einsum("bsd,df->bsf", h, p["wqkv"])  # local columns; no comm
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"]
+    q, k, v = jnp.split(qkv, [hl * d.dh, (hl + hkvl) * d.dh], axis=-1)
+    q = q.reshape(b, 1, hl, d.dh)
+    k = k.reshape(b, 1, hkvl, d.dh)
+    v = v.reshape(b, 1, hkvl, d.dh)
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    pb = pos[:, None]
+    if cfg.rope_style in ("rope", "mrope"):
+        q = layers.apply_rope(q, pb, cfg.rope_theta)
+        k = layers.apply_rope(k, pb, cfg.rope_theta)
+
+    ck = layers.pool_update_rows(cache["k"], k, bt, pos)
+    cv = layers.pool_update_rows(cache["v"], v, bt, pos)
+    kview = layers.pool_view(ck, bt)               # [B, P*bs, Hkv_l, Dh]
+    vview = layers.pool_view(cv, bt)
+
+    s_tot = kview.shape[1]
+    group = hl // hkvl
+    qg = q.reshape(b, 1, hkvl, group, d.dh)
+    scores = jnp.einsum("bohgd,bshd->bhgos", qg.astype(jnp.float32),
+                        kview.astype(jnp.float32)) * (d.dh ** -0.5)
+    valid = (jnp.arange(s_tot)[None, :] <= pos[:, None])[:, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhgos,bshd->bohgd", w, vview.astype(jnp.float32))
+    attn = attn.reshape(b, 1, hl * d.dh).astype(x.dtype)
+
+    out = ctx.op("decode_ar")(attn, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def gqa_prefill_chunk(p: Dict, x: Array, cache: Dict, bt: Array, off,
+                      chunk_len, ctx: TPContext, cfg: ModelConfig
+                      ) -> Tuple[Array, Dict]:
+    """One fixed-size chunk of an incremental paged prefill.
+
+    x: [B, C, D] REPLICATED (chunked prefill always runs the replicated
+    layout — a bounded chunk has no SP residency to win and no tp-divisible
+    length constraint); cache: {k,v: [N_blocks, bs, Hkv_l, Dh]} pools;
+    bt: [B, P]; off / chunk_len: int32 scalars.  The chunk's K/V rows are
+    written through the table FIRST (pad rows past ``chunk_len`` redirect
+    to the null block), then scores mask ``kpos <= off + i`` per chunk row
+    over the whole gathered view — earlier chunks' and reused prefix
+    blocks' K/V participate exactly as in a full prefill, so chunked
+    results are independent of the chunk grouping."""
+    tp = ctx.tp
+    d = AttnDims.of(cfg, tp)
+    hl, hkvl = d.h_pad // tp, d.hkv_pad // tp
+    b, c_len, _ = x.shape
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    qkv = ctx.op("attn_ag", epilogue=overlap.Epilogue(bias="bqkv" in p))(
+        h, p["wqkv"], bias=p.get("bqkv"))
+    q, k, v = jnp.split(qkv, [hl * d.dh, (hl + hkvl) * d.dh], axis=-1)
+    q = q.reshape(b, c_len, hl, d.dh)
+    k = k.reshape(b, c_len, hkvl, d.dh)
+    v = v.reshape(b, c_len, hkvl, d.dh)
+
+    off = jnp.asarray(off, jnp.int32)
+    qpos = off + jnp.arange(c_len, dtype=jnp.int32)       # absolute positions
+    posb = jnp.broadcast_to(qpos, (b, c_len))
+    if cfg.rope_style in ("rope", "mrope"):
+        q = layers.apply_rope(q, posb, cfg.rope_theta)
+        k = layers.apply_rope(k, posb, cfg.rope_theta)
+
+    offv = jnp.broadcast_to(off, (b,))
+    lenv = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+    ck = layers.pool_update_rows(cache["k"], k, bt, offv, valid=lenv)
+    cv = layers.pool_update_rows(cache["v"], v, bt, offv, valid=lenv)
+    kview = layers.pool_view(ck, bt)
+    vview = layers.pool_view(cv, bt)
+
+    s_tot = kview.shape[1]
+    group = hl // hkvl
+    qg = q.reshape(b, c_len, hkvl, group, d.dh)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(jnp.float32),
+                        kview.astype(jnp.float32)) * (d.dh ** -0.5)
+    valid = (jnp.arange(s_tot)[None, :] <= qpos[:, None])[None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhgqs,bshd->bqhgd", w, vview.astype(jnp.float32))
+    attn = attn.reshape(b, c_len, hl * d.dh).astype(x.dtype)
+    out = ctx.op("attn_rs")(attn, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
 def gqa_cache_spec(cfg: ModelConfig, tp: int, batch_local: int, s_max: int,
                    dtype=jnp.bfloat16) -> Dict:
     d = AttnDims.of(cfg, tp)
@@ -383,6 +485,129 @@ def mla_decode(p: Dict, x: Array, cache: Dict, pos: Array, ctx: TPContext,
     attn = attn.reshape(b, 1, hl * m.v_head_dim).astype(x.dtype)
     out = ctx.op("decode_ar")(attn, p["w_o"])
     return out, {"c": c_cache, "kr": r_cache}
+
+
+def mla_decode_paged(p: Dict, x: Array, cache: Dict, bt: Array, pos: Array,
+                     ctx: TPContext, cfg: ModelConfig) -> Tuple[Array, Dict]:
+    """Absorbed-form MLA decode over the paged latent pool.  cache:
+    {c: [N_blocks, bs, rank], kr: [N_blocks, bs, rope_dim]}; bt: [B, P].
+    The gathered per-row views are shaped like the dense caches, so the
+    fused decode kernel path applies unchanged."""
+    m = cfg.mla
+    tp = ctx.tp
+    h_pad = pad_heads(cfg.num_heads, tp)
+    hl = h_pad // tp
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    q_lat = layers.rms_norm(jnp.einsum("bsd,dr->bsr", h, p["w_dq"]),
+                            p["q_norm"], cfg.norm_eps)
+    kv_all = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])
+    kv_lat = layers.rms_norm(kv_all[..., :m.kv_lora_rank], p["kv_norm"],
+                             cfg.norm_eps)
+    k_rope = kv_all[..., m.kv_lora_rank:]
+
+    pb = pos[:, None]
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], pb,
+                               cfg.rope_theta)[:, :, 0, :]
+
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.einsum("bsr,rf->bsf", q_lat, p["w_uq"]).reshape(b, 1, hl, dqk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, pb, cfg.rope_theta)
+
+    w_ukv = p["w_ukv"].reshape(m.kv_lora_rank, hl,
+                               m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = w_ukv[:, :, :m.qk_nope_head_dim]
+    w_uv = w_ukv[:, :, m.qk_nope_head_dim:]
+    q_eff = jnp.einsum("bohd,rhd->bohr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+
+    cc = layers.pool_update_rows(cache["c"], kv_lat, bt, pos)
+    cr = layers.pool_update_rows(cache["kr"], k_rope, bt, pos)
+    cview = layers.pool_view(cc, bt)               # [B, P*bs, rank]
+    rview = layers.pool_view(cr, bt)
+
+    if ctx.use_kernels:
+        from repro.kernels.mla_decode import mla_decode_attention
+        ctx_lat = mla_decode_attention(
+            q_eff[:, 0], q_rope[:, 0].astype(jnp.float32), cview, rview,
+            pos + 1, scale=dqk ** -0.5)[:, None]
+    else:
+        s_tot = cview.shape[1]
+        scores = (jnp.einsum("bohr,bsr->bhos", q_eff,
+                             cview.astype(jnp.float32))
+                  + jnp.einsum("bohd,bsd->bhos", q_rope.astype(jnp.float32),
+                               rview.astype(jnp.float32))) * (dqk ** -0.5)
+        valid = (jnp.arange(s_tot)[None, :] <= pos[:, None])[:, None, None, :]
+        scores = jnp.where(valid, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhos,bsr->bohr", w, cview.astype(jnp.float32))
+    attn = jnp.einsum("bohr,rhd->bohd", ctx_lat, w_uv.astype(jnp.float32))
+    attn = attn.reshape(b, 1, hl * m.v_head_dim).astype(x.dtype)
+    out = ctx.op("decode_ar")(attn, p["w_o"])
+    return out, {"c": cc, "kr": cr}
+
+
+def mla_prefill_chunk(p: Dict, x: Array, cache: Dict, bt: Array, off,
+                      chunk_len, ctx: TPContext, cfg: ModelConfig
+                      ) -> Tuple[Array, Dict]:
+    """Absorbed-form chunked prefill over the paged latent pool: the same
+    math as ``mla_decode_paged`` with C query rows at a time (scores are
+    identical to the non-absorbed prefill by associativity — q_nope·(W_uk c)
+    = (q_nope W_uk)·c, both in fp32).  x: [B, C, D] replicated."""
+    m = cfg.mla
+    tp = ctx.tp
+    h_pad = pad_heads(cfg.num_heads, tp)
+    hl = h_pad // tp
+    b, c_len, _ = x.shape
+
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    q_lat = layers.rms_norm(jnp.einsum("bsd,dr->bsr", h, p["w_dq"]),
+                            p["q_norm"], cfg.norm_eps)
+    kv_all = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])
+    kv_lat = layers.rms_norm(kv_all[..., :m.kv_lora_rank], p["kv_norm"],
+                             cfg.norm_eps)
+    k_rope = kv_all[..., m.kv_lora_rank:]
+
+    off = jnp.asarray(off, jnp.int32)
+    qpos = off + jnp.arange(c_len, dtype=jnp.int32)
+    posb = jnp.broadcast_to(qpos, (b, c_len))
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], posb,
+                               cfg.rope_theta)[:, :, 0, :]
+
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.einsum("bsr,rf->bsf", q_lat, p["w_uq"]).reshape(b, c_len, hl, dqk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, posb, cfg.rope_theta)
+
+    w_ukv = p["w_ukv"].reshape(m.kv_lora_rank, hl,
+                               m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = w_ukv[:, :, :m.qk_nope_head_dim]
+    w_uv = w_ukv[:, :, m.qk_nope_head_dim:]
+    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+
+    offv = jnp.broadcast_to(off, (b,))
+    lenv = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+    cc = layers.pool_update_rows(cache["c"], kv_lat, bt, offv, valid=lenv)
+    cr = layers.pool_update_rows(cache["kr"], k_rope, bt, offv, valid=lenv)
+    cview = layers.pool_view(cc, bt)
+    rview = layers.pool_view(cr, bt)
+
+    s_tot = cview.shape[1]
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_eff, cview.astype(jnp.float32))
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                           rview.astype(jnp.float32))) * (dqk ** -0.5)
+    valid = (jnp.arange(s_tot)[None, :] <= qpos[:, None])[None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhqs,bsr->bqhr", w, cview.astype(jnp.float32))
+    attn = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, w_uv.astype(jnp.float32))
+    attn = attn.reshape(b, c_len, hl * m.v_head_dim).astype(x.dtype)
+    out = ctx.op("attn_rs")(attn, p["w_o"])
+    return out, {"c": cc, "kr": cr}
 
 
 def mla_cache_spec(cfg: ModelConfig, tp: int, batch_local: int, s_max: int,

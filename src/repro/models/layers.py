@@ -204,6 +204,46 @@ def cache_update_rows(cache: Array, new: Array, pos: Array) -> Array:
             c, n.astype(c.dtype), p, axis=0))(cache, new, pos)
 
 
+def pool_update_rows(pool: Array, new: Array, bt: Array, start: Array,
+                     valid: Optional[Array] = None) -> Array:
+    """Paged KV write THROUGH a block table.
+
+    pool: [N_blocks, bs, ...] physical blocks; new: [B, L, ...]; bt: [B, P]
+    int32 per-row block tables; start: [B] int32 logical write offsets
+    (row b's new[b, i] lands at logical position start[b] + i, i.e.
+    physical block ``bt[b, (start[b]+i) // bs]`` row ``(start[b]+i) % bs``).
+    ``valid`` ([B] int32, optional): rows with i >= valid[b] are padding —
+    they redirect into physical block 0, the pool's reserved NULL block
+    (never allocated, never read unmasked).  Inactive decode slots get the
+    same treatment for free: their bt rows are all zeros.  Real rows never
+    collide (tables are disjoint and block 0 is never in a table)."""
+    n_blocks, bs = pool.shape[0], pool.shape[1]
+    b, l = new.shape[0], new.shape[1]
+    logical = start[:, None] + jnp.arange(l, dtype=jnp.int32)       # [B, L]
+    blk = jnp.take_along_axis(
+        bt, jnp.clip(logical // bs, 0, bt.shape[1] - 1), axis=1)
+    flat = blk * bs + logical % bs                                  # [B, L]
+    if valid is not None:
+        ok = jnp.arange(l, dtype=jnp.int32)[None, :] < valid[:, None]
+        flat = jnp.where(ok, flat, logical % bs)    # null-block rows
+    pool_flat = pool.reshape(n_blocks * bs, *pool.shape[2:])
+    return pool_flat.at[flat.reshape(-1)].set(
+        new.reshape(b * l, *new.shape[2:]).astype(pool.dtype)
+    ).reshape(pool.shape)
+
+
+def pool_view(pool: Array, bt: Array) -> Array:
+    """Gather each row's logical K/V timeline through its block table.
+
+    pool: [N_blocks, bs, ...]; bt: [B, P] -> [B, P*bs, ...].  Logical
+    position s of row b reads ``pool[bt[b, s // bs], s % bs]``; positions
+    past the row's true length land in stale or null-block rows and MUST
+    be masked by the caller (attention masks on pos already do)."""
+    g = pool[bt]                                   # [B, P, bs, ...]
+    return g.reshape(bt.shape[0], bt.shape[1] * pool.shape[1],
+                     *pool.shape[2:])
+
+
 def take_rows(x: Array, idx: Array) -> Array:
     """Per-row gather along the sequence axis: ``x[b, idx[b]]``.
 

@@ -98,7 +98,7 @@ def _selective_scan_chunk(x, dt, b_in, c_in, a, h0):
 
 def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
                 chunk: int = 256, with_cache: bool = False,
-                lengths=None):
+                lengths=None, cache=None):
     """x: [B, S/TP, D] -> [B, S/TP, D] (replicated layout: [B, S, D] with
     the same seams under hidden scatter; the conv/scan always see the full
     sequence either way).
@@ -108,11 +108,16 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
     and zero input leave the SSM state INVARIANT, so the returned ``ssm``
     cache is exactly the state after each row's true prompt; the ``conv``
     tail is sliced per row at its own length.  Outputs at pad positions are
-    garbage and must not be read (prefill selects logits at lengths-1)."""
+    garbage and must not be read (prefill selects logits at lengths-1).
+
+    ``cache`` ({conv, ssm}, optional): the recurrent state at sequence
+    position 0 — seeds a CHUNKED prefill continuing a previous chunk
+    (replicated layout only: the chunk is sequence-local)."""
     d_in, dt_rank, d_state, d_conv = _dims(cfg, ctx.tp)
     d_in_loc = d_in // ctx.tp
     b, s_loc, dm = x.shape
     s = s_loc * ctx.seq_factor
+    assert cache is None or not ctx.seq_sharded
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     if "w_in_xz" in p:
@@ -124,8 +129,13 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         xs_raw, z = ctx.op("attn_ag", n_weights=2)(h, p["w_in_x"],
                                                    p["w_in_z"])
 
-    # causal depthwise conv along the (gathered) sequence
-    xpad = jnp.pad(xs_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    # causal depthwise conv along the (gathered) sequence; a carried-in
+    # cache replaces the leading zero-pad with the previous chunk's tail
+    if cache is None:
+        xpad = jnp.pad(xs_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    else:
+        xpad = jnp.concatenate([cache["conv"].astype(xs_raw.dtype), xs_raw],
+                               axis=1)
     conv = sum(xpad[:, i:i + s] * p["conv"][i] for i in range(d_conv))
     xs = jax.nn.silu(conv + p["conv_b"])
 
@@ -153,7 +163,8 @@ def mamba_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
                                         a, hprev)
         return hnew, y
 
-    h0 = jnp.zeros((b, d_in_loc, d_state), jnp.float32)
+    h0 = (jnp.zeros((b, d_in_loc, d_state), jnp.float32) if cache is None
+          else cache["ssm"].astype(jnp.float32))
     hfin, ys = lax.scan(step, h0, jnp.arange(nck))
     y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d_in_loc)
 

@@ -112,23 +112,31 @@ def _wkv_chunk(r, k, v, logw, u, s0):
 
 def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
                     chunk: int = 64, with_cache: bool = False,
-                    lengths=None):
+                    lengths=None, cache=None):
     """x: [B, S/TP, D] -> [B, S/TP, D].
 
     ``lengths`` ([B] int32, optional): per-row true prompt lengths for a
     right-padded batched prefill.  Pad positions get k=0 and logw=0 (decay
     exp(0)=1): ``S_t = diag(1) S_{t-1} + 0`` leaves the WKV state INVARIANT,
     so the returned ``state`` cache is exactly each row's state after its
-    true prompt and ``last`` is the true final token's normed input."""
+    true prompt and ``last`` is the true final token's normed input.
+
+    ``cache`` ({state, last}, optional): position-0 recurrent state —
+    seeds a CHUNKED prefill continuing a previous chunk (replicated layout
+    only: the token-shift boundary is the previous chunk's last token)."""
     n_heads, dh, d_attn = _dims(cfg, ctx.tp)
     hl = n_heads // ctx.tp
     b, s_loc, dm = x.shape
     s = s_loc * ctx.seq_factor
+    assert cache is None or not ctx.seq_sharded
 
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     # token shift needs x_{t-1}: boundary ppermute on the shard (one-token
     # exchange; local shift in the replicated layout)
     prev = layers.shift_tokens_right(h, ctx)
+    if cache is not None:
+        prev = jnp.concatenate([cache["last"].astype(h.dtype)[:, None, :],
+                                prev[:, 1:]], axis=1)
 
     # ALL FIVE token-shift projections ride ONE shared-gather AG seam: the
     # per-projection mix  mixed_i = (1-mu_i)*h + mu_i*prev  commutes into
@@ -172,7 +180,8 @@ def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
         y, snew = _wkv_chunk(sl(r_), sl(k_), sl(v_), sl(w_), u_loc, state)
         return snew, y
 
-    s0 = jnp.zeros((b, hl, dh, dh), jnp.float32)
+    s0 = (jnp.zeros((b, hl, dh, dh), jnp.float32) if cache is None
+          else cache["state"].astype(jnp.float32))
     sfin, ys = lax.scan(step, s0, jnp.arange(nck))
     y = jnp.moveaxis(ys, 0, 2).reshape(b, hl, s, dh)     # [B,hl,S,dh]
     y = y.transpose(0, 2, 1, 3).reshape(b, s, hl * dh).astype(x.dtype)
@@ -196,9 +205,15 @@ def rwkv_time_train(p: Dict, x: Array, ctx: TPContext, cfg: ModelConfig,
 
 def rwkv_channel_train(p: Dict, x: Array, ctx: TPContext,
                        cfg: ModelConfig, with_cache: bool = False,
-                       lengths=None):
+                       lengths=None, cache=None):
+    """``cache`` ({last}, optional): seeds the token shift for a CHUNKED
+    prefill continuing a previous chunk (replicated layout only)."""
+    assert cache is None or not ctx.seq_sharded
     h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
     prev = layers.shift_tokens_right(h, ctx)
+    if cache is not None:
+        prev = jnp.concatenate([cache["last"].astype(h.dtype)[:, None, :],
+                                prev[:, 1:]], axis=1)
     delta = prev - h
     xk = h + delta * p["mu"][0]
     xr = h + delta * p["mu"][1]

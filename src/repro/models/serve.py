@@ -48,18 +48,34 @@ Array = jax.Array
 # Cache specs (global shapes + PartitionSpecs)
 # ---------------------------------------------------------------------------
 def _mixer_cache_spec(kind: str, cfg: ModelConfig, par: ParallelConfig,
-                      batch: int, s_max: int, dp_axes: Tuple[str, ...]):
+                      batch: int, s_max: int, dp_axes: Tuple[str, ...],
+                      pool: Optional[Tuple[int, int]] = None):
     dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
     tp = par.tp
     if kind == ATTN:
         hkv = pad_kv_heads(cfg.num_kv_heads, tp)
         dh = cfg.resolved_head_dim
+        if pool is not None:
+            nb, bs = pool
+            sds = {"k": jax.ShapeDtypeStruct((nb, bs, hkv, dh), jnp.bfloat16),
+                   "v": jax.ShapeDtypeStruct((nb, bs, hkv, dh), jnp.bfloat16)}
+            spec = {"k": P(None, None, "model", None),
+                    "v": P(None, None, "model", None)}
+            return sds, spec
         sds = {"k": jax.ShapeDtypeStruct((batch, s_max, hkv, dh), jnp.bfloat16),
                "v": jax.ShapeDtypeStruct((batch, s_max, hkv, dh), jnp.bfloat16)}
         spec = {"k": P(dp, None, "model", None), "v": P(dp, None, "model", None)}
         return sds, spec
     if kind == MLA:
         m = cfg.mla
+        if pool is not None:
+            nb, bs = pool
+            sds = {"c": jax.ShapeDtypeStruct((nb, bs, m.kv_lora_rank),
+                                             jnp.bfloat16),
+                   "kr": jax.ShapeDtypeStruct((nb, bs, m.qk_rope_head_dim),
+                                              jnp.bfloat16)}
+            spec = {"c": P(None, None, None), "kr": P(None, None, None)}
+            return sds, spec
         sds = {"c": jax.ShapeDtypeStruct((batch, s_max, m.kv_lora_rank),
                                          jnp.bfloat16),
                "kr": jax.ShapeDtypeStruct((batch, s_max, m.qk_rope_head_dim),
@@ -95,16 +111,24 @@ def _ffn_cache_spec(kind: str, cfg: ModelConfig, par: ParallelConfig,
 
 
 def cache_specs(cfg: ModelConfig, par: ParallelConfig, batch: int, s_max: int,
-                dp_axes: Tuple[str, ...] = ("data",)):
+                dp_axes: Tuple[str, ...] = ("data",),
+                pool: Optional[Tuple[int, int]] = None):
     """Returns (ShapeDtypeStruct tree, PartitionSpec tree) for the full-model
-    cache: {"lead": [...], "periods": [stacked per pattern position]}."""
+    cache: {"lead": [...], "periods": [stacked per pattern position]}.
+
+    With ``pool=(num_blocks, block_size)`` the attention-family leaves
+    (GQA K/V, MLA latent) become shared ``[num_blocks, block_size, ...]``
+    physical pools addressed through per-slot block tables (block ids are
+    layer-agnostic: one allocation indexes every layer's pool leaf).  The
+    state families (Mamba conv/SSM, RWKV wkv/shift) have no sequence dim
+    to page — they stay dense per-slot ``[batch, ...]``."""
     pat = expanded_pattern(cfg)
     lead = cfg.leading_dense_layers
     reps = n_periods(cfg)
 
     def one(kind_pair):
         msds, mspec = _mixer_cache_spec(kind_pair[0], cfg, par, batch, s_max,
-                                        dp_axes)
+                                        dp_axes, pool)
         fsds, fspec = _ffn_cache_spec(kind_pair[1], cfg, par, batch, dp_axes)
         return ({"mixer": msds, "ffn": fsds},
                 {"mixer": mspec, "ffn": fspec})
@@ -126,14 +150,27 @@ def cache_specs(cfg: ModelConfig, par: ParallelConfig, batch: int, s_max: int,
     return sds, spec
 
 
+def paged_cache_specs(cfg: ModelConfig, par: ParallelConfig, num_blocks: int,
+                      block_size: int, max_batch: int):
+    """Cache specs for the paged serving runtime (see ``cache_specs``).
+    Paged serving is per-replica — continuous batching fills slots from a
+    local queue, so no leaf carries a dp axis."""
+    return cache_specs(cfg, par, max_batch, 0, dp_axes=(),
+                       pool=(num_blocks, block_size))
+
+
 # ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------
 def _mixer_decode(kind: str, p: Dict, x: Array, cache: Dict, pos, ctx,
-                  cfg: ModelConfig):
+                  cfg: ModelConfig, bt=None):
     if kind == ATTN:
+        if bt is not None:
+            return attention.gqa_decode_paged(p, x, cache, bt, pos, ctx, cfg)
         return attention.gqa_decode(p, x, cache, pos, ctx, cfg)
     if kind == MLA:
+        if bt is not None:
+            return attention.mla_decode_paged(p, x, cache, bt, pos, ctx, cfg)
         return attention.mla_decode(p, x, cache, pos, ctx, cfg)
     if kind == MAMBA:
         return mamba.mamba_decode(p, x, cache, pos, ctx, cfg)
@@ -154,20 +191,24 @@ def _ffn_decode(kind: str, p: Dict, x: Array, cache: Dict, ctx,
 
 
 def _block_decode(kind_pair, lp: Dict, lc: Dict, x: Array, pos, ctx, cfg,
-                  par: ParallelConfig, z3=None, layer=None):
+                  par: ParallelConfig, z3=None, layer=None, bt=None):
     lp = _maybe_gather_zero3(lp, par, z3)
     ctx = ctx.with_layer(layer)
     dy, mc = _mixer_decode(kind_pair[0], lp["mixer"], x, lc["mixer"], pos,
-                           ctx, cfg)
+                           ctx, cfg, bt=bt)
     x = x + dy
     dy, fc = _ffn_decode(kind_pair[1], lp["ffn"], x, lc["ffn"], ctx, cfg)
     return x + dy, {"mixer": mc, "ffn": fc}
 
 
 def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
-                ctx: TPContext, cfg: ModelConfig, par: ParallelConfig):
+                ctx: TPContext, cfg: ModelConfig, par: ParallelConfig,
+                block_tables=None):
     """One greedy decode step.  tokens: [B_loc, 1] int32; pos: [B_loc] int32
-    per-slot write positions (a scalar broadcasts to all rows).  Returns
+    per-slot write positions (a scalar broadcasts to all rows).  With
+    ``block_tables`` ([B_loc, pages] int32) the attention caches are paged
+    pools and each row reads/writes through its own table (all-zero rows
+    redirect to the null block — inactive slots are harmless).  Returns
     (next_token [B_loc,1], new caches)."""
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
                            (tokens.shape[0],))
@@ -185,7 +226,8 @@ def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
     for i in range(lead):
         x, nc = _block_decode(pat[i], params["lead"][i], caches["lead"][i],
                               x, pos, ctx, cfg, par,
-                              z3["lead"][i] if z3["lead"] else None, layer=i)
+                              z3["lead"][i] if z3["lead"] else None, layer=i,
+                              bt=block_tables)
         new_caches["lead"].append(nc)
 
     def period_body(x, xs):
@@ -195,7 +237,7 @@ def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
             x, nc = _block_decode(kp, stacked_p[p_i], stacked_c[p_i], x, pos,
                                   ctx, cfg, par,
                                   z3["periods"][p_i] if z3["periods"] else None,
-                                  layer=lead + p_i)
+                                  layer=lead + p_i, bt=block_tables)
             ncs.append(nc)
         return x, tuple(ncs)
 
@@ -323,3 +365,138 @@ def prefill_step(params: Dict, batch: Dict, ctx: TPContext, cfg: ModelConfig,
     logits = jnp.einsum("bsd,vd->bsv", h_last, params["embed"])
     nxt = vocab_parallel_argmax(logits[:, -1], ctx, v_pad, cfg.vocab_size)
     return nxt[:, None], caches
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (paged caches)
+# ---------------------------------------------------------------------------
+def _slot_state(cache: Dict, slot) -> Dict:
+    """Slice one slot's row out of a dense per-slot state cache."""
+    return jax.tree.map(
+        lambda v: lax.dynamic_slice_in_dim(v, slot, 1, axis=0), cache)
+
+
+def _store_slot_state(cache: Dict, st: Dict, slot) -> Dict:
+    return jax.tree.map(
+        lambda v, s: lax.dynamic_update_slice_in_dim(v, s.astype(v.dtype),
+                                                     slot, axis=0), cache, st)
+
+
+def _mixer_chunk(kind: str, p: Dict, x: Array, cache: Dict, bt, slot, off,
+                 chunk_len, first, ctx, cfg: ModelConfig):
+    if kind == ATTN:
+        return attention.gqa_prefill_chunk(p, x, cache, bt, off, chunk_len,
+                                           ctx, cfg)
+    if kind == MLA:
+        return attention.mla_prefill_chunk(p, x, cache, bt, off, chunk_len,
+                                           ctx, cfg)
+    # state families: thread the slot's recurrent state across chunks.  The
+    # first chunk zeroes it (a freed slot's stale state must not leak into
+    # the next admission); lengths are chunk-RELATIVE — rows past chunk_len
+    # freeze the state exactly like prompt right-padding.
+    lenv = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (x.shape[0],))
+    st = _slot_state(cache, slot)
+    st = jax.tree.map(lambda v: jnp.where(first, jnp.zeros_like(v), v), st)
+    if kind == MAMBA:
+        y, ns = mamba.mamba_train(p, x, ctx, cfg, with_cache=True,
+                                  lengths=lenv, cache=st)
+    elif kind == RWKV:
+        y, ns = rwkv.rwkv_time_train(p, x, ctx, cfg, with_cache=True,
+                                     lengths=lenv, cache=st)
+    else:
+        raise ValueError(kind)
+    return y, _store_slot_state(cache, ns, slot)
+
+
+def _ffn_chunk(kind: str, p: Dict, x: Array, cache: Dict, slot, chunk_len,
+               first, ctx, cfg: ModelConfig):
+    if kind == DENSE_FFN:
+        return ffn.ffn_train(p, x, ctx, cfg.norm_eps), cache
+    lenv = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (x.shape[0],))
+    if kind == MOE_FFN:
+        y, _ = ffn.moe_train(p, x, ctx, cfg, lengths=lenv)
+        return y, cache
+    if kind == RWKV:
+        st = _slot_state(cache, slot)
+        st = jax.tree.map(lambda v: jnp.where(first, jnp.zeros_like(v), v), st)
+        y, ns = rwkv.rwkv_channel_train(p, x, ctx, cfg, with_cache=True,
+                                        lengths=lenv, cache=st)
+        return y, _store_slot_state(cache, ns, slot)
+    raise ValueError(kind)
+
+
+def _block_chunk(kind_pair, lp: Dict, lc: Dict, x: Array, bt, slot, off,
+                 chunk_len, first, ctx, cfg, par: ParallelConfig, z3=None,
+                 layer=None):
+    lp = _maybe_gather_zero3(lp, par, z3)
+    ctx = ctx.with_layer(layer)
+    dy, mc = _mixer_chunk(kind_pair[0], lp["mixer"], x, lc["mixer"], bt, slot,
+                          off, chunk_len, first, ctx, cfg)
+    x = x + dy
+    dy, fc = _ffn_chunk(kind_pair[1], lp["ffn"], x, lc["ffn"], slot,
+                        chunk_len, first, ctx, cfg)
+    return x + dy, {"mixer": mc, "ffn": fc}
+
+
+def prefill_chunk_step(params: Dict, caches: Dict, tokens: Array,
+                       block_tables: Array, slot, off, chunk_len,
+                       ctx: TPContext, cfg: ModelConfig, par: ParallelConfig):
+    """One fixed-shape chunk of an incremental paged prefill.
+
+    ONE jit program serves every prompt length: tokens is always ``[1, C]``
+    (right-padded past ``chunk_len``) and slot/off/chunk_len are traced
+    int32 scalars, so admission cost is O(n/C) dispatches of a single
+    compiled program — no per-bucket prefill family, no recompiles.
+
+    Chunked prefill always runs the REPLICATED activation layout (like
+    decode): a bounded C-row chunk has no sequence-parallel residency to
+    win, and dropping SP removes the tp-divisible length constraint.  The
+    attention chunk writes K/V through ``block_tables`` BEFORE computing
+    scores, so intra-chunk causality and all earlier chunks (including
+    REUSED prefix blocks, which are never rewritten) ride the same gathered
+    view — results are bit-identical regardless of chunk grouping or reuse.
+
+    Returns (next_token [1,1] — meaningful only on the FINAL chunk, where
+    row ``chunk_len-1`` is the prompt's last token — and the new caches)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    off = jnp.asarray(off, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    first = off == 0
+    ctx = ctx.with_layout(False)
+    v_pad = pad_vocab(cfg.vocab_size, par.tp)
+    x = layers.embed_lookup(params["embed"], tokens, ctx, v_pad)
+    x = x.astype(cfg.compute_dtype)
+
+    pat = expanded_pattern(cfg)
+    z3 = zero3_flags(cfg, par)
+    new_caches: Dict[str, Any] = {"lead": [], "periods": None}
+    lead = cfg.leading_dense_layers
+    for i in range(lead):
+        x, nc = _block_chunk(pat[i], params["lead"][i], caches["lead"][i], x,
+                             block_tables, slot, off, chunk_len, first, ctx,
+                             cfg, par, z3["lead"][i] if z3["lead"] else None,
+                             layer=i)
+        new_caches["lead"].append(nc)
+
+    def period_body(x, xs):
+        stacked_p, stacked_c = xs
+        ncs = []
+        for p_i, kp in enumerate(cfg.pattern):
+            x, nc = _block_chunk(kp, stacked_p[p_i], stacked_c[p_i], x,
+                                 block_tables, slot, off, chunk_len, first,
+                                 ctx, cfg, par,
+                                 z3["periods"][p_i] if z3["periods"] else None,
+                                 layer=lead + p_i)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    x, stacked_new = lax.scan(
+        period_body, x, (tuple(params["periods"]), tuple(caches["periods"])))
+    new_caches["periods"] = list(stacked_new)
+
+    h = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    h_last = layers.take_rows(
+        h, jnp.broadcast_to(chunk_len - 1, (h.shape[0],)))[:, None]
+    logits = jnp.einsum("bsd,vd->bsv", h_last, params["embed"])
+    nxt = vocab_parallel_argmax(logits[:, -1], ctx, v_pad, cfg.vocab_size)
+    return nxt[:, None], new_caches

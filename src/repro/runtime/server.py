@@ -1,28 +1,35 @@
-"""Batched serving runtime: continuous batching over prefill/decode steps.
+"""Paged serving runtime: block-table KV cache + chunked-prefill batching.
 
-vLLM-shaped but TPU/JAX-idiomatic, built on two fixed-shape jit programs:
+vLLM-shaped but TPU/JAX-idiomatic, built on TWO fixed-shape jit programs
+total (the per-bucket prefill family is gone):
 
-* **Per-slot decode** — ONE ``decode_step`` dispatch advances every active
-  slot at its OWN position (``pos: [B]`` vector; per-row RoPE, per-row
-  causal mask, per-row KV writes).  Slots at staggered sequence positions
-  never touch each other's cache rows, so continuous batching of
-  mixed-length requests is numerically identical to serving each request
-  alone.
-* **Batched-prefill admission** — ``admit`` pads the prompt into a
-  power-of-two length bucket, runs ONE ``prefill_step`` dispatch (per-row
-  ``lengths`` keep the caches exact under right-padding, including the
-  Mamba/RWKV recurrent states), and scatters the resulting cache tree into
-  the target slot's rows with one donated ``dynamic_update_slice`` program.
-  Admission is O(1) dispatches — never an O(prompt_len) decode loop — and
-  never writes another slot's rows.
+* **Per-slot paged decode** — ONE ``decode_step`` dispatch advances every
+  generating slot at its OWN position (``pos: [B]``), reading and writing
+  K/V through each slot's block table over the shared physical pool.
+  Inactive slots pass all-zero table rows: their writes land in the
+  reserved null block and their outputs are discarded here.
+* **Chunked prefill** — admission reserves a slot plus enough pool blocks
+  for the whole request up front (prefill can never die mid-flight), then
+  the prompt streams through ONE compiled ``prefill_chunk_step`` program in
+  fixed ``[1, C]`` chunks with traced slot/offset/length scalars.  Cost is
+  O(n/C) dispatches of a single program — no recompiles, no O(n) decode
+  loop — and the scheduler interleaves chunks with decode steps so a long
+  prompt cannot head-of-line-block running generations.
 
-Finished slots (EOS or max_len) are recycled; ``serve`` tracks completion
-by request id and drains each finished request exactly once.
+Prefix reuse (pure-attention archs): full prompt blocks register in the
+pool's hash-chain cache; a later admission sharing a prefix acquires those
+blocks instead of recomputing them and starts prefilling at the first
+unmatched position.  Shared blocks are never written — copy-on-write at
+the block boundary — and freed prefixes stay matchable on an LRU until the
+allocator actually needs the space.
+
+``serve`` runs the queue through the ChunkScheduler; the server OWNS
+request timing (t_arrival / t_first_token / t_finish — see ``Request``).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -31,10 +38,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ATTN, MLA, RWKV, ModelConfig, ParallelConfig
 from repro.models import model as M
 from repro.models import serve as S
+from repro.models.model import expanded_pattern
 from repro.parallel.sharding import TPContext
+from repro.runtime.kvpool import BlockTable, KVPool
 
 
 @dataclasses.dataclass
@@ -43,6 +52,11 @@ class ServeConfig:
     max_seq: int = 512
     eos_token: int = 1
     max_new_tokens: int = 64
+    block_size: int = 16          # tokens per KV pool block (page)
+    num_blocks: Optional[int] = None   # pool size; default guarantees
+    #                                    max_batch full-length sequences
+    prefill_chunk: int = 32       # chunked-prefill rows per dispatch
+    prefix_reuse: bool = True     # hash-chain prefix cache (attention archs)
 
 
 @dataclasses.dataclass
@@ -52,25 +66,45 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None   # set when the server rejected the request
+    # timing is OWNED by the serving runtime: t_arrival at submit (or the
+    # traffic generator's scheduled arrival — TTFT then includes queueing),
+    # t_first_token when the final prefill chunk emits token 0, t_finish
+    # at completion.  perf_counter seconds.
+    t_arrival: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    def ttft_s(self) -> Optional[float]:
+        if self.t_arrival is None or self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_arrival
+
+    def per_token_s(self) -> Optional[float]:
+        """Mean inter-token latency after the first token (TPOT)."""
+        if self.t_first_token is None or self.t_finish is None:
+            return None
+        return ((self.t_finish - self.t_first_token)
+                / max(1, len(self.output) - 1))
 
 
-def _prefill_bucket(n: int, max_seq: int, tp: int = 1) -> int:
-    """Power-of-two length bucket (>= 8) for the admission prefill jit —
-    bounds recompiles to O(log max_seq) signatures.  The bucket must divide
-    by ``tp`` (sequence-sharded prefill: embed psum_scatter / seam gathers)
-    and fit the server cache (<= max_seq)."""
-    b = 8
-    while b < n:
-        b *= 2
-    if b % tp:
-        b = -(-b // tp) * tp
-    if b > max_seq:
-        b = (max_seq // tp) * tp          # largest tp-divisible pad length
-    if b < n:
-        raise ValueError(
-            f"prompt length {n} does not fit a tp={tp}-divisible prefill "
-            f"pad within max_seq={max_seq}")
-    return b
+@dataclasses.dataclass
+class PrefillJob:
+    """An admitted request mid-prefill: ``off`` is the next unprefilled
+    prompt position (reused prefix blocks are skipped entirely)."""
+    req: Request
+    slot: int
+    table: BlockTable
+    off: int
+
+
+def _arch_supports_reuse(cfg: ModelConfig) -> bool:
+    """Prefix blocks are reusable only when EVERY layer's sequence memory
+    lives in the paged pool.  Recurrent families (Mamba SSM/conv, RWKV
+    wkv/token-shift) fold history into dense states that are not
+    block-addressable, so hybrids keep paging + eviction but skip the
+    prefix cache."""
+    return all(mk in (ATTN, MLA) and fk != RWKV
+               for mk, fk in expanded_pattern(cfg))
 
 
 class Server:
@@ -81,122 +115,157 @@ class Server:
         self.mesh = mesh
         self.sc = sc
         self.params = params
-        dp_axes = tuple(a for a in ("pod", "ep", "data")
-                        if a in mesh.axis_names)
         from repro.tuning import plan_set_from_parallel
-        # ONE context for both dispatch programs: prefill runs the plans'
-        # resolved activation layout (sequence-sharded by default — the SP
-        # residency win applies to the longest activations the server
-        # touches), while decode_step internally forces the replicated
-        # layout (S=1 cannot shard).
-        self.ctx = TPContext(axis="model", dp_axes=dp_axes,
+        # paged serving is PER-REPLICA (slots fill from a local queue), so
+        # the context carries no dp axes and every program spec is
+        # model-axis only; both programs force the replicated activation
+        # layout internally (decode: S=1; chunk prefill: bounded C).
+        self.ctx = TPContext(axis="model", dp_axes=(),
                              ep_axes=M._ep_axes(cfg, par),
                              mode=par.overlap_mode,
                              plans=plan_set_from_parallel(par))
         params_eval = jax.eval_shape(
             lambda: M.init_model(jax.random.PRNGKey(0), cfg, par))
         self.pspecs = M.param_specs(cfg, par, params_eval)
-        cache_sds, self.cache_specs = S.cache_specs(
-            cfg, par, sc.max_batch, sc.max_seq, dp_axes=dp_axes or ("data",))
+
+        self.pages = -(-sc.max_seq // sc.block_size)   # table width
+        nb = sc.num_blocks or (sc.max_batch * self.pages + 1)
+        self.pool = KVPool(nb, sc.block_size)
+        # what a dense [max_batch, max_seq] cache would pin, in blocks —
+        # the paged footprint baseline for benchmarks/tests
+        self.dense_equiv_blocks = sc.max_batch * self.pages
+        cache_sds, self.cache_specs = S.paged_cache_specs(
+            cfg, par, nb, sc.block_size, sc.max_batch)
         self.caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                    cache_sds)
         self.positions = np.zeros((sc.max_batch,), np.int32)
         self.slots: List[Optional[Request]] = [None] * sc.max_batch
+        self.ready: List[bool] = [False] * sc.max_batch  # prefill complete
+        self.tables: List[Optional[BlockTable]] = [None] * sc.max_batch
         self._decode = self._make_decode()
-        self._prefill_fns: Dict[int, object] = {}   # bucket len -> jit
-        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+        self._chunk = self._make_chunk()
+        self._reuse_ok = sc.prefix_reuse and _arch_supports_reuse(cfg)
         self.prefill_dispatches = 0                 # observability/tests
         self.decode_dispatches = 0
 
-    def _dp_spec(self):
-        dp = self.ctx.dp_axes
-        return dp if len(dp) > 1 else (dp[0] if dp else None)
-
     def _make_decode(self):
         ctx, cfg, par = self.ctx, self.cfg, self.par
-        dp_spec = self._dp_spec()
 
-        def fn(params, caches, tokens, pos):
-            return S.decode_step(params, caches, tokens, pos, ctx, cfg, par)
+        def fn(params, caches, tokens, pos, bt):
+            return S.decode_step(params, caches, tokens, pos, ctx, cfg, par,
+                                 block_tables=bt)
 
         sm = compat.shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self.pspecs, self.cache_specs, P(dp_spec, None),
-                      P(dp_spec)),
-            out_specs=(P(dp_spec, None), self.cache_specs),
+            in_specs=(self.pspecs, self.cache_specs, P(None, None), P(None),
+                      P(None, None)),
+            out_specs=(P(None, None), self.cache_specs),
             check_vma=False)
         return jax.jit(sm, donate_argnums=(1,))
 
-    def _make_prefill(self, s_pad: int):
-        """One-request prefill program for a prompt-length bucket: tokens
-        [1, s_pad] (replicated over DP — batch 1 cannot shard), per-row
-        ``lengths`` masking the right-padding."""
+    def _make_chunk(self):
+        """The ONE prefill program: tokens [1, C], table row [1, pages],
+        traced int32 slot/off/chunk_len scalars — every prompt length and
+        every slot runs the same compiled signature."""
         ctx, cfg, par = self.ctx, self.cfg, self.par
-        _, cspecs = S.cache_specs(cfg, par, 1, s_pad, dp_axes=())
 
-        def fn(params, tokens, lengths):
-            return S.prefill_step(params, {"tokens": tokens}, ctx, cfg, par,
-                                  lengths=lengths)
+        def fn(params, caches, tokens, bt, slot, off, chunk_len):
+            return S.prefill_chunk_step(params, caches, tokens, bt, slot,
+                                        off, chunk_len, ctx, cfg, par)
 
         sm = compat.shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self.pspecs, P(None, None), P(None)),
-            out_specs=(P(None, None), cspecs),
+            in_specs=(self.pspecs, self.cache_specs, P(None, None),
+                      P(None, None), P(), P(), P()),
+            out_specs=(P(None, None), self.cache_specs),
             check_vma=False)
-        return jax.jit(sm)
+        return jax.jit(sm, donate_argnums=(1,))
 
-    @staticmethod
-    def _scatter_impl(caches, pcaches, slot):
-        """Write a batch-1 prefill cache tree into one slot's rows.  Seq
-        dims shorter than the server cache update only the prefix (rows
-        beyond the prompt stay untouched and masked until decode overwrites
-        them).  Other slots' rows are never written."""
-        zero = jnp.asarray(0, jnp.int32)
+    # ------------------------------------------------------------ admission
+    def _blocks_needed(self, n: int) -> int:
+        """Blocks reserved at admission: the whole request horizon (prompt
+        + generation, clipped to max_seq) so decode NEVER allocates — a
+        running request cannot die to pool pressure mid-flight."""
+        horizon = min(n + self.sc.max_new_tokens, self.sc.max_seq)
+        return min(-(-horizon // self.sc.block_size), self.pages)
 
-        def at(axis):
-            def leaf(c, pc):
-                starts = [zero] * c.ndim
-                starts[axis] = slot
-                return jax.lax.dynamic_update_slice(
-                    c, pc.astype(c.dtype), starts)
-            return leaf
-
-        # lead leaves are [B, ...]; scanned period leaves carry a leading
-        # repetition axis: [reps, B, ...]
-        return {"lead": jax.tree.map(at(0), caches["lead"], pcaches["lead"]),
-                "periods": jax.tree.map(at(1), caches["periods"],
-                                        pcaches["periods"])}
-
-    # ------------------------------------------------------------------ API
-    def admit(self, req: Request) -> bool:
-        """Prefill a request into a free slot: ONE batched ``prefill_step``
-        dispatch on the bucket-padded prompt + one cache scatter into the
-        slot's rows.  Returns False when no slot is free."""
+    def begin_admission(self, req: Request) -> Optional[PrefillJob]:
+        """Reserve a slot + KV blocks for a request (no dispatch).  Returns
+        None when no slot is free or the pool cannot cover the request;
+        raises ValueError for prompts that can never be served.  On
+        success the returned job's ``off`` skips any reused prefix."""
         slot = next((i for i, cur in enumerate(self.slots) if cur is None),
                     None)
         if slot is None:
-            return False
+            return None
         n = len(req.prompt)
         if not 0 < n < self.sc.max_seq:
             raise ValueError(f"prompt length {n} outside (0, "
                              f"{self.sc.max_seq}) for rid {req.rid}")
-        s_pad = _prefill_bucket(n, self.sc.max_seq, self.par.tp)
-        toks = np.zeros((1, s_pad), np.int32)
-        toks[0, :n] = req.prompt
-        fn = self._prefill_fns.get(s_pad)
-        if fn is None:
-            fn = self._prefill_fns[s_pad] = self._make_prefill(s_pad)
-        nxt, pcaches = fn(self.params, jnp.asarray(toks),
-                          jnp.asarray([n], jnp.int32))
-        self.prefill_dispatches += 1
-        self.caches = self._scatter(self.caches, pcaches,
-                                    jnp.asarray(slot, jnp.int32))
+        if req.t_arrival is None:
+            req.t_arrival = time.perf_counter()
+        matched: List[int] = []
+        n_cached = 0
+        if self._reuse_ok:
+            matched, n_cached = self.pool.match_prefix(req.prompt)
+        need = self._blocks_needed(n) - len(matched)
+        if not self.pool.can_allocate(need):
+            self.pool.release(matched)       # registered -> back to the LRU
+            return None
+        blocks = matched + self.pool.allocate(need)
+        self.pool.note_reuse(len(matched))
+        table = BlockTable(blocks, n_reused=len(matched))
         self.slots[slot] = req
+        self.ready[slot] = False
+        self.positions[slot] = 0
+        self.tables[slot] = table
+        return PrefillJob(req=req, slot=slot, table=table, off=n_cached)
+
+    def prefill_chunk(self, job: PrefillJob) -> bool:
+        """Dispatch ONE fixed-shape prefill chunk.  Returns True when the
+        prompt is fully prefilled (first token emitted, slot generating)."""
+        req, slot = job.req, job.slot
+        n = len(req.prompt)
+        c = self.sc.prefill_chunk
+        clen = min(c, n - job.off)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :clen] = req.prompt[job.off:job.off + clen]
+        bt = job.table.as_array(self.pages)[None]
+        nxt, self.caches = self._chunk(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(bt),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(job.off, jnp.int32),
+            jnp.asarray(clen, jnp.int32))
+        self.prefill_dispatches += 1
+        job.off += clen
+        if job.off < n:
+            return False
+        # final chunk: its row clen-1 is the prompt's last position
         self.positions[slot] = n
+        self.ready[slot] = True
         req.output.append(int(np.asarray(nxt)[0, 0]))
+        req.t_first_token = time.perf_counter()
+        if self._reuse_ok:
+            # now-immutable FULL prompt blocks become reusable by later
+            # admissions (the trailing partial block keeps growing under
+            # decode — never shared)
+            self.pool.register(
+                job.table.blocks[:n // self.sc.block_size], req.prompt)
         self._finish_if_done(slot)
         return True
 
+    def admit(self, req: Request) -> bool:
+        """Synchronous admission: reserve, then run every prefill chunk
+        back-to-back (O(n/C) dispatches of the one chunk program).  The
+        scheduler path (``serve``) interleaves chunks with decode instead.
+        Returns False when no slot or insufficient pool blocks are free."""
+        job = self.begin_admission(req)
+        if job is None:
+            return False
+        while not self.prefill_chunk(job):
+            pass
+        return True
+
+    # --------------------------------------------------------------- decode
     def _finish_if_done(self, i: int) -> Optional[Request]:
         req = self.slots[i]
         if req is None:
@@ -205,28 +274,37 @@ class Server:
                 or len(req.output) >= self.sc.max_new_tokens
                 or self.positions[i] >= self.sc.max_seq - 1):
             req.done = True
+            req.t_finish = time.perf_counter()
+            self.pool.release(self.tables[i].blocks)
+            self.tables[i] = None
+            self.ready[i] = False
             self.slots[i] = None
             self.positions[i] = 0
             return req
         return None
 
     def step(self) -> List[Request]:
-        """One decode step for every active slot — each at its OWN position.
-        Returns the requests that finished on this step."""
-        if not any(s is not None for s in self.slots):
+        """One decode step for every GENERATING slot — each at its own
+        position through its own block-table row.  Mid-prefill slots pass
+        zero rows (null-block writes) and are skipped on readback."""
+        if not any(self.ready):
             return []
-        toks = np.zeros((self.sc.max_batch, 1), np.int32)
+        b = self.sc.max_batch
+        toks = np.zeros((b, 1), np.int32)
+        bts = np.zeros((b, self.pages), np.int32)
         for i, req in enumerate(self.slots):
-            if req is not None and req.output:
+            if req is not None and self.ready[i]:
                 toks[i, 0] = req.output[-1]
+                bts[i] = self.tables[i].as_array(self.pages)
         nxt, self.caches = self._decode(self.params, self.caches,
                                         jnp.asarray(toks),
-                                        jnp.asarray(self.positions))
+                                        jnp.asarray(self.positions),
+                                        jnp.asarray(bts))
         self.decode_dispatches += 1
         nxt = np.asarray(nxt)
         finished: List[Request] = []
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not self.ready[i]:
                 continue
             req.output.append(int(nxt[i, 0]))
             self.positions[i] += 1
@@ -236,36 +314,18 @@ class Server:
         return finished
 
     def serve(self, requests: List[Request]) -> List[Request]:
-        """Run a request queue to completion.  Completion is tracked by rid
-        (each finished request drains exactly once — O(1) per step, no
-        full-queue rescans)."""
-        pending = deque(requests)
+        """Run a request queue to completion through the chunk scheduler.
+        Completion is tracked by rid (each finished request drains exactly
+        once)."""
+        from repro.runtime.scheduler import ChunkScheduler
+        sched = ChunkScheduler(self)
+        for req in requests:
+            sched.submit(req)
         done: List[Request] = []
         done_rids = set()
-
-        def drain(req: Optional[Request]) -> None:
-            if req is not None and req.rid not in done_rids:
-                done_rids.add(req.rid)
-                done.append(req)
-
-        while pending or any(s is not None for s in self.slots):
-            while pending:
-                try:
-                    admitted = self.admit(pending[0])
-                except ValueError as e:
-                    # unadmittable request (e.g. prompt >= max_seq): reject
-                    # it gracefully and keep serving — one bad prompt must
-                    # not kill every other in-flight request
-                    req = pending.popleft()
-                    req.done = True
-                    req.error = str(e)
-                    drain(req)
-                    continue
-                if not admitted:
-                    break
-                req = pending.popleft()
-                if req.done:                  # finished at admission (EOS /
-                    drain(req)                # max_new_tokens == 1)
-            for fin in self.step():
-                drain(fin)
+        while sched.has_work():
+            for fin in sched.tick():
+                if fin.rid not in done_rids:
+                    done_rids.add(fin.rid)
+                    done.append(fin)
         return done

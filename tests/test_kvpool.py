@@ -1,0 +1,132 @@
+"""KVPool allocator unit tests: refcounts, hash-chain prefix matching, LRU
+eviction, and the null-block / capacity invariants the server relies on.
+Pure host-side — no jax arrays move through the pool."""
+import pytest
+
+from repro.runtime.kvpool import BlockTable, KVPool, PoolExhausted
+
+
+def test_null_block_reserved():
+    pool = KVPool(num_blocks=5, block_size=4)
+    got = pool.allocate(4)                 # the whole usable pool
+    assert 0 not in got
+    assert sorted(got) == [1, 2, 3, 4]
+    with pytest.raises(ValueError):
+        KVPool(num_blocks=1, block_size=4)
+
+
+def test_allocate_release_refcounts():
+    pool = KVPool(num_blocks=8, block_size=4)
+    a = pool.allocate(3)
+    assert pool.blocks_in_use == 3
+    assert pool.available() == 4
+    pool.release(a)
+    assert pool.blocks_in_use == 0
+    assert pool.available() == 7
+    assert pool.peak_blocks_in_use == 3
+    with pytest.raises(PoolExhausted):
+        pool.allocate(8)
+
+
+def test_block_table_array_pads_with_null():
+    bt = BlockTable([3, 5], n_reused=1)
+    arr = bt.as_array(pages=4)
+    assert arr.tolist() == [3, 5, 0, 0]
+    assert arr.dtype.name == "int32"
+
+
+def test_longest_prefix_match_and_cap():
+    pool = KVPool(num_blocks=16, block_size=4)
+    toks = list(range(100, 112))                     # 3 full blocks
+    blocks = pool.allocate(3)
+    pool.register(blocks, toks)
+    # identical prompt: cap at len-1 -> only 2 of 3 blocks match (the last
+    # position must recompute so admission emits a first token)
+    got, n = pool.match_prefix(toks)
+    assert got == blocks[:2] and n == 8
+    pool.release(got)
+    # longer prompt sharing the prefix: all 3 registered blocks match
+    got, n = pool.match_prefix(toks + [7, 8])
+    assert got == blocks and n == 12
+    pool.release(got)
+    # diverging block 2: chain key mismatch stops the walk
+    got, n = pool.match_prefix(toks[:8] + [0, 0, 0, 0, 9])
+    assert got == blocks[:2] and n == 8
+    pool.release(got)
+    # no match at all
+    got, n = pool.match_prefix([1, 2, 3, 4, 5])
+    assert got == [] and n == 0
+
+
+def test_match_counts_only_on_note_reuse():
+    pool = KVPool(num_blocks=8, block_size=2)
+    blocks = pool.allocate(2)
+    pool.register(blocks, [5, 6, 7, 8])
+    got, n = pool.match_prefix([5, 6, 7, 8, 9])
+    assert (len(got), n) == (2, 4)
+    assert pool.reuse_hits == 0 and pool.reused_tokens == 0
+    pool.note_reuse(len(got))
+    assert pool.reuse_hits == 1 and pool.reused_tokens == 4
+    pool.note_reuse(0)                     # a no-reuse admission: no count
+    assert pool.reuse_hits == 1
+
+
+def test_shared_block_refcount():
+    pool = KVPool(num_blocks=8, block_size=2)
+    owner = pool.allocate(1)
+    pool.register(owner, [1, 2])
+    got, _ = pool.match_prefix([1, 2, 3])
+    assert got == owner and pool.blocks_in_use == 1
+    pool.release(owner)                    # original owner frees
+    assert pool.blocks_in_use == 1         # sharer still holds it
+    got2, _ = pool.match_prefix([1, 2, 9])
+    assert got2 == owner                   # still matchable while shared
+    pool.release(got)
+    pool.release(got2)
+    assert pool.blocks_in_use == 0
+
+
+def test_release_to_lru_and_resurrection():
+    pool = KVPool(num_blocks=4, block_size=2)
+    blocks = pool.allocate(2)
+    pool.register(blocks, [1, 2, 3, 4])
+    pool.release(blocks)
+    assert pool.blocks_in_use == 0
+    assert pool.available() == 3           # cached prefixes count as free
+    got, n = pool.match_prefix([1, 2, 3, 4, 5])    # resurrect from LRU
+    assert got == blocks and n == 4
+    assert pool.blocks_in_use == 2
+    assert pool.evictions == 0
+
+
+def test_lru_eviction_order_and_unmatchability():
+    pool = KVPool(num_blocks=4, block_size=2)      # 3 usable blocks
+    a = pool.allocate(1)
+    pool.register(a, [1, 2])
+    b = pool.allocate(1)
+    pool.register(b, [3, 4])
+    pool.release(a)                        # a freed first -> evicted first
+    pool.release(b)
+    c = pool.allocate(2)                   # 1 free + 1 evicted (a)
+    assert pool.evictions == 1
+    assert a[0] in c
+    got, _ = pool.match_prefix([1, 2, 9])  # a's key is gone
+    assert got == []
+    got, _ = pool.match_prefix([3, 4, 9])  # b survives, resurrectable
+    assert got == b
+    pool.release(got)
+    pool.release(c)
+
+
+def test_register_dedup_racing_prompts():
+    pool = KVPool(num_blocks=8, block_size=2)
+    first = pool.allocate(1)
+    second = pool.allocate(1)
+    pool.register(first, [1, 2])
+    pool.register(second, [1, 2])          # same content: first one wins
+    got, _ = pool.match_prefix([1, 2, 3])
+    assert got == first
+    pool.release(got)
+    pool.release(first + second)
+    # the loser is NOT registered -> releases straight to the free list
+    assert pool.available() == 7

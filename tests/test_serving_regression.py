@@ -14,7 +14,13 @@ The concurrency test serves staggered-length prompts together and demands
 token-identical outputs to serving each request alone — it FAILS on the
 original Server.  The per-family test checks pos-vector ``decode_step``
 against length-masked ``prefill_step`` cache equivalence.
+
+The paged-runtime tests extend the same identity bar to the block-table
+cache: outputs must be bit-identical under CHUNKED prefill, prefix block
+REUSE, and LRU EVICTION, and a shared-prefix admission must skip the
+reused blocks' recompute entirely (asserted via dispatch + pool counters).
 """
+import dataclasses
 import functools
 
 import jax
@@ -44,7 +50,11 @@ def served():
     par = ParallelConfig(tp=1, dp=1)
     mesh = _mesh()
     params = M.init_model(jax.random.PRNGKey(0), cfg, par)
-    sc = ServeConfig(max_batch=3, max_seq=64, eos_token=-1, max_new_tokens=6)
+    # block_size/prefill_chunk = 8 so the 9- and 14-token prompts span
+    # multiple blocks AND multiple chunks — the staggered-identity bar
+    # covers the paged chunked-prefill path, not just decode
+    sc = ServeConfig(max_batch=3, max_seq=64, eos_token=-1, max_new_tokens=6,
+                     block_size=8, prefill_chunk=8)
     rng = np.random.default_rng(7)
     prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
                for n in (3, 9, 14)]
@@ -67,13 +77,15 @@ def test_staggered_concurrent_matches_isolated(served):
     assert concurrent == isolated
 
 
-def test_admit_is_one_prefill_dispatch(served):
-    """Admission = ONE batched prefill_step dispatch + zero decode steps,
-    regardless of prompt length (the seed looped decode_step per token)."""
+def test_admit_is_chunked_prefill_dispatches(served):
+    """Admission = ceil(n / prefill_chunk) dispatches of the ONE compiled
+    chunk program + zero decode steps, regardless of prompt length (the
+    seed looped decode_step per token; the bucketed rewrite recompiled a
+    jit per power-of-two length)."""
     cfg, par, mesh, params, sc, prompts, *_ = served
     srv = Server(cfg, par, mesh, params, sc)
-    assert srv.admit(Request(rid=0, prompt=prompts[2]))   # 14 tokens
-    assert srv.prefill_dispatches == 1
+    assert srv.admit(Request(rid=0, prompt=prompts[2]))   # 14 tokens, C=8
+    assert srv.prefill_dispatches == 2
     assert srv.decode_dispatches == 0
     assert srv.positions[0] == len(prompts[2])
 
@@ -117,6 +129,69 @@ def test_admission_preserves_other_slots(served):
     while not short.done:
         srv.step()
     assert list(short.output) == isolated[0]
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache regressions: prefix reuse, eviction, pool footprint
+# ---------------------------------------------------------------------------
+def test_shared_prefix_admit_skips_recompute(served):
+    """A second admission of an identical prompt must REUSE the registered
+    full prompt blocks: prefill resumes at the first unmatched position
+    (fewer chunk dispatches), the pool counts the reused tokens, and the
+    generated tokens are identical to the cold admission's."""
+    cfg, par, mesh, params, sc, *_ = served
+    sc2 = dataclasses.replace(sc, block_size=4)
+    srv = Server(cfg, par, mesh, params, sc2)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, size=(19,)).astype(np.int32)
+    first = srv.serve([Request(rid=0, prompt=prompt)])[0]
+    d0 = srv.prefill_dispatches
+    assert d0 == 3                                 # ceil(19 / 8) cold chunks
+    second = srv.serve([Request(rid=1, prompt=prompt.copy())])[0]
+    # 4 full blocks (16 tokens) reused -> prefill resumes at off=16:
+    # ONE chunk covers the remaining 3 positions
+    assert srv.prefill_dispatches - d0 == 1
+    assert srv.pool.reuse_hits == 1
+    assert srv.pool.reused_tokens == 16
+    assert list(second.output) == list(first.output)
+
+
+def test_reuse_and_eviction_token_identity(served):
+    """Token identity must survive reuse AND eviction: a tight pool forces
+    freed prefixes out of the cache while later admissions race for the
+    space.  Every request — including a repeat of an evicted prompt — must
+    match a solo server exactly."""
+    cfg, par, mesh, params, sc, *_ = served
+    # 10 usable blocks; each 12-token request reserves 5 -> two in flight
+    # fill the pool and the third admission must evict freed prefixes
+    sc2 = dataclasses.replace(sc, max_batch=2, block_size=4, num_blocks=11)
+    rng = np.random.default_rng(13)
+    uniq = [rng.integers(0, cfg.vocab_size, size=(12,)).astype(np.int32)
+            for _ in range(3)]
+    prompts = uniq + [uniq[0].copy()]    # tail repeat: prefix likely evicted
+    srv = Server(cfg, par, mesh, params, sc2)
+    done = srv.serve([Request(rid=i, prompt=p)
+                      for i, p in enumerate(prompts)])
+    assert srv.pool.evictions > 0
+    concurrent = {r.rid: list(r.output) for r in done}
+    solo = {}
+    for i, p in enumerate(uniq):
+        ref = Server(cfg, par, mesh, params, sc2).serve(
+            [Request(rid=0, prompt=p)])[0]
+        solo[i] = list(ref.output)
+    assert concurrent[0] == solo[0]
+    assert concurrent[1] == solo[1]
+    assert concurrent[2] == solo[2]
+    assert concurrent[3] == solo[0]      # repeat == original, evicted or not
+
+
+def test_pool_footprint_below_dense(served):
+    """The mixed-length workload must pin fewer physical blocks than the
+    dense [max_batch, max_seq] cache it replaces."""
+    cfg, par, mesh, params, sc, prompts, *_ = served
+    srv = Server(cfg, par, mesh, params, sc)
+    srv.serve([Request(rid=i, prompt=p) for i, p in enumerate(prompts)])
+    assert 0 < srv.pool.peak_blocks_in_use < srv.dense_equiv_blocks
 
 
 # ---------------------------------------------------------------------------
