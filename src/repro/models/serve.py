@@ -13,7 +13,10 @@ Continuous-batching contract (what the runtime Server relies on):
   position (per-row ``dynamic_update_slice``), so slots at staggered
   sequence positions decode together in one fixed-shape dispatch without
   touching each other's cache rows.  A scalar ``pos`` still broadcasts (all
-  rows in lockstep — the bench/smoke path).
+  rows in lockstep — the bench/smoke path).  The optional ``active: [B]``
+  bool mask freezes the dense recurrent-state rows (Mamba conv/SSM, RWKV
+  wkv/shift) of non-generating slots — the server passes its ready mask so
+  a slot mid-chunked-prefill survives the interleaved full-batch decodes.
 * ``prefill_step`` takes optional ``lengths: [B]`` — per-row true prompt
   lengths of a RIGHT-PADDED token batch.  Attention families are pad-safe
   by causality; the state families (Mamba SSM/conv, RWKV WKV/token-shift)
@@ -190,28 +193,59 @@ def _ffn_decode(kind: str, p: Dict, x: Array, cache: Dict, ctx,
     raise ValueError(kind)
 
 
+def _freeze_inactive(new: Dict, old: Dict, active) -> Dict:
+    """Mask a dense per-slot cache write-back to the ACTIVE rows only.  The
+    state families (Mamba conv/SSM, RWKV wkv/token-shift) rewrite every
+    batch row unconditionally, so a slot that is mid-prefill (its chunked
+    prefill threads state across dispatches) or empty must get its rows
+    restored — the dense analogue of the paged attention caches'
+    null-block redirect."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)),
+                               n, o.astype(n.dtype)),
+        new, old)
+
+
 def _block_decode(kind_pair, lp: Dict, lc: Dict, x: Array, pos, ctx, cfg,
-                  par: ParallelConfig, z3=None, layer=None, bt=None):
+                  par: ParallelConfig, z3=None, layer=None, bt=None,
+                  active=None):
     lp = _maybe_gather_zero3(lp, par, z3)
     ctx = ctx.with_layer(layer)
     dy, mc = _mixer_decode(kind_pair[0], lp["mixer"], x, lc["mixer"], pos,
                            ctx, cfg, bt=bt)
+    if active is not None and (kind_pair[0] in (MAMBA, RWKV) or bt is None):
+        # paged attention pools ([num_blocks, ...]) are already protected
+        # by the null-block redirect; every dense [B, ...] cache needs the
+        # row mask
+        mc = _freeze_inactive(mc, lc["mixer"], active)
     x = x + dy
     dy, fc = _ffn_decode(kind_pair[1], lp["ffn"], x, lc["ffn"], ctx, cfg)
+    if active is not None and kind_pair[1] == RWKV:
+        fc = _freeze_inactive(fc, lc["ffn"], active)
     return x + dy, {"mixer": mc, "ffn": fc}
 
 
 def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
                 ctx: TPContext, cfg: ModelConfig, par: ParallelConfig,
-                block_tables=None):
+                block_tables=None, active=None):
     """One greedy decode step.  tokens: [B_loc, 1] int32; pos: [B_loc] int32
     per-slot write positions (a scalar broadcasts to all rows).  With
     ``block_tables`` ([B_loc, pages] int32) the attention caches are paged
     pools and each row reads/writes through its own table (all-zero rows
-    redirect to the null block — inactive slots are harmless).  Returns
-    (next_token [B_loc,1], new caches)."""
+    redirect to the null block — inactive slots are harmless).
+
+    ``active`` ([B_loc] bool, optional): rows that are actually GENERATING.
+    Inactive rows keep their dense per-slot state caches (Mamba conv/SSM,
+    RWKV wkv/token-shift ``last``) bit-untouched — without the mask a
+    full-batch decode would advance a mid-prefill slot's chunk-threaded
+    recurrent state with garbage pad-token input.  Attention pool leaves
+    need no masking (null-block redirect); omitting ``active`` keeps the
+    legacy all-rows-advance behavior.  Returns (next_token [B_loc,1], new
+    caches)."""
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
                            (tokens.shape[0],))
+    if active is not None:
+        active = jnp.asarray(active, bool).reshape(-1)
     # decode ALWAYS runs the replicated activation layout: a one-token
     # "sequence" cannot shard, and the decode seams are kind="ar"
     ctx = ctx.with_layout(False)
@@ -227,7 +261,7 @@ def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
         x, nc = _block_decode(pat[i], params["lead"][i], caches["lead"][i],
                               x, pos, ctx, cfg, par,
                               z3["lead"][i] if z3["lead"] else None, layer=i,
-                              bt=block_tables)
+                              bt=block_tables, active=active)
         new_caches["lead"].append(nc)
 
     def period_body(x, xs):
@@ -237,7 +271,8 @@ def decode_step(params: Dict, caches: Dict, tokens: Array, pos,
             x, nc = _block_decode(kp, stacked_p[p_i], stacked_c[p_i], x, pos,
                                   ctx, cfg, par,
                                   z3["periods"][p_i] if z3["periods"] else None,
-                                  layer=lead + p_i, bt=block_tables)
+                                  layer=lead + p_i, bt=block_tables,
+                                  active=active)
             ncs.append(nc)
         return x, tuple(ncs)
 

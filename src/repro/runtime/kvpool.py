@@ -125,7 +125,10 @@ class KVPool:
             got.append(bid)
         for bid in got:
             self._acquire(bid)
-        self._track_peak()
+        # peak_blocks_in_use is NOT updated here: a failed admission
+        # releases these blocks again, and counting them would overstate
+        # the concurrent footprint.  ``allocate`` / ``note_reuse`` track
+        # the peak once the admission's full block set is committed.
         return got, len(got) * self.block_size
 
     def note_reuse(self, n_blocks: int) -> None:
@@ -133,6 +136,7 @@ class KVPool:
         if n_blocks > 0:
             self.reuse_hits += 1
             self.reused_tokens += n_blocks * self.block_size
+        self._track_peak()
 
     def _acquire(self, bid: int) -> None:
         if bid in self._ref:

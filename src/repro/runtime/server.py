@@ -151,14 +151,14 @@ class Server:
     def _make_decode(self):
         ctx, cfg, par = self.ctx, self.cfg, self.par
 
-        def fn(params, caches, tokens, pos, bt):
+        def fn(params, caches, tokens, pos, bt, active):
             return S.decode_step(params, caches, tokens, pos, ctx, cfg, par,
-                                 block_tables=bt)
+                                 block_tables=bt, active=active)
 
         sm = compat.shard_map(
             fn, mesh=self.mesh,
             in_specs=(self.pspecs, self.cache_specs, P(None, None), P(None),
-                      P(None, None)),
+                      P(None, None), P(None)),
             out_specs=(P(None, None), self.cache_specs),
             check_vma=False)
         return jax.jit(sm, donate_argnums=(1,))
@@ -286,20 +286,26 @@ class Server:
     def step(self) -> List[Request]:
         """One decode step for every GENERATING slot — each at its own
         position through its own block-table row.  Mid-prefill slots pass
-        zero rows (null-block writes) and are skipped on readback."""
+        zero rows (attention writes land in the null block) and a False
+        ``active`` flag (their dense Mamba/RWKV state rows — threaded
+        across prefill chunks — stay frozen), and are skipped on
+        readback."""
         if not any(self.ready):
             return []
         b = self.sc.max_batch
         toks = np.zeros((b, 1), np.int32)
         bts = np.zeros((b, self.pages), np.int32)
+        active = np.zeros((b,), bool)
         for i, req in enumerate(self.slots):
             if req is not None and self.ready[i]:
+                active[i] = True
                 toks[i, 0] = req.output[-1]
                 bts[i] = self.tables[i].as_array(self.pages)
         nxt, self.caches = self._decode(self.params, self.caches,
                                         jnp.asarray(toks),
                                         jnp.asarray(self.positions),
-                                        jnp.asarray(bts))
+                                        jnp.asarray(bts),
+                                        jnp.asarray(active))
         self.decode_dispatches += 1
         nxt = np.asarray(nxt)
         finished: List[Request] = []

@@ -19,6 +19,10 @@ The paged-runtime tests extend the same identity bar to the block-table
 cache: outputs must be bit-identical under CHUNKED prefill, prefix block
 REUSE, and LRU EVICTION, and a shared-prefix admission must skip the
 reused blocks' recompute entirely (asserted via dispatch + pool counters).
+Hybrid archs additionally demand that decode steps interleaved with a
+slot's chunked prefill leave its Mamba/RWKV recurrent state untouched
+(``decode_step``'s ``active`` row freeze — the dense-state analogue of the
+attention null-block redirect).
 """
 import dataclasses
 import functools
@@ -129,6 +133,36 @@ def test_admission_preserves_other_slots(served):
     while not short.done:
         srv.step()
     assert list(short.output) == isolated[0]
+
+
+@pytest.mark.parametrize("arch", ["jamba_v01_52b", "rwkv6_3b"])
+def test_hybrid_state_survives_interleaved_decode(arch):
+    """Scheduler-path token identity for the STATE families: the
+    ChunkScheduler runs one prefill chunk per tick interleaved with a
+    full-batch decode of every generating slot, so a Mamba/RWKV slot that
+    is BETWEEN prefill chunks sees decode dispatches while its recurrent
+    state is threaded across chunks.  Those decodes must not advance the
+    mid-prefill slot's dense conv/ssm/wkv/shift state (attention caches
+    are null-block protected; the state rows need ``decode_step``'s
+    ``active`` freeze — this test fails without it)."""
+    cfg = get_smoke_config(arch)
+    par = ParallelConfig(tp=1, dp=1)
+    mesh = _mesh()
+    params = M.init_model(jax.random.PRNGKey(0), cfg, par)
+    # chunk=4: the 14-token prompt prefills over 4 ticks, each followed by
+    # a decode step of the already-generating 3-token slot
+    sc = ServeConfig(max_batch=2, max_seq=64, eos_token=-1, max_new_tokens=5,
+                     block_size=4, prefill_chunk=4)
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in (3, 14)]
+    srv = Server(cfg, par, mesh, params, sc)
+    concurrent = {r.rid: list(r.output) for r in srv.serve(
+        [Request(rid=i, prompt=p) for i, p in enumerate(prompts)])}
+    for i, p in enumerate(prompts):
+        solo = Server(cfg, par, mesh, params, sc).serve(
+            [Request(rid=i, prompt=p)])[0]
+        assert concurrent[i] == list(solo.output), f"rid {i} diverged"
 
 
 # ---------------------------------------------------------------------------
