@@ -52,7 +52,8 @@ def main(full: bool = False) -> None:
         doc["seams"].append({
             "seam": "mlp_ag", "kind": res.kind,
             "m": res.m, "n": res.n, "k": res.k, "n_dev": res.n_dev,
-            "source": res.source, "plan": plan.to_json(),
+            "source": res.source, "pruned": res.pruned,
+            "plan": plan.to_json(),
             "candidates": [dict(r, blocks=list(r["blocks"]) if r["blocks"]
                                 else None) for r in res.table],
         })
@@ -97,7 +98,8 @@ def main(full: bool = False) -> None:
         "seam": "mlp_ag_gated", "kind": res_g.kind, "m": res_g.m,
         "n": res_g.n, "k": res_g.k, "n_dev": res_g.n_dev,
         "n_weights": 2, "epilogue": True,
-        "source": res_g.source, "plan": pg.to_json(),
+        "source": res_g.source, "pruned": res_g.pruned,
+        "plan": pg.to_json(),
         "candidates": [dict(r, blocks=list(r["blocks"]) if r["blocks"]
                             else None) for r in res_g.table],
     })
@@ -149,7 +151,8 @@ def main(full: bool = False) -> None:
     doc["seams"].append({
         "seam": "decode_ar", "kind": res_ar.kind, "m": res_ar.m,
         "n": res_ar.n, "k": res_ar.k, "n_dev": res_ar.n_dev,
-        "source": res_ar.source, "plan": res_ar.plan.to_json(),
+        "source": res_ar.source, "pruned": res_ar.pruned,
+        "plan": res_ar.plan.to_json(),
         "candidates": [dict(r, blocks=list(r["blocks"]) if r["blocks"]
                             else None) for r in res_ar.table],
     })
@@ -184,7 +187,8 @@ def main(full: bool = False) -> None:
         "seam": "moe_a2a", "kind": res_a2a.kind, "m": res_a2a.m,
         "n": res_a2a.n, "k": res_a2a.k, "n_dev": res_a2a.n_dev,
         "n_weights": 3, "epilogue": True,
-        "source": res_a2a.source, "plan": pa.to_json(),
+        "source": res_a2a.source, "pruned": res_a2a.pruned,
+        "plan": pa.to_json(),
         "candidates": [dict(r, blocks=list(r["blocks"]) if r["blocks"]
                             else None) for r in res_a2a.table],
     })

@@ -1,14 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 gate: static contracts (lint + jaxpr seam checks) + full
+# Tier-1 gate: static contracts (lint + kernel + jaxpr seam checks) + full
 # correctness suite.
 #
 # Usage:  scripts/verify.sh [--lint|--fast|--jax-min] [extra pytest args]
 #
 #   --lint     run ONLY the static-contract checker
 #              (python -m repro.analysis.check) — AST lint over
-#              src/ benchmarks/ examples/ tests/ plus the jaxpr seam
-#              contracts for every config x both residual layouts.
-#              No pytest; finishes in well under a minute.
+#              src/ benchmarks/ examples/ tests/, the Pallas kernel
+#              contracts (repro.analysis.kernelcheck: semaphore balance,
+#              DMA/slot races, ring arithmetic, tile coverage, VMEM
+#              budgets — every kernel x both ring directions), plus the
+#              jaxpr seam contracts for every config x both residual
+#              layouts.  No pytest; finishes in well under a minute.
 #   --fast     skip the multi-device subprocess sweeps (tests marked
 #              ``multidev`` — everything that spawns a fresh python with
 #              forced host devices).  Quick iteration tier; the FULL suite
@@ -22,7 +25,9 @@
 #
 # The static checker replaced the old grep-lint gates: the standing source
 # rules (compat-import, private-backend, removed-wrapper, raw-collective,
-# bare-shard-map) are AST checks in repro.analysis.lint, and the seam
+# bare-shard-map, stale-allow) are AST checks in repro.analysis.lint, the
+# in-kernel DMA/semaphore/ring/coverage/budget protocol is verified on
+# abstract per-rank grid traces in repro.analysis.kernelcheck, and the seam
 # invariants (collective census with ring provenance, partial-cotangent
 # completion, layout coherence) are verified on ABSTRACT jaxpr traces in
 # repro.analysis.seamcheck — no devices, no execution.
@@ -50,12 +55,12 @@ export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "$LINT_ONLY" == 1 ]]; then
-  echo "== static contracts (repro.analysis.check: lint + seam invariants) =="
+  echo "== static contracts (repro.analysis.check: lint + kernel + seam invariants) =="
   python -m repro.analysis.check "$@"
   exit 0
 fi
 
-echo "== static contracts (repro.analysis.check: lint + seam invariants) =="
+echo "== static contracts (repro.analysis.check: lint + kernel + seam invariants) =="
 python -m repro.analysis.check
 
 echo "== MoE a2a seam: census provenance on both transports =="
@@ -89,6 +94,12 @@ print("moe a2a census ok: both layouts x both transports")
 EOF
 
 if [[ "$JAX_MIN" == 1 ]]; then
+  echo "== Pallas kernel contracts (repro.analysis.check --kernels) =="
+  # first gate of the floor lane too: the kernel protocol (semaphore
+  # balance, DMA races, ring arithmetic, coverage, budgets) is
+  # JAX-version independent — it must hold before any compat test runs
+  python -m repro.analysis.check --kernels -q
+
   echo "== compat contract tests at the 0.4.30 floor (REPRO_COMPAT_ASSUME_JAX) =="
   REPRO_COMPAT_ASSUME_JAX=0.4.30 python -m pytest -x -q tests/test_compat.py "$@"
   REPRO_COMPAT_ASSUME_JAX=0.4.30 python - <<'EOF'
@@ -140,6 +151,25 @@ modes = {c["mode"] for c in a2a_seams[0]["candidates"]}
 assert {"xla", "decomposed"} <= modes, modes
 print(f"BENCH_tuning.json moe a2a ok: {len(chunks)} chunk rows, "
       f"pick={a2a_seams[0]['plan']['mode']}")
+EOF
+  echo "== BENCH_tuning.json static tile-budget pruning rows =="
+  python - <<'EOF'
+import json
+from repro.analysis.kernelcheck import tile_budget_ok
+doc = json.load(open("experiments/BENCH_tuning.json"))
+assert doc["seams"], "no planner rows in BENCH_tuning.json"
+for s in doc["seams"]:
+    # every planner row reports how many flux tilings the static VMEM
+    # budget rejected before pricing, and no surviving candidate carries
+    # an infeasible tiling (autotune never times what kernelcheck rejects)
+    assert "pruned" in s, f"seam row missing pruned count: {s['seam']}"
+    assert s["pruned"] >= 0, s
+    for c in s["candidates"]:
+        if c["mode"] == "flux" and c.get("blocks"):
+            assert tile_budget_ok(s["kind"], tuple(c["blocks"])), \
+                (s["seam"], c["blocks"], "infeasible tiling in the table")
+print(f"BENCH_tuning.json pruning ok: {len(doc['seams'])} seam rows, "
+      f"pruned={[s['pruned'] for s in doc['seams']]}")
 EOF
   exit 0
 fi

@@ -1,17 +1,24 @@
 """``python -m repro.analysis.check`` — the repo's static-contract gate.
 
-Two passes, both CPU-only and execution-free:
+Three passes, all CPU-only and execution-free:
 
-- ``--lint``   AST lint over src/ benchmarks/ examples/ tests/
-               (``repro.analysis.lint``) — seconds.
-- ``--seams``  jaxpr-level seam contracts (``repro.analysis.seamcheck``):
-               abstract fwd+bwd / prefill / decode traces for every config
-               x both residual layouts, collective census with ring
-               provenance, cotangent-completion matrix, layout coherence.
+- ``--lint``     AST lint over src/ benchmarks/ examples/ tests/
+                 (``repro.analysis.lint``) — seconds.
+- ``--kernels``  Pallas kernel contracts (``repro.analysis.kernelcheck``):
+                 abstract per-rank grid traces of every registered flux /
+                 attention kernel x both ring directions x config-derived
+                 shape cells — semaphore balance, DMA/slot race freedom,
+                 ring arithmetic vs the overlap.py reference schedule,
+                 exactly-once tile coverage, VMEM/SMEM tile budgets.
+- ``--seams``    jaxpr-level seam contracts (``repro.analysis.seamcheck``):
+                 abstract fwd+bwd / prefill / chunked-prefill / decode
+                 traces for every config x both residual layouts,
+                 collective census with ring provenance,
+                 cotangent-completion matrix, layout coherence.
 
-No flags runs both.  ``--configs a b`` restricts the seam pass.
-Exit status 0 = all contracts hold; 1 = violations (each printed as an
-actionable report line).
+No flags runs all three (lint -> kernels -> seams).  ``--configs a b``
+restricts the kernel and seam passes.  Exit status 0 = all contracts hold;
+1 = violations (each printed as an actionable report line).
 """
 from __future__ import annotations
 
@@ -22,13 +29,15 @@ import sys
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.check",
-        description="static seam-contract + lint checker")
+        description="static kernel-, seam-contract + lint checker")
     ap.add_argument("--lint", action="store_true",
                     help="run only the AST lint pass")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run only the Pallas kernel-contract pass")
     ap.add_argument("--seams", action="store_true",
                     help="run only the jaxpr seam-contract pass")
     ap.add_argument("--configs", nargs="*", default=None,
-                    help="restrict the seam pass to these config names")
+                    help="restrict the kernel/seam passes to these configs")
     ap.add_argument("--layouts", nargs="*", default=("seq", "hidden"),
                     choices=("seq", "hidden"))
     ap.add_argument("--mode", default="decomposed",
@@ -37,8 +46,10 @@ def main(argv=None) -> int:
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    run_lint = args.lint or not args.seams
-    run_seams = args.seams or not args.lint
+    explicit = args.lint or args.kernels or args.seams
+    run_lint = args.lint or not explicit
+    run_kernels = args.kernels or not explicit
+    run_seams = args.seams or not explicit
     log = (lambda *_: None) if args.quiet else print
     failures = 0
 
@@ -49,6 +60,17 @@ def main(argv=None) -> int:
         for v in vs:
             print(f"  {v}")
         failures += len(vs)
+
+    if run_kernels:
+        from repro.analysis import kernelcheck
+        log("[kernels] tracing Pallas grid programs (abstract, no devices)"
+            "...")
+        errs = kernelcheck.run_kernel_checks(config_names=args.configs,
+                                             log=log)
+        log(f"[kernels] {len(errs)} violation(s)")
+        for e in errs:
+            print(f"  {e}")
+        failures += len(errs)
 
     if run_seams:
         from repro.analysis import seamcheck

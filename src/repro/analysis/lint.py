@@ -26,20 +26,30 @@ and adds two rules greps could not express without false positives:
 - ``bare-shard-map``    ``shard_map`` obtained from ``jax`` directly
                         instead of ``repro.compat`` (signature moved
                         across jax versions).
+- ``stale-allow``       a ``# lint: allow(<rule>)`` escape that suppresses
+                        NOTHING (the violation moved or was fixed, or the
+                        rule name is unknown).  Stale escapes rot silently
+                        as code moves and then mask real violations later;
+                        each one is reported at its comment line.
 
 Per-line escape: ``# lint: allow(<rule>)`` on the offending line or the
-line directly above it.
+line directly above it.  Escapes are extracted from real COMMENT tokens
+(``tokenize``), so escape-shaped text inside string literals — docstrings,
+subprocess source in tests — neither suppresses a finding nor counts as a
+stale escape.
 """
 from __future__ import annotations
 
 import ast
 import dataclasses
+import io
 import re
+import tokenize
 from pathlib import Path
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Set, Tuple
 
 RULES = ("compat-import", "private-backend", "removed-wrapper",
-         "raw-collective", "bare-shard-map")
+         "raw-collective", "bare-shard-map", "stale-allow")
 
 LINT_SCOPE = ("src", "benchmarks", "examples", "tests")
 
@@ -51,6 +61,7 @@ _ALLOWED = {
     "raw-collective": ("src/repro/core/overlap.py",
                        "src/repro/parallel/sharding.py"),
     "bare-shard-map": ("src/repro/compat/",),
+    "stale-allow": (),
 }
 
 _PRIVATE_BACKENDS = {
@@ -81,16 +92,39 @@ def _is_private_backend(name: str) -> bool:
     return name in _PRIVATE_BACKENDS or bool(_PRIVATE_BACKEND_RE.match(name))
 
 
+def _escape_comments(source: str) -> List[Tuple[int, Set[str]]]:
+    """One ``(line, {rules})`` entry per ACTUAL escape comment.
+
+    Extracted from ``tokenize`` COMMENT tokens so escape-shaped text inside
+    string literals (docstrings, subprocess source embedded in tests) is
+    invisible — it neither suppresses a finding nor shows up as a stale
+    escape.  Unparseable sources fall back to the line regex (the AST pass
+    reports them separately anyway)."""
+    entries: List[Tuple[int, Set[str]]] = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                m = _ESCAPE_RE.search(tok.string)
+                if m:
+                    entries.append((tok.start[0],
+                                    {r.strip()
+                                     for r in m.group(1).split(",")}))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        for i, text in enumerate(source.splitlines(), start=1):
+            m = _ESCAPE_RE.search(text)
+            if m:
+                entries.append((i, {r.strip()
+                                    for r in m.group(1).split(",")}))
+    return entries
+
+
 def _escapes(source: str):
     """line -> set of escaped rules (an escape covers its line AND the
     next one, so it can sit above a long call)."""
-    out = {}
-    for i, text in enumerate(source.splitlines(), start=1):
-        m = _ESCAPE_RE.search(text)
-        if m:
-            rules = {r.strip() for r in m.group(1).split(",")}
-            out.setdefault(i, set()).update(rules)
-            out.setdefault(i + 1, set()).update(rules)
+    out: dict = {}
+    for i, rules in _escape_comments(source):
+        out.setdefault(i, set()).update(rules)
+        out.setdefault(i + 1, set()).update(rules)
     return out
 
 
@@ -183,6 +217,37 @@ class _Visitor(ast.NodeVisitor):
         self.generic_visit(node)
 
 
+def _stale_escape_violations(relpath: str, source: str,
+                             raw: List[Violation]) -> List[Violation]:
+    """``stale-allow``: escape comments that suppress nothing.
+
+    An escape rule at comment line ``i`` is USED iff some raw finding of
+    that rule sits on line ``i`` or ``i+1`` (the escape's coverage
+    window).  Unknown rule names are always stale — they can never
+    suppress anything.  ``stale-allow`` itself is exempt from the
+    staleness check (it exists only to suppress findings OF this rule,
+    which are emitted at the comment line and filtered by the normal
+    escape pass)."""
+    hit_lines = {(f.line, f.rule) for f in raw}
+    out: List[Violation] = []
+    for line, rules in _escape_comments(source):
+        for rule in sorted(rules):
+            if rule == "stale-allow":
+                continue
+            if rule not in RULES:
+                out.append(Violation(
+                    relpath, line, "stale-allow",
+                    f"# lint: allow({rule}) names an unknown rule — "
+                    f"known rules: {', '.join(RULES)}"))
+            elif not ((line, rule) in hit_lines
+                      or (line + 1, rule) in hit_lines):
+                out.append(Violation(
+                    relpath, line, "stale-allow",
+                    f"# lint: allow({rule}) suppresses no {rule} "
+                    "violation — stale escape; remove it"))
+    return out
+
+
 def lint_source(source: str, relpath: str) -> List[Violation]:
     try:
         tree = ast.parse(source, filename=relpath)
@@ -192,7 +257,8 @@ def lint_source(source: str, relpath: str) -> List[Violation]:
     v = _Visitor(relpath)
     v.visit(tree)
     esc = _escapes(source)
-    return [f for f in v.found if f.rule not in esc.get(f.line, ())]
+    found = v.found + _stale_escape_violations(relpath, source, v.found)
+    return [f for f in found if f.rule not in esc.get(f.line, ())]
 
 
 def lint_file(path: Path, root: Path) -> List[Violation]:

@@ -1,5 +1,9 @@
 """Roofline report generator: reads experiments/dryrun/*.json and emits the
-EXPERIMENTS.md §Dry-run / §Roofline tables."""
+EXPERIMENTS.md §Dry-run / §Roofline tables.
+
+``--static`` instead runs the three static-contract passes (AST lint,
+Pallas kernel contracts, jaxpr seam contracts) and emits the one-table
+summary — kernelcheck results alongside lint/seamcheck."""
 from __future__ import annotations
 
 import argparse
@@ -66,11 +70,59 @@ def summary(cells: List[Dict]) -> Dict:
     return {"ok": len(ok), "skipped": len(skips), "dominant": doms}
 
 
+def static_contracts_summary(config_names=None) -> Dict:
+    """Run all three static passes and return per-pass scope + counts.
+
+    The kernel pass is the new first-class citizen: every registered
+    Pallas kernel x both ring directions x config-derived shape cells,
+    checked on abstract per-rank grid traces (semaphore balance, DMA/slot
+    races, ring arithmetic, tile coverage, VMEM/SMEM budgets)."""
+    from repro.analysis import kernelcheck, lint, seamcheck
+    lint_vs = lint.lint_tree()
+    cases = [c for b in kernelcheck._REGISTRY for c in b(config_names)]
+    kern_errs: List[str] = []
+    for c in cases:
+        kern_errs.extend(kernelcheck.check_case(c))
+    seam_errs = seamcheck.run_seam_checks(config_names=config_names)
+    n_cfg = len(config_names if config_names
+                else seamcheck.discover_configs())
+    return {
+        "lint": {"scope": f"{'/'.join(lint.LINT_SCOPE)} "
+                          f"({len(lint.RULES)} rules)",
+                 "violations": [str(v) for v in lint_vs]},
+        "kernels": {"scope": f"{len(cases)} kernel cases "
+                             "(kernels x ring dirs x shape cells)",
+                    "violations": kern_errs},
+        "seams": {"scope": f"{n_cfg} configs x seq/hidden layouts",
+                  "violations": seam_errs},
+    }
+
+
+def static_rows(summary: Dict) -> List[str]:
+    return [f"| {name} | {s['scope']} | {len(s['violations'])} |"
+            for name, s in summary.items()]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--static", action="store_true",
+                    help="summarize the static-contract passes "
+                         "(lint / kernels / seams) instead of the roofline")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="restrict the kernel/seam passes (with --static)")
     args = ap.parse_args()
+    if args.static:
+        s = static_contracts_summary(args.configs)
+        print("| pass | scope | violations |")
+        print("|---|---|---|")
+        for r in static_rows(s):
+            print(r)
+        for name, sec in s.items():
+            for e in sec["violations"]:
+                print(f"  [{name}] {e}")
+        return
     cells = load_cells(args.dir)
     print("| arch | shape | compute | memory | collective | useful | "
           "dominant | comp/roof | XLA temp/dev |")

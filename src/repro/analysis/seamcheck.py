@@ -490,6 +490,37 @@ def trace_decode(cfg, par, plans, tp: int = 4, b: int = 2, s_max: int = 64,
         params_l, caches_l, tokens, pos)
 
 
+def trace_prefill_chunk(cfg, par, plans, tp: int = 4, b: int = 2,
+                        s_max: int = 64, chunk: int = 16):
+    """Chunked-prefill census lane: one fixed-shape ``[1, chunk]`` admission
+    chunk through the block-table paged pools (``serve.prefill_chunk_step``
+    with traced int32 slot/off/chunk_len scalars — the single jit program
+    the serving runtime dispatches O(n/C) times per prompt).
+
+    Chunked admission ALWAYS runs the replicated activation layout (like
+    decode): a bounded C-row chunk has no sequence-parallel residency to
+    win, so its collectives must be kind="ar" seams only — no ppermute
+    rings, no sequence reduce_scatter."""
+    from repro.models import serve as S
+    sizes = {"data": 1, "model": tp}
+    params_l = _local_params(cfg, par, sizes)
+    bs = 8
+    pages = s_max // bs
+    csds, cspec = S.paged_cache_specs(cfg, par, b * pages + 1, bs, b)
+    caches_l = _local_sds(csds, cspec, sizes)
+    tokens = jax.ShapeDtypeStruct((1, chunk), jnp.int32)
+    bt = jax.ShapeDtypeStruct((1, pages), jnp.int32)   # ONE slot's table row
+    scal = jax.ShapeDtypeStruct((), jnp.int32)
+    ctx = _ctx_for(cfg, par, plans)
+
+    def step(p, c, t, bt_, slot, off, clen):
+        return S.prefill_chunk_step(p, c, t, bt_, slot, off, clen,
+                                    ctx, cfg, par)
+
+    return jax.make_jaxpr(step, axis_env=[("data", 1), ("model", tp)])(
+        params_l, caches_l, tokens, bt, scal, scal, scal)
+
+
 # ---------------------------------------------------------------------------
 # Contract 3: layout coherence
 # ---------------------------------------------------------------------------
@@ -598,7 +629,17 @@ def check_config(name: str, layout: str, mode: str = "decomposed",
         pgc = collect_collectives(paged)
         errs += [f"{prefix}/decode-paged: {e}"
                  for e in census_errors(pgc, "model", threshold)]
-        dc = list(dc) + list(pgc)
+        # chunked-prefill admission rides the SAME replicated-layout
+        # contract as decode: census over one [1, chunk] chunk dispatch
+        # (threshold = the full chunk activation), then the decode-side
+        # layout rules (no ppermute, no sequence reduce_scatter)
+        chunk = max(s // 4, 1)
+        ckc = collect_collectives(trace_prefill_chunk(
+            cfg, par_d, plans, tp=tp, b=b, s_max=s, chunk=chunk))
+        errs += [f"{prefix}/prefill-chunk: {e}"
+                 for e in census_errors(ckc, "model",
+                                        chunk * cfg.d_model)]
+        dc = list(dc) + list(pgc) + list(ckc)
 
     errs += [f"{prefix}: {e}"
              for e in layout_errors(tc, dc, layout, mode, threshold)]

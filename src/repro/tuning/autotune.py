@@ -63,6 +63,8 @@ class TuneResult:
     plan: SeamPlan
     table: List[Dict]                 # one row per candidate (see tune_seam)
     source: str                       # measured | analytic
+    pruned: int = 0                   # flux tilings rejected by the static
+    #                                   VMEM budget before pricing/timing
 
 
 def _ring_chunk_options(n_dev: int) -> Tuple[int, ...]:
@@ -148,6 +150,30 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
             seen.add(key)
             uniq.append(c)
     return uniq
+
+
+def prune_infeasible(kind: str, cands: List[Candidate],
+                     *, dtype_bytes: int = 2, epilogue: bool = False
+                     ) -> Tuple[List[Candidate], List[Candidate]]:
+    """(kept, pruned): drop flux candidates whose static VMEM footprint the
+    ``kernelcheck`` tile-budget model rejects.  Runs BEFORE any pricing or
+    timing — ``ect`` never models an infeasible tiling and the measured
+    path never compiles one (ISSUE 9 satellite: the sweep previously timed
+    arbitrary ``bm/bk/bn`` with no validity filter)."""
+    if kind not in ("ag", "rs"):
+        return list(cands), []
+    from repro.analysis.kernelcheck import tile_budget_ok   # lazy: no cycle
+    keep: List[Candidate] = []
+    pruned: List[Candidate] = []
+    for c in cands:
+        if (c.mode == "flux" and c.blocks is not None
+                and not tile_budget_ok(kind, tuple(c.blocks),
+                                       dtype_bytes=dtype_bytes,
+                                       has_bias=epilogue)):
+            pruned.append(c)
+        else:
+            keep.append(c)
+    return keep, pruned
 
 
 def analytic_estimate(kind: str, m: int, n: int, k: int, n_dev: int,
@@ -321,6 +347,9 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
                                                                  allow_flux),
                                 n_weights=n_weights, epilogue=epilogue,
                                 scatter_axis=scatter_axis)
+        cands, dropped = prune_infeasible(kind, cands,
+                                          dtype_bytes=dtype_bytes,
+                                          epilogue=epilogue)
         table = []
         for c in cands:
             fn, args = _bench_callable(kind, m, n, k, n_dev, c, dtype,
@@ -335,6 +364,9 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
                                 allow_q8=allow_q8, modes=modes,
                                 n_weights=n_weights, epilogue=epilogue,
                                 scatter_axis=scatter_axis)
+        cands, dropped = prune_infeasible(kind, cands,
+                                          dtype_bytes=dtype_bytes,
+                                          epilogue=epilogue)
         table = [row(c) for c in cands]
         best = min(table, key=lambda r: r["predicted_s"])
         source = "analytic"
@@ -354,7 +386,8 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
                     source=source, predicted_s=best["predicted_s"],
                     measured_s=best["measured_s"]).validate()
     return TuneResult(seam=seam or kind, kind=kind, m=m, n=n, k=k,
-                      n_dev=n_dev, plan=plan, table=table, source=source)
+                      n_dev=n_dev, plan=plan, table=table, source=source,
+                      pruned=len(dropped))
 
 
 # ---------------------------------------------------------------------------

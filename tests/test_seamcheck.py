@@ -191,6 +191,31 @@ def test_one_config_seam_contracts_clean():
         assert seamcheck.check_config("minicpm_2b", layout) == []
 
 
+def test_chunked_prefill_census_lane():
+    # the serving admission path (prefill_chunk_step: [1, C] tokens +
+    # traced slot/off/chunk_len scalars over the paged pools) is census'd
+    # like decode: replicated layout, every full-chunk collective
+    # seam-tagged, no ppermute ring / sequence reduce_scatter
+    from repro.configs.base import ParallelConfig, get_smoke_config
+    from repro.tuning.plans import PlanSet
+
+    cfg = get_smoke_config("minicpm_2b")
+    par = ParallelConfig(tp=TP, dp=1, overlap_mode="decomposed",
+                         scatter_axis="hidden")
+    plans = PlanSet.uniform("decomposed").with_scatter_axis("hidden")
+    chunk = 16
+    jx = seamcheck.trace_prefill_chunk(cfg, par, plans, tp=TP, b=2,
+                                       s_max=64, chunk=chunk)
+    cs = seamcheck.collect_collectives(jx)
+    assert cs, "chunked prefill admission must trace collectives"
+    big = [c for c in cs if c.elems >= chunk * cfg.d_model]
+    assert big, "no full-chunk collective traced (threshold too high?)"
+    assert all(c.seam_tagged for c in big), \
+        [c.describe() for c in big if not c.seam_tagged]
+    assert seamcheck.census_errors(cs, "model", chunk * cfg.d_model) == []
+    assert seamcheck.layout_errors([], cs, "hidden", "decomposed") == []
+
+
 # ---------------------------------------------------------------------------
 # lint fixtures
 # ---------------------------------------------------------------------------
@@ -246,10 +271,34 @@ def test_lint_raw_collective_rule_and_escape():
                  "  # lint: allow(raw-collective)\n") == []
     assert _lint("# lint: allow(raw-collective)\n"
                  "y = lax.ppermute(x, 'model', p)\n") == []
-    # escape for one rule does not silence another
+    # escape for one rule does not silence another — and since the
+    # raw-collective escape suppresses nothing here, it is itself stale
     assert [v.rule for v in _lint(
         "y = ag_matmul(x)  # lint: allow(raw-collective)\n")] == \
-        ["removed-wrapper"]
+        ["removed-wrapper", "stale-allow"]
+
+
+def test_lint_stale_allow_rule():
+    # an escape that suppresses nothing is a violation at its comment line
+    vs = _lint("x = 1  # lint: allow(raw-collective)\n")
+    assert [v.rule for v in vs] == ["stale-allow"]
+    assert vs[0].line == 1 and "suppresses no raw-collective" in vs[0].message
+    # unknown rule names can never suppress anything
+    vs = _lint("x = 1  # lint: allow(not-a-rule)\n")
+    assert [v.rule for v in vs] == ["stale-allow"]
+    assert "unknown rule" in vs[0].message
+    # a USED escape is not stale (coverage window: its line and the next)
+    assert _lint("# lint: allow(raw-collective)\n"
+                 "y = lax.ppermute(x, 'model', p)\n") == []
+    # escape-shaped text inside a string literal is NOT an escape: it
+    # neither suppresses a finding nor counts as stale (tokenize comments)
+    assert _lint("s = '# lint: allow(raw-collective)'\n") == []
+    vs = _lint("s = 'x  # lint: allow(raw-collective)'\n"
+               "y = lax.ppermute(x, 'model', p)\n")
+    assert [v.rule for v in vs] == ["raw-collective"]
+    # the stale-allow finding itself honors the escape mechanism
+    assert _lint(
+        "x = 1  # lint: allow(raw-collective, stale-allow)\n") == []
 
 
 def test_lint_clean_tree():
