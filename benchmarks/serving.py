@@ -101,11 +101,12 @@ def _stats(xs):
 
 
 def bench_mode(mode, cfg, params, mesh, sc, reqs_factory, offsets, tp,
-               slo_ttft_s):
+               slo_ttft_s, wire_dtype=None):
     from repro.configs.base import ParallelConfig
     from repro.runtime.server import Server
 
-    par = ParallelConfig(tp=tp, dp=1, overlap_mode=mode)
+    par = ParallelConfig(tp=tp, dp=1, overlap_mode=mode,
+                         wire_dtype=wire_dtype)
     server = Server(cfg, par, mesh, params, sc)
     server.serve(reqs_factory())       # warmup: compiles + registers prefixes
     d0, p0 = server.decode_dispatches, server.prefill_dispatches
@@ -120,6 +121,7 @@ def bench_mode(mode, cfg, params, mesh, sc, reqs_factory, offsets, tp,
     tpots = [r.per_token_s() for r in ok]
     return {
         "mode": mode,
+        "wire_dtype": wire_dtype,
         "tokens_per_s": new_tokens / wall,
         "wall_s": wall,
         "new_tokens": new_tokens,
@@ -200,20 +202,29 @@ def main(full: bool = False, smoke: bool = False, arch: str = "minicpm_2b",
            "arrival_rate_rps": rate, "slo_ttft_s": slo_ttft,
            "block_size": block, "prefill_chunk": chunk, "modes": []}
     ref_outputs = None
-    for mode in MODES:
+    # the wire lane rides decomposed with the int8 forward-wire transport:
+    # serving has no backward, so the wire IS the whole quantization story
+    # there.  Its outputs are allowed to drift (lossy wire); the fp-wire
+    # mode lanes must still match each other exactly.
+    lanes = [(mode, None) for mode in MODES] + [("decomposed", "int8")]
+    for mode, wire in lanes:
         row = bench_mode(mode, cfg, params, mesh, sc, reqs_factory, offsets,
-                         tp, slo_ttft)
+                         tp, slo_ttft, wire_dtype=wire)
         outputs = row.pop("outputs")
-        # overlap modes are numerics-preserving: serving outputs must not
-        # depend on the seam transport
-        row["outputs_match_reference"] = (ref_outputs is None
-                                          or outputs == ref_outputs)
-        ref_outputs = ref_outputs or outputs
+        # fp-wire overlap modes are numerics-preserving: serving outputs
+        # must not depend on the seam transport
+        if wire is None:
+            row["outputs_match_reference"] = (ref_outputs is None
+                                              or outputs == ref_outputs)
+            ref_outputs = ref_outputs or outputs
+        else:
+            row["outputs_match_fp_wire"] = outputs == ref_outputs
         doc["modes"].append(row)
+        tag = f"{mode}_wire-{wire}" if wire else mode
         us_per_tok = 1e6 * row["wall_s"] / max(row["new_tokens"], 1)
-        print(f"serving_{mode}_tp{tp}_b{max_batch},{us_per_tok:.0f},"
+        print(f"serving_{tag}_tp{tp}_b{max_batch},{us_per_tok:.0f},"
               f"{row['tokens_per_s']:.1f}")
-        print(f"serving_{mode}_ttft_p99,{1e6 * row['ttft_s']['p99']:.0f},"
+        print(f"serving_{tag}_ttft_p99,{1e6 * row['ttft_s']['p99']:.0f},"
               f"{row['slo']['attainment']:.2f}")
 
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)

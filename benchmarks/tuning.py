@@ -2,10 +2,11 @@
 
 Exercises the REAL tuner (``repro.tuning.autotune``): per GEMM shape it
 enumerates the full candidate space — every overlap mode (including
-``decomposed_bidir`` and the ``*_q8`` int8-gather variants), comm-tile
-counts, and ring directions — scores each candidate (measured jit sweeps on
-real multi-device hardware; ``core.ect`` roofline on this CI container), and
-reports the winner.
+``decomposed_bidir``), comm-tile counts, ring directions, and the
+wire-precision sweep (fp / int8 / fp8_e4m3 / int4 forward-wire transports
+under the default logit-RMSE error budget) — scores each candidate
+(measured jit sweeps on real multi-device hardware; ``core.ect`` roofline
+on this CI container), and reports the winner.
 
 CSV: name,us_per_call,derived  (derived = modeled overall ms, or the
 winning mode for planner-pick rows).
@@ -192,6 +193,57 @@ def main(full: bool = False) -> None:
         "candidates": [dict(r, blocks=list(r["blocks"]) if r["blocks"]
                             else None) for r in res_a2a.table],
     })
+
+    # Wire-precision sweep: per seam kind the tuner re-prices every
+    # candidate under each wire dtype (bytes-on-wire shrink + scale
+    # overhead + pack/unpack cost in the ect roofline) and only lets a
+    # quantized wire win when its estimated logit deviation fits the
+    # default error budget.  One row per candidate: wire_dtype,
+    # comm_bytes (bytes on the wire), predicted/measured time,
+    # logit_rmse, within_budget — the machine-readable record verify.sh
+    # asserts on (>= 1 seam must show an in-budget low-precision win).
+    from repro.tuning.autotune import WIRE_DTYPE_SWEEP
+    from repro.tuning.error_budget import DEFAULT_MAX_LOGIT_RMSE
+    doc["wire"] = {"max_logit_rmse": DEFAULT_MAX_LOGIT_RMSE, "seams": []}
+    wire_sweeps = (
+        ("mlp_ag", "ag", 4096, n, k, {}),
+        ("mlp_rs", "rs", 4096, k, n, {}),
+        ("decode_ar", "ar", 128, 12288, 49152, {}),
+        ("moe_a2a", "a2a", ma, na, ka, {}),
+    )
+    any_win = False
+    for seam, kind, wm, wn, wk, extra in wire_sweeps:
+        res_w = autotune.tune_seam(kind, wm, wn, wk, N_TP, seam=seam,
+                                   wire_dtypes=WIRE_DTYPE_SWEEP,
+                                   max_logit_rmse=DEFAULT_MAX_LOGIT_RMSE,
+                                   **extra)
+        score = lambda r: r["measured_s"] or r["predicted_s"]  # noqa: E731
+        for wd in WIRE_DTYPE_SWEEP:
+            rows = [r for r in res_w.table if r["wire_dtype"] == wd]
+            if not rows:
+                continue
+            best = min(rows, key=score)
+            print(f"tuning_wire_{seam}_{wd or 'fp'},{score(best)*1e6:.0f},"
+                  f"rmse={best['logit_rmse']:.4f}"
+                  f"{'' if best['within_budget'] else '(REJECTED)'}")
+        fp_best = min(score(r) for r in res_w.table
+                      if r["wire_dtype"] is None)
+        q_rows = [r for r in res_w.table
+                  if r["wire_dtype"] and r["within_budget"]]
+        win = bool(q_rows) and min(score(r) for r in q_rows) < fp_best
+        any_win = any_win or win
+        pw = res_w.plan
+        print(f"tuning_wire_{seam}_pick_{pw.mode}_{pw.wire_dtype or 'fp'},"
+              f"{(pw.measured_s or pw.predicted_s)*1e6:.0f},{res_w.source}")
+        doc["wire"]["seams"].append({
+            "seam": seam, "kind": kind, "m": wm, "n": wn, "k": wk,
+            "n_dev": N_TP, "source": res_w.source,
+            "quantized_win_within_budget": win,
+            "plan": pw.to_json(),
+            "rows": [dict(r, blocks=list(r["blocks"]) if r["blocks"]
+                          else None) for r in res_w.table],
+        })
+    doc["wire"]["any_quantized_win"] = any_win
 
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as f:

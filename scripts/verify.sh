@@ -171,6 +171,49 @@ for s in doc["seams"]:
 print(f"BENCH_tuning.json pruning ok: {len(doc['seams'])} seam rows, "
       f"pruned={[s['pruned'] for s in doc['seams']]}")
 EOF
+  echo "== BENCH_tuning.json wire-precision sweep rows =="
+  python - <<'EOF'
+import json
+doc = json.load(open("experiments/BENCH_tuning.json"))
+wire = doc.get("wire", {})
+seams = wire.get("seams", [])
+assert seams, "BENCH_tuning.json has no wire-precision sweep rows"
+budget = wire["max_logit_rmse"]
+assert budget > 0, wire
+kinds = {s["kind"] for s in seams}
+assert {"ag", "rs", "ar", "a2a"} <= kinds, kinds
+for s in seams:
+    dtypes = {r["wire_dtype"] for r in s["rows"]}
+    assert None in dtypes and "int8" in dtypes, (s["seam"], dtypes)
+    for r in s["rows"]:
+        # every row: bytes on the wire, a time estimate, and its
+        # deviation vs the accuracy budget
+        assert r["comm_bytes"] >= 0, (s["seam"], r)
+        assert (r["measured_s"] or r["predicted_s"]) > 0, (s["seam"], r)
+        assert r["logit_rmse"] >= 0, (s["seam"], r)
+        assert r["within_budget"] == (r["logit_rmse"] <= budget), \
+            (s["seam"], r, "within_budget disagrees with the budget")
+        if r["wire_dtype"] is None:
+            assert r["logit_rmse"] == 0.0, (s["seam"], r)
+    # the CHOSEN plan never violates its accuracy budget
+    assert s["plan"]["logit_rmse"] <= budget, (s["seam"], s["plan"])
+    # quantized rows shrink bytes-on-wire vs the fp wire of the same mode
+    for r in s["rows"]:
+        if r["wire_dtype"] is None or r["comm_bytes"] == 0:
+            continue
+        fp = [f for f in s["rows"] if f["wire_dtype"] is None
+              and f["mode"] == r["mode"]
+              and f["comm_chunks"] == r["comm_chunks"]
+              and f["reverse"] == r["reverse"]
+              and f["scatter_axis"] == r["scatter_axis"]]
+        assert fp and r["comm_bytes"] < fp[0]["comm_bytes"], (s["seam"], r)
+assert wire["any_quantized_win"], \
+    "no seam shows an in-budget low-precision wire beating the fp wire"
+picks = {s["seam"]: (s["plan"]["mode"], s["plan"]["wire_dtype"])
+         for s in seams}
+print(f"BENCH_tuning.json wire sweep ok: {len(seams)} seams, "
+      f"budget={budget}, picks={picks}")
+EOF
   exit 0
 fi
 
@@ -198,6 +241,8 @@ assert doc["arrival_rate_rps"] > 0, "smoke bench must run open-loop traffic"
 assert doc["slo_ttft_s"] > 0, doc
 rows = doc["modes"]
 assert len(rows) >= 2, f"need >= 2 overlap modes, got {len(rows)}"
+assert any(r.get("wire_dtype") for r in rows), \
+    "serving bench must include a quantized-wire lane"
 for r in rows:
     assert r["tokens_per_s"] > 0 and r["new_tokens"] > 0, r
     # chunked admission: at least one chunk dispatch per request, never a
@@ -214,8 +259,16 @@ for r in rows:
     pool = r["pool"]
     assert 0 < pool["blocks_in_use_peak"] < pool["dense_equiv_blocks"], \
         f"paged pool must beat the dense-cache footprint: {pool}"
-    assert r["outputs_match_reference"], \
-        f"overlap mode {r['mode']} changed serving outputs"
+    if r.get("wire_dtype"):
+        # lossy wire: outputs may drift at tp > 1; at tp = 1 every seam
+        # takes the single-shard fallback so nothing rides the wire
+        assert "outputs_match_fp_wire" in r, r["mode"]
+        if doc["tp"] == 1:
+            assert r["outputs_match_fp_wire"], \
+                "tp=1 has no wire transport — outputs must match"
+    else:
+        assert r["outputs_match_reference"], \
+            f"overlap mode {r['mode']} changed serving outputs"
 print("BENCH_serving.json ok:",
       ", ".join(f"{r['mode']}={r['tokens_per_s']:.0f} tok/s "
                 f"ttft_p99={r['ttft_s']['p99'] * 1e3:.1f}ms" for r in rows))

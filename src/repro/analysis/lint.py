@@ -26,6 +26,12 @@ and adds two rules greps could not express without false positives:
 - ``bare-shard-map``    ``shard_map`` obtained from ``jax`` directly
                         instead of ``repro.compat`` (signature moved
                         across jax versions).
+- ``deprecated-q8-mode`` the legacy ``*_q8`` mode spellings ("xla_q8",
+                        "decomposed_q8") are a compatibility shim — spell
+                        the wire as ``wire_dtype="int8"`` on the base mode
+                        instead.  Docstring constants are exempt (prose may
+                        document the deprecation); ``core/overlap.py`` owns
+                        the shim itself.
 - ``stale-allow``       a ``# lint: allow(<rule>)`` escape that suppresses
                         NOTHING (the violation moved or was fixed, or the
                         rule name is unknown).  Stale escapes rot silently
@@ -49,7 +55,8 @@ from pathlib import Path
 from typing import List, Optional, Sequence, Set, Tuple
 
 RULES = ("compat-import", "private-backend", "removed-wrapper",
-         "raw-collective", "bare-shard-map", "stale-allow")
+         "raw-collective", "bare-shard-map", "deprecated-q8-mode",
+         "stale-allow")
 
 LINT_SCOPE = ("src", "benchmarks", "examples", "tests")
 
@@ -61,20 +68,26 @@ _ALLOWED = {
     "raw-collective": ("src/repro/core/overlap.py",
                        "src/repro/parallel/sharding.py"),
     "bare-shard-map": ("src/repro/compat/",),
+    "deprecated-q8-mode": ("src/repro/core/overlap.py",),
     "stale-allow": (),
 }
 
 _PRIVATE_BACKENDS = {
     "_ag_ring", "_ag_bidir", "_rs_ring", "_rs_bidir", "_rs_core",
-    "_ar_core", "_fused_impl", "_fused_ag", "_fused_bwd", "_gather_full",
-    "_ring_gather", "_q8_encode", "_q8_decode",
+    "_ar_core", "_ar_ring_quant", "_fused_impl", "_fused_ag", "_fused_bwd",
+    "_gather_full", "_ring_gather", "_q8_encode", "_q8_decode",
+    "_wire_hop", "_int4_pack", "_int4_unpack",
 }
+# built without spelling the deprecated suffix as one literal (this file
+# lints itself)
+_Q8_SUFFIX = "_q" + "8"
+_Q8_BASES = ("xla", "decomposed")
 _PRIVATE_BACKEND_RE = re.compile(
     r"^_(ag_matmul|matmul_ar|matmul_rs)_(xla|decomposed|bidir|flux|impl)")
 _REMOVED_WRAPPERS = {"ag_matmul", "matmul_rs", "matmul_ar"}
 _RAW_COLLECTIVES = {"ppermute", "all_gather", "all_to_all", "psum_scatter"}
 _COMPILER_PARAMS = {"TPUCompilerParams", "CompilerParams"}
-_ESCAPE_RE = re.compile(r"#\s*lint:\s*allow\(([a-z-]+(?:\s*,\s*[a-z-]+)*)\)")
+_ESCAPE_RE = re.compile(r"#\s*lint:\s*allow\(([a-z0-9-]+(?:\s*,\s*[a-z0-9-]+)*)\)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,11 +145,36 @@ class _Visitor(ast.NodeVisitor):
     def __init__(self, relpath: str):
         self.relpath = relpath
         self.found: List[Violation] = []
+        self._doc_nodes: Set[int] = set()
 
     def _hit(self, node, rule: str, message: str):
         if any(a in self.relpath for a in _ALLOWED.get(rule, ())):
             return
         self.found.append(Violation(self.relpath, node.lineno, rule, message))
+
+    # ---- docstrings (exempt from the constant rules) ----------------------
+    def _mark_docstring(self, node):
+        body = getattr(node, "body", [])
+        if (body and isinstance(body[0], ast.Expr)
+                and isinstance(body[0].value, ast.Constant)
+                and isinstance(body[0].value.value, str)):
+            self._doc_nodes.add(id(body[0].value))
+
+    def visit_Module(self, node):
+        self._mark_docstring(node)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):
+        self._mark_docstring(node)
+        self.generic_visit(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._mark_docstring(node)
+        self.generic_visit(node)
+
+    def visit_ClassDef(self, node):
+        self._mark_docstring(node)
+        self.generic_visit(node)
 
     # ---- imports ----------------------------------------------------------
     def visit_Import(self, node):
@@ -214,6 +252,18 @@ class _Visitor(ast.NodeVisitor):
                       f"raw {base_name}.{name} outside the seam layer — "
                       "route through core/overlap.py or "
                       "parallel/sharding.py (or tag + escape)")
+        self.generic_visit(node)
+
+    # ---- constants --------------------------------------------------------
+    def visit_Constant(self, node):
+        v = node.value
+        if (isinstance(v, str) and v.endswith(_Q8_SUFFIX)
+                and v[:-len(_Q8_SUFFIX)] in _Q8_BASES
+                and id(node) not in self._doc_nodes):
+            base = v[:-len(_Q8_SUFFIX)]
+            self._hit(node, "deprecated-q8-mode",
+                      f"deprecated mode spelling {v!r} — use "
+                      f"mode={base!r} with wire_dtype='int8'")
         self.generic_visit(node)
 
 

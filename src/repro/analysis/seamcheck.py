@@ -317,11 +317,16 @@ def check_cotangent_completion(fn, args: Sequence, ct, *,
 
 
 def fusedop_cotangent_errors(tp: int = 4, modes: Sequence[str] = (
-        "decomposed", "xla")) -> List[str]:
+        "decomposed", "xla"),
+        wire_dtypes: Sequence[Optional[str]] = (None, "int8")) -> List[str]:
     """The completion matrix over every FusedOp (kind, layout): replicated
     outputs (ar, rs/hidden) must complete their cotangent; rank-exclusive
     outputs (seq seams, ag/hidden's partial dx, the a2a exchange's routed
-    rows and local-expert weights) must not."""
+    rows and local-expert weights) must not.  The matrix sweeps
+    ``wire_dtypes`` too — quantization is forward-wire-only, so a
+    quantized transport must keep the SAME completion contract as its fp
+    twin (a wire that altered the cotangent path is exactly the bug this
+    matrix exists to catch)."""
     from repro.core.overlap import Epilogue, FusedOp
 
     b, s, d, f = 2, 16, 16, 32
@@ -337,21 +342,23 @@ def fusedop_cotangent_errors(tp: int = 4, modes: Sequence[str] = (
     env = [("model", tp)]
     errs: List[str] = []
     for mode in modes:
-        for kind, lay, xs, wshape, expect in cases:
-            op = FusedOp(kind=kind, axis="model", mode=mode,
-                         scatter_axis=lay)
-            x = jax.ShapeDtypeStruct(xs, jnp.float32)
-            w = jax.ShapeDtypeStruct(wshape, jnp.float32)
+        for wire in wire_dtypes:
+            for kind, lay, xs, wshape, expect in cases:
+                op = FusedOp(kind=kind, axis="model", mode=mode,
+                             scatter_axis=lay, wire_dtype=wire)
+                x = jax.ShapeDtypeStruct(xs, jnp.float32)
+                w = jax.ShapeDtypeStruct(wshape, jnp.float32)
 
-            def fn(x_, w_, op=op):
-                return op(x_, w_)
+                def fn(x_, w_, op=op):
+                    return op(x_, w_)
 
-            ct_aval = jax.make_jaxpr(fn, axis_env=env)(x, w).out_avals[0]
-            ct = jax.ShapeDtypeStruct(ct_aval.shape, ct_aval.dtype)
-            errs.extend(check_cotangent_completion(
-                fn, (x, w), ct, tp_axis="model", axis_env=env,
-                expect_complete=expect,
-                label=f"FusedOp kind={kind} layout={lay} mode={mode}"))
+                ct_aval = jax.make_jaxpr(fn, axis_env=env)(x, w).out_avals[0]
+                ct = jax.ShapeDtypeStruct(ct_aval.shape, ct_aval.dtype)
+                errs.extend(check_cotangent_completion(
+                    fn, (x, w), ct, tp_axis="model", axis_env=env,
+                    expect_complete=expect,
+                    label=(f"FusedOp kind={kind} layout={lay} mode={mode}"
+                           f" wire={wire}")))
     # EP exchange op: dispatch a2a + batched expert SwiGLU + combine a2a in
     # one seam.  Its outputs are rank-exclusive on every path — dx is this
     # rank's own routed rows, and dw is the LOCAL experts' full gradient
@@ -360,23 +367,25 @@ def fusedop_cotangent_errors(tp: int = 4, modes: Sequence[str] = (
     # axis on the cotangent path double-counts.
     e_loc, cap = 2, 4
     for mode in modes:
-        op = FusedOp(kind="a2a", axis=("model",), mode=mode,
-                     epilogue=Epilogue(activation="silu", gate="pair"),
-                     n_weights=3)
-        x = jax.ShapeDtypeStruct((tp, e_loc, cap, d), jnp.float32)
-        w1 = jax.ShapeDtypeStruct((e_loc, d, f), jnp.float32)
-        w3 = jax.ShapeDtypeStruct((e_loc, d, f), jnp.float32)
-        w2 = jax.ShapeDtypeStruct((e_loc, f, d), jnp.float32)
+        for wire in wire_dtypes:
+            op = FusedOp(kind="a2a", axis=("model",), mode=mode,
+                         epilogue=Epilogue(activation="silu", gate="pair"),
+                         n_weights=3, wire_dtype=wire)
+            x = jax.ShapeDtypeStruct((tp, e_loc, cap, d), jnp.float32)
+            w1 = jax.ShapeDtypeStruct((e_loc, d, f), jnp.float32)
+            w3 = jax.ShapeDtypeStruct((e_loc, d, f), jnp.float32)
+            w2 = jax.ShapeDtypeStruct((e_loc, f, d), jnp.float32)
 
-        def a2a_fn(x_, a_, b_, c_, op=op):
-            return op(x_, a_, b_, c_)
+            def a2a_fn(x_, a_, b_, c_, op=op):
+                return op(x_, a_, b_, c_)
 
-        ct_aval = jax.make_jaxpr(a2a_fn, axis_env=env)(
-            x, w1, w3, w2).out_avals[0]
-        ct = jax.ShapeDtypeStruct(ct_aval.shape, ct_aval.dtype)
-        errs.extend(check_cotangent_completion(
-            a2a_fn, (x, w1, w3, w2), ct, tp_axis="model", axis_env=env,
-            expect_complete=False, label=f"FusedOp kind=a2a mode={mode}"))
+            ct_aval = jax.make_jaxpr(a2a_fn, axis_env=env)(
+                x, w1, w3, w2).out_avals[0]
+            ct = jax.ShapeDtypeStruct(ct_aval.shape, ct_aval.dtype)
+            errs.extend(check_cotangent_completion(
+                a2a_fn, (x, w1, w3, w2), ct, tp_axis="model", axis_env=env,
+                expect_complete=False,
+                label=f"FusedOp kind=a2a mode={mode} wire={wire}"))
     return errs
 
 
@@ -532,8 +541,13 @@ def layout_errors(train_colls: Sequence[Collective],
     orders of magnitude under ``min_elems``."""
     big = [c for c in train_colls if c.elems >= min_elems]
     errs = []
+    # "seam_wire"-scoped hops are the quantized transports: a quantized
+    # all-reduce is SPELLED as ppermute rings even under the replicated
+    # layout (psum cannot carry the per-block scales), so the no-ring
+    # layout rules exempt them — they remain seam-tagged and censused.
+    wire_hop = lambda c: "seam_wire" in c.scope  # noqa: E731
     if layout == "hidden":
-        pp = [c for c in big if c.prim == "ppermute"]
+        pp = [c for c in big if c.prim == "ppermute" and not wire_hop(c)]
         for c in pp:
             errs.append("replicated layout must not ride ppermute rings "
                         f"(nothing is sequence-sharded): {c.describe()}")
@@ -551,7 +565,7 @@ def layout_errors(train_colls: Sequence[Collective],
                         f"sequence-sharded layout: {c.describe()}")
     if decode_colls is not None:
         for c in decode_colls:
-            if c.prim == "ppermute":
+            if c.prim == "ppermute" and not wire_hop(c):
                 errs.append("decode must run the replicated layout — no "
                             f"ppermute belongs in it: {c.describe()}")
             if c.prim == "reduce_scatter":
@@ -579,17 +593,24 @@ def discover_configs() -> List[str]:
 
 def check_config(name: str, layout: str, mode: str = "decomposed",
                  tp: int = 4, b: int = 2, s: int = 64,
+                 wire_dtype: Optional[str] = None,
                  log=None) -> List[str]:
     """All three contract families for one config x layout (smoke shapes —
-    the invariants are structural, not size-dependent)."""
+    the invariants are structural, not size-dependent).  ``wire_dtype``
+    stamps a quantized wire onto every plan: the census then runs over the
+    quantized transports, which must stay seam-tagged and layout-correct
+    exactly like their fp twins."""
     import dataclasses as _dc
 
     from repro.configs.base import ParallelConfig, get_smoke_config
     from repro.tuning.plans import PlanSet
 
     cfg = get_smoke_config(name)
-    par = ParallelConfig(tp=tp, dp=1, overlap_mode=mode, scatter_axis=layout)
+    par = ParallelConfig(tp=tp, dp=1, overlap_mode=mode, scatter_axis=layout,
+                         wire_dtype=wire_dtype)
     plans = PlanSet.uniform(mode).with_scatter_axis(layout)
+    if wire_dtype is not None:
+        plans = plans.with_wire_dtype(wire_dtype)
     errs: List[str] = []
     try:
         resolved = plans.residual_layout()
@@ -602,6 +623,8 @@ def check_config(name: str, layout: str, mode: str = "decomposed",
     s_loc = s // tp
     threshold = b * s_loc * cfg.d_model      # the residual shard
     prefix = f"{name}/{layout}"
+    if wire_dtype is not None:
+        prefix += f"/wire-{wire_dtype}"
 
     train = trace_train(cfg, par, plans, tp=tp, b=b, s=s)
     tc = collect_collectives(train)
@@ -670,6 +693,17 @@ def run_seam_checks(config_names: Optional[Sequence[str]] = None,
                 errs.append(             # a finding, not a crash
                     f"{name}/{layout}: trace failed: "
                     f"{type(e).__name__}: {e}")
+    # quantized-wire census spot-check: one representative config, BOTH
+    # layouts, int8 wire — the quantized transports must stay seam-tagged
+    # and layout-correct (structural contracts are wire-invariant, so one
+    # config suffices; the full matrix above stays fp)
+    for layout in layouts:
+        try:
+            errs.extend(check_config(names[0], layout, mode=mode, tp=tp,
+                                     wire_dtype="int8", log=log))
+        except Exception as e:
+            errs.append(f"{names[0]}/{layout}/wire-int8: trace failed: "
+                        f"{type(e).__name__}: {e}")
     cot = fusedop_cotangent_errors(tp=tp)
     if log:
         log(f"  cotangent-completion matrix: "

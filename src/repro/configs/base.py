@@ -140,6 +140,11 @@ class ParallelConfig:
     pp: int = 1                      # pipeline stages (reinterprets pod axis)
     remat: str = "none"              # none | selective | full
     overlap_mode: str = "decomposed" # default seam mode (overlap.VALID_MODES)
+    wire_dtype: Optional[str] = None # forward-wire precision for TP seams
+    #                                  (None | int8 | fp8_e4m3 | int4);
+    #                                  lossy — cotangents never quantized
+    max_logit_rmse: Optional[float] = None  # error budget gating the
+    #                                  autotuner's wire_dtype sweep
     comm_chunks: int = 0             # 0 -> auto (=tp); medium-grained chunking
     plan_profile: Optional[str] = None  # tuned per-seam profile JSON
     #                                  (repro.tuning; stale files are ignored)

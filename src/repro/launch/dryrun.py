@@ -86,7 +86,7 @@ BF16_MOMENT_ARCHS = {"deepseek_v3_671b"}
 
 def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False,
                 overlap_mode: str = "decomposed", opt: str = "",
-                plan_profile: str = None):
+                plan_profile: str = None, wire_dtype: str = None):
     """Public entry: (cfg, shape, par, mesh) for a cell."""
     import dataclasses as _dc
     cfg = get_config(arch)
@@ -94,6 +94,8 @@ def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False,
     par = production_parallel(cfg, multi_pod=multi_pod, kind=shape.kind,
                               overlap_mode=overlap_mode,
                               plan_profile=plan_profile)
+    if wire_dtype:
+        par = _dc.replace(par, wire_dtype=wire_dtype)
     for name in [o for o in opt.split("+") if o]:
         par = _dc.replace(par, **OPT_SETS[name])
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -265,7 +267,7 @@ def reanalyze_cell(path: str) -> None:
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              overlap_mode: str = "decomposed", force: bool = False,
              out_dir: Optional[str] = None, opt: str = "",
-             plan_profile: str = None,
+             plan_profile: str = None, wire_dtype: str = None,
              extra_tag: str = "") -> Dict[str, Any]:
     out_dir = out_dir or OUT_DIR
     os.makedirs(out_dir, exist_ok=True)
@@ -273,6 +275,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     tag = f"{mesh_tag}_{arch}_{shape_name}"
     if overlap_mode != "decomposed":
         tag += f"_{overlap_mode}"
+    if wire_dtype:
+        tag += f"_wire-{wire_dtype}"
     if opt:
         tag += f"_opt-{opt}"
     if extra_tag:
@@ -285,10 +289,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     cfg, shape, par, mesh = input_specs(arch, shape_name,
                                         multi_pod=multi_pod,
                                         overlap_mode=overlap_mode, opt=opt,
-                                        plan_profile=plan_profile)
+                                        plan_profile=plan_profile,
+                                        wire_dtype=wire_dtype)
     result: Dict[str, Any] = {
         "arch": arch, "shape": shape_name, "mesh": mesh_tag,
         "overlap_mode": overlap_mode, "kind": shape.kind, "opt": opt,
+        "wire_dtype": wire_dtype or "",
         "plan_profile": plan_profile or "",
         "chips": int(np.prod(mesh.devices.shape)),
     }
@@ -386,8 +392,12 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--mode", default="decomposed",
-                    choices=["xla", "decomposed", "flux", "xla_q8",
-                             "decomposed_q8", "decomposed_bidir"])
+                    choices=["xla", "decomposed", "flux",
+                             "decomposed_bidir"])
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["int8", "fp8_e4m3", "int4"],
+                    help="forward-wire precision for the TP seams "
+                         "(lossy; cotangents stay full precision)")
     ap.add_argument("--opt", default="", help="named opt set(s), '+'-joined")
     ap.add_argument("--plan-profile", default=None,
                     help="tuned per-seam plan JSON (repro.tuning)")
@@ -422,7 +432,7 @@ def main() -> None:
         try:
             r = run_cell(a, s, multi_pod=mp, overlap_mode=args.mode,
                          opt=args.opt, plan_profile=args.plan_profile,
-                         force=args.force)
+                         wire_dtype=args.wire_dtype, force=args.force)
             if "skipped" in r:
                 print(f"[skip] {tag}: {r['skipped']}")
             elif "error" in r:

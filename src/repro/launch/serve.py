@@ -23,6 +23,13 @@ def main() -> None:
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--mode", default="decomposed")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["int8", "fp8_e4m3", "int4"],
+                    help="forward-wire precision for the TP seams (lossy; "
+                         "serving has no backward, so this is the full "
+                         "quantization story here)")
+    ap.add_argument("--max-logit-rmse", type=float, default=None,
+                    help="error budget for the --autotune wire_dtype sweep")
     ap.add_argument("--plan-profile", default=None,
                     help="tuned per-seam profile JSON (repro.tuning)")
     ap.add_argument("--autotune", action="store_true",
@@ -46,6 +53,8 @@ def main() -> None:
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     par = ParallelConfig(tp=args.tp, dp=args.dp, overlap_mode=args.mode,
+                         wire_dtype=args.wire_dtype,
+                         max_logit_rmse=args.max_logit_rmse,
                          plan_profile=args.plan_profile)
     if args.autotune and args.tp <= 1:
         print("warning: --autotune skipped (tp=1 has no TP seams to tune); "
@@ -54,13 +63,20 @@ def main() -> None:
         import dataclasses
         import os
 
-        from repro.tuning import (PlanRegistry, autotune_model,
-                                  default_plans_dir)
+        from repro.tuning import (WIRE_DTYPE_SWEEP, PlanRegistry,
+                                  autotune_model, default_plans_dir)
         path = args.plan_profile or os.path.join(
             default_plans_dir(), f"{args.arch}_tp{args.tp}.json")
         reg = PlanRegistry.open(path, n_dev=args.tp)
+        wire_sweep = None
+        if args.wire_dtype:
+            wire_sweep = (None, args.wire_dtype)
+        elif args.max_logit_rmse is not None:
+            wire_sweep = WIRE_DTYPE_SWEEP
         autotune_model(cfg, par, decode_batch=args.max_batch,
-                       registry=reg, save_path=path)
+                       registry=reg, save_path=path,
+                       wire_dtypes=wire_sweep,
+                       max_logit_rmse=args.max_logit_rmse)
         par = dataclasses.replace(par, plan_profile=path)
     mesh = make_mesh(1, args.dp, args.tp)
     params = M.init_model(jax.random.PRNGKey(0), cfg, par)

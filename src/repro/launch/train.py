@@ -36,6 +36,15 @@ def main() -> None:
     ap.add_argument("--mode", default="decomposed", choices=list(VALID_MODES))
     ap.add_argument("--comm-chunks", type=int, default=0,
                     help="ring sub-chunking (0 = auto)")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["int8", "fp8_e4m3", "int4"],
+                    help="forward-wire precision for the TP seams (lossy "
+                         "on the forward value only; cotangents always "
+                         "ride the full-precision transports)")
+    ap.add_argument("--max-logit-rmse", type=float, default=None,
+                    help="error budget for the --autotune wire_dtype "
+                         "sweep: a quantized wire may only win a seam "
+                         "when its estimated logit deviation fits")
     ap.add_argument("--plan-profile", default=None,
                     help="tuned per-seam profile JSON (repro.tuning)")
     ap.add_argument("--scatter-axis", default="auto",
@@ -63,6 +72,8 @@ def main() -> None:
     par = ParallelConfig(tp=args.tp, dp=args.dp, pods=args.pods,
                          ep=args.ep,
                          overlap_mode=args.mode, zero3=args.zero3,
+                         wire_dtype=args.wire_dtype,
+                         max_logit_rmse=args.max_logit_rmse,
                          comm_chunks=args.comm_chunks,
                          plan_profile=args.plan_profile,
                          scatter_axis=args.scatter_axis,
@@ -73,12 +84,22 @@ def main() -> None:
                          fuse_w13=True)
     if args.autotune and args.tp > 1:
         import os
-        from repro.tuning import PlanRegistry, autotune_model, default_plans_dir
+        from repro.tuning import (WIRE_DTYPE_SWEEP, PlanRegistry,
+                                  autotune_model, default_plans_dir)
         path = args.plan_profile or os.path.join(
             default_plans_dir(), f"{args.arch}_tp{args.tp}.json")
         reg = PlanRegistry.open(path, n_dev=args.tp)
+        # a budget opts the sweep into quantized wires; a pinned
+        # --wire-dtype restricts it to (fp, that wire)
+        wire_sweep = None
+        if args.wire_dtype:
+            wire_sweep = (None, args.wire_dtype)
+        elif args.max_logit_rmse is not None:
+            wire_sweep = WIRE_DTYPE_SWEEP
         autotune_model(cfg, par, tokens_per_dp=args.batch * args.seq // args.dp,
-                       registry=reg, save_path=path)
+                       registry=reg, save_path=path,
+                       wire_dtypes=wire_sweep,
+                       max_logit_rmse=args.max_logit_rmse)
         par = dataclasses.replace(par, plan_profile=path)
         logging.info("autotuned seam plans -> %s", path)
     mesh = make_mesh(args.pods, args.dp, args.tp, ep=max(args.ep, 1))

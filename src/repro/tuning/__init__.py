@@ -14,6 +14,9 @@ interconnect) and cached.  This package is that subsystem for our JAX port:
                mode under ``REPRO_PALLAS_INTERPRET=1``).
   cache.py     the persistent JSON profile cache (``experiments/plans/*.json``)
                with save/load round-trip and staleness versioning.
+  error_budget.py  deviation estimates (codec / per-seam proxy / end-to-end
+               logits) gating the ``wire_dtype`` sweep: a quantized wire may
+               only win a seam when its deviation fits ``max_logit_rmse``.
 
 Profile JSON schema (``cache.PROFILE_VERSION`` bumps on breaking change)::
 
@@ -32,9 +35,14 @@ Profile JSON schema (``cache.PROFILE_VERSION`` bumps on breaking change)::
             "comm_chunks": 8,          # §4.3 communication tile size (0=auto)
             "reverse": false,          # ring direction (pull/push analogue)
             "blocks": [256, 512, 256], # (bm, bk, bn) MXU tile
+            "wire_dtype": null,        # wire precision (null = fp wire;
+                                       # absent in pre-wire profiles and
+                                       # loaded as the fp wire)
             "source": "measured",      # measured | analytic
             "predicted_s": 1.2e-4,     # roofline OverallTime
-            "measured_s": 9.8e-5       # median wall time (0 when analytic)
+            "measured_s": 9.8e-5,      # median wall time (0 when analytic)
+            "logit_rmse": 0.0          # deviation estimate the winner was
+                                       # admitted under (0 for fp wire)
           }
         }, ...
       }
@@ -48,6 +56,10 @@ from repro.tuning.plans import (KNOWN_SEAMS, RESIDUAL_SEAMS,  # noqa: F401
                                 plan_set_from_parallel, seam_of)
 from repro.tuning.cache import (PROFILE_VERSION, PlanRegistry,  # noqa: F401
                                 default_plans_dir)
-from repro.tuning.autotune import (TuneResult, autotune_model,  # noqa: F401
-                                   candidate_space, model_seam_shapes,
-                                   sweep_model_layout, tune_seam)
+from repro.tuning.autotune import (TuneResult, WIRE_DTYPE_SWEEP,  # noqa: F401
+                                   autotune_model, candidate_space,
+                                   model_seam_shapes, sweep_model_layout,
+                                   tune_seam, wire_supported)
+from repro.tuning.error_budget import (DEFAULT_MAX_LOGIT_RMSE,  # noqa: F401
+                                       codec_rmse, model_logit_rmse,
+                                       seam_wire_rmse)

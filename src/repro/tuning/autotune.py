@@ -24,21 +24,38 @@ import numpy as np
 from repro.core import ect
 from repro.tuning.plans import PlanSet, SeamPlan
 
-# candidate modes per collective kind.  q8 only changes AllGather payloads
-# (RS partials keep full precision; AR treats q8 as its base mode), and the
-# bidirectional ring needs an actual ring, so:
+# candidate modes per collective kind (wire precision is a SEPARATE knob —
+# ``Candidate.wire_dtype`` — swept orthogonally over the transports that
+# can carry a quantized payload; see ``wire_supported``):
 _KIND_MODES: Dict[str, Tuple[str, ...]] = {
-    "ag": ("xla", "decomposed", "decomposed_bidir", "xla_q8",
-           "decomposed_q8", "flux"),
+    "ag": ("xla", "decomposed", "decomposed_bidir", "flux"),
     "rs": ("xla", "decomposed", "decomposed_bidir", "flux"),
     "ar": ("xla", "decomposed"),
     # MoE EP exchange: barrier all_to_alls vs the interleaved ppermute ring
-    # (chunk count x direction swept; no flux kernel, no lossy q8 dispatch)
+    # (chunk count x direction swept; no flux kernel)
     "a2a": ("xla", "decomposed"),
 }
 # flux block-preference sweep (the CUTLASS-template-parameter analogue)
 _FLUX_BLOCK_PREFS: Tuple[Tuple[int, int, int], ...] = (
     (256, 512, 256), (128, 512, 128), (512, 512, 512))
+
+# the wire dtypes the tuner sweeps when low precision is allowed
+WIRE_DTYPE_SWEEP: Tuple[Optional[str], ...] = (None, "int8", "fp8_e4m3",
+                                               "int4")
+
+
+def wire_supported(kind: str, mode: str, scatter_axis: str = "seq") -> bool:
+    """Whether (kind, mode, layout) actually carries a quantized payload:
+    flux has no quantized DMA path; xla's psum collectives (rs/ar) cannot
+    carry per-block scales; ag/hidden has no collective at all."""
+    if mode == "flux":
+        return False
+    if kind == "ag":
+        return scatter_axis != "hidden"
+    if kind == "a2a":
+        return True
+    # rs (incl. rs/hidden == ar) and ar: ring transports only
+    return mode.startswith("decomposed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +67,8 @@ class Candidate:
     shared_gather: bool = True        # one ring pass for N-weight gathers
     fuse_epilogue: bool = True        # epilogue inside the overlapped loop
     scatter_axis: str = "seq"         # residual-stream layout (seq | hidden)
+    wire_dtype: Optional[str] = None  # forward-wire precision (overlap
+    #                                   VALID_WIRE_DTYPES; None = fp wire)
 
 
 @dataclasses.dataclass
@@ -76,26 +95,37 @@ def _ring_chunk_options(n_dev: int) -> Tuple[int, ...]:
 def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
                     *, allow_flux: bool = True, allow_q8: bool = True,
                     modes: Optional[Sequence[str]] = None,
+                    wire_dtypes: Optional[Sequence[Optional[str]]] = None,
                     n_weights: int = 1,
                     epilogue: bool = False,
                     scatter_axis: str = "seq") -> List[Candidate]:
     """All tunable settings for one seam kind.  ``modes`` restricts the mode
-    set (used by the measured path to drop flux under interpret mode);
-    ``allow_q8=False`` drops the lossy int8-gather modes.  ``n_weights > 1``
-    additionally sweeps ``shared_gather`` (one ring pass vs one per weight)
-    and ``epilogue=True`` sweeps ``fuse_epilogue`` (elementwise tail inside
-    vs after the overlapped loop) — the FusedOp fusion knobs.  Only the
-    transports that CONSUME a knob sweep it: xla's monolithic gather is
-    shared and its epilogue XLA-fused regardless, and rs/ar epilogues run
-    once on the reduced output either way, so sweeping there would score
-    byte-identical programs under different labels.
+    set (used by the measured path to drop flux under interpret mode).
+
+    ``wire_dtypes`` is the wire-precision sweep (None entries = fp wire);
+    the default derives from the deprecated ``allow_q8`` flag — ``True``
+    sweeps ``(None, "int8")`` (the old q8-mode pair), ``False`` keeps the
+    fp wire only.  Pass ``WIRE_DTYPE_SWEEP`` for the full set.  Quantized
+    wires are only emitted for transports that carry them
+    (``wire_supported``).
+
+    ``n_weights > 1`` additionally sweeps ``shared_gather`` (one ring pass
+    vs one per weight) and ``epilogue=True`` sweeps ``fuse_epilogue``
+    (elementwise tail inside vs after the overlapped loop) — the FusedOp
+    fusion knobs.  Only the transports that CONSUME a knob sweep it: xla's
+    monolithic gather is shared and its epilogue XLA-fused regardless, and
+    rs/ar epilogues run once on the reduced output either way, so sweeping
+    there would score byte-identical programs under different labels.
 
     ``scatter_axis`` fixes the residual-stream layout the seam runs under
     (it is swept JOINTLY at the model level by ``autotune_model``, never
     per seam — a per-seam layout split would be incoherent).  Under
     "hidden" an AG seam has NO collective (one candidate) and an RS seam
     behaves like the "ar" kind (contraction-chunked AllReduce)."""
+    from repro.core.overlap import normalize_mode
     from repro.kernels.ops import plan_blocks
+    if wire_dtypes is None:
+        wire_dtypes = (None, "int8") if allow_q8 else (None,)
     hidden = scatter_axis == "hidden"
     if kind == "ag" and hidden:
         # input already replicated: no transport to tune
@@ -108,11 +138,10 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
                    for fe in ((True, False) if sweep_fe else (True,))]
     out: List[Candidate] = []
     for mode in (modes or _KIND_MODES[mode_kind]):
+        mode, _ = normalize_mode(mode)     # accept deprecated spellings
         if mode == "flux" and not allow_flux:
             continue
-        if mode.endswith("_q8") and not allow_q8:
-            continue
-        if mode in ("xla", "xla_q8"):
+        if mode == "xla":
             out.append(Candidate(mode, 0, False, scatter_axis=scatter_axis))
             continue
         if mode == "flux":
@@ -141,11 +170,20 @@ def candidate_space(kind: str, m: int, n: int, k: int, n_dev: int,
                     out.append(Candidate(mode, chunks, reverse,
                                          shared_gather=sg, fuse_epilogue=fe,
                                          scatter_axis=scatter_axis))
+    # expand over the wire-precision sweep (quantized wires only where the
+    # transport actually carries them)
+    expanded: List[Candidate] = []
+    for c in out:
+        for wd in wire_dtypes:
+            if wd is not None and not wire_supported(kind, c.mode,
+                                                     c.scatter_axis):
+                continue
+            expanded.append(dataclasses.replace(c, wire_dtype=wd))
     # dedupe (plan_blocks may collapse block prefs on small shapes)
     seen, uniq = set(), []
-    for c in out:
+    for c in expanded:
         key = (c.mode, c.comm_chunks, c.reverse, c.blocks, c.shared_gather,
-               c.fuse_epilogue, c.scatter_axis)
+               c.fuse_epilogue, c.scatter_axis, c.wire_dtype)
         if key not in seen:
             seen.add(key)
             uniq.append(c)
@@ -178,15 +216,19 @@ def prune_infeasible(kind: str, cands: List[Candidate],
 
 def analytic_estimate(kind: str, m: int, n: int, k: int, n_dev: int,
                       cand: Candidate, dtype_bytes: int = 2,
-                      n_weights: int = 1, epilogue: bool = False) -> float:
+                      n_weights: int = 1, epilogue: bool = False,
+                      full: bool = False):
+    """Roofline OverallTime for one candidate (``full=True`` returns the
+    whole ``ect.model_overlap`` dict — bytes-on-wire etc.)."""
     est = ect.model_overlap(kind, m, n, k, n_dev, cand.mode, dtype_bytes,
                             comm_chunks=cand.comm_chunks,
                             n_weights=n_weights,
                             shared_gather=cand.shared_gather,
                             epilogue=epilogue,
                             fuse_epilogue=cand.fuse_epilogue,
-                            scatter_axis=cand.scatter_axis)
-    return est["overall"]
+                            scatter_axis=cand.scatter_axis,
+                            wire_dtype=cand.wire_dtype)
+    return est if full else est["overall"]
 
 
 # ---------------------------------------------------------------------------
@@ -247,7 +289,8 @@ def _bench_callable(kind: str, m: int, n: int, k: int, n_dev: int,
         fused = FusedOp(kind="a2a", axis=(axis,) if axis else (),
                         mode=cand.mode, comm_chunks=cand.comm_chunks,
                         reverse=cand.reverse,
-                        epilogue=_bench_epilogue(kind, 3, True), n_weights=3)
+                        epilogue=_bench_epilogue(kind, 3, True), n_weights=3,
+                        wire_dtype=cand.wire_dtype)
         if not multi:
             return jax.jit(lambda a, *bs: fused(a, *bs)), (x, *ws)
         mesh = Mesh(np.array(jax.devices()[:n_dev]), ("tune",))
@@ -267,7 +310,8 @@ def _bench_callable(kind: str, m: int, n: int, k: int, n_dev: int,
                     epilogue=_bench_epilogue(kind, nw, epilogue),
                     n_weights=nw, fuse_epilogue=cand.fuse_epilogue,
                     shared_gather=cand.shared_gather,
-                    scatter_axis=cand.scatter_axis)
+                    scatter_axis=cand.scatter_axis,
+                    wire_dtype=cand.wire_dtype)
     if kind == "ag":
         # hidden layout: the activation arrives replicated (no gather)
         x_spec = P(None, None, None) if hidden else P(None, axis, None)
@@ -307,35 +351,62 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
               *, dtype_bytes: int = 2, allow_flux: bool = True,
               allow_q8: bool = True, measure="auto",
               modes: Optional[Sequence[str]] = None,
+              wire_dtypes: Optional[Sequence[Optional[str]]] = None,
+              max_logit_rmse: Optional[float] = None,
+              rmse_fn=None,
               seam: Optional[str] = None, iters: int = 3,
               warmup: int = 1, n_weights: int = 1,
               epilogue: bool = False,
               scatter_axis: str = "seq") -> TuneResult:
     """Tune one seam.  Returns the winning plan plus the full candidate
     table (``table`` rows: mode/comm_chunks/reverse/blocks/shared_gather/
-    fuse_epilogue/scatter_axis/predicted_s and, on the measured path,
-    measured_s).  ``n_weights``/``epilogue`` describe the FusedOp the seam
-    will run (e.g. the gated FFN's two-weight silu-gate) so the fusion
-    knobs are swept too; ``scatter_axis`` fixes the residual layout the
-    seam is tuned UNDER (the layout itself is a model-level decision —
-    see ``autotune_model``)."""
+    fuse_epilogue/scatter_axis/wire_dtype/comm_bytes/predicted_s/
+    logit_rmse/within_budget and, on the measured path, measured_s).
+
+    Wire precision is tuned under an ERROR BUDGET, not time alone: every
+    quantized candidate is scored by ``rmse_fn(kind, m, n, k, n_dev,
+    wire_dtype)`` (default: ``error_budget.seam_wire_rmse``, the seeded
+    proxy deviation vs the fp wire) and candidates whose deviation exceeds
+    ``max_logit_rmse`` are kept in the table (``within_budget=False``) but
+    can never win.  ``max_logit_rmse=None`` disables the filter (the fp
+    wire scores 0.0 and is always eligible).
+
+    ``n_weights``/``epilogue`` describe the FusedOp the seam will run
+    (e.g. the gated FFN's two-weight silu-gate) so the fusion knobs are
+    swept too; ``scatter_axis`` fixes the residual layout the seam is
+    tuned UNDER (the layout itself is a model-level decision — see
+    ``autotune_model``)."""
     assert kind in _KIND_MODES, kind
     if measure == "auto":
         import jax
         from repro import compat
         measure = (n_dev > 1 and len(jax.devices()) >= n_dev
                    and not compat.interpret_default())
+    if rmse_fn is None:
+        from repro.tuning.error_budget import seam_wire_rmse
+        rmse_fn = seam_wire_rmse
 
     def row(c, measured=0.0):
+        est = analytic_estimate(kind, m, n, k, n_dev, c, dtype_bytes,
+                                n_weights, epilogue, full=True)
+        rmse = (rmse_fn(kind, m, n, k, n_dev, c.wire_dtype)
+                if c.wire_dtype else 0.0)
         return {"mode": c.mode, "comm_chunks": c.comm_chunks,
                 "reverse": c.reverse, "blocks": c.blocks,
                 "shared_gather": c.shared_gather,
                 "fuse_epilogue": c.fuse_epilogue,
                 "scatter_axis": c.scatter_axis,
-                "predicted_s": analytic_estimate(kind, m, n, k, n_dev, c,
-                                                 dtype_bytes, n_weights,
-                                                 epilogue),
+                "wire_dtype": c.wire_dtype,
+                "comm_bytes": est["comm_bytes"],
+                "predicted_s": est["overall"],
+                "logit_rmse": rmse,
+                "within_budget": (max_logit_rmse is None
+                                  or rmse <= max_logit_rmse),
                 "measured_s": measured}
+
+    def pick(table, score):
+        eligible = [r for r in table if r["within_budget"]]
+        return min(eligible or table, key=score)
 
     mode_kind = "ar" if (kind == "rs" and scatter_axis == "hidden") else kind
     if measure:
@@ -345,6 +416,7 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
                                 allow_q8=allow_q8,
                                 modes=modes or _measurable_modes(mode_kind,
                                                                  allow_flux),
+                                wire_dtypes=wire_dtypes,
                                 n_weights=n_weights, epilogue=epilogue,
                                 scatter_axis=scatter_axis)
         cands, dropped = prune_infeasible(kind, cands,
@@ -357,18 +429,19 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
                                        epilogue=epilogue)
             t = ect.time_fn(fn, *args, iters=iters, warmup=warmup)
             table.append(row(c, measured=t))
-        best = min(table, key=lambda r: r["measured_s"])
+        best = pick(table, lambda r: r["measured_s"])
         source = "measured"
     else:
         cands = candidate_space(kind, m, n, k, n_dev, allow_flux=allow_flux,
                                 allow_q8=allow_q8, modes=modes,
+                                wire_dtypes=wire_dtypes,
                                 n_weights=n_weights, epilogue=epilogue,
                                 scatter_axis=scatter_axis)
         cands, dropped = prune_infeasible(kind, cands,
                                           dtype_bytes=dtype_bytes,
                                           epilogue=epilogue)
         table = [row(c) for c in cands]
-        best = min(table, key=lambda r: r["predicted_s"])
+        best = pick(table, lambda r: r["predicted_s"])
         source = "analytic"
 
     blocks = best["blocks"]
@@ -383,8 +456,10 @@ def tune_seam(kind: str, m: int, n: int, k: int, n_dev: int,
                     shared_gather=best["shared_gather"],
                     fuse_epilogue=best["fuse_epilogue"],
                     scatter_axis=best["scatter_axis"],
+                    wire_dtype=best["wire_dtype"],
                     source=source, predicted_s=best["predicted_s"],
-                    measured_s=best["measured_s"]).validate()
+                    measured_s=best["measured_s"],
+                    logit_rmse=best["logit_rmse"]).validate()
     return TuneResult(seam=seam or kind, kind=kind, m=m, n=n, k=k,
                       n_dev=n_dev, plan=plan, table=table, source=source,
                       pruned=len(dropped))
@@ -512,6 +587,8 @@ def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
                    decode_batch: Optional[int] = None, measure="auto",
                    registry=None, save_path: Optional[str] = None,
                    allow_flux: bool = True, allow_q8: bool = False,
+                   wire_dtypes: Optional[Sequence[Optional[str]]] = None,
+                   max_logit_rmse: Optional[float] = None,
                    sweep_scatter_axis: bool = True) -> PlanSet:
     """Tune every seam of a model and return the resulting PlanSet.
 
@@ -527,8 +604,12 @@ def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
 
     ``registry`` (a ``cache.PlanRegistry``) short-circuits seams it already
     holds and records fresh results; ``save_path`` persists it afterwards.
-    ``allow_q8`` defaults to False here: the int8-gather modes are lossy and
-    must be an explicit opt-in for whole-model plans.
+    Quantized wires are lossy and therefore an explicit opt-in for
+    whole-model plans: pass ``wire_dtypes`` (e.g. ``autotune.
+    WIRE_DTYPE_SWEEP``) to sweep them, ideally paired with
+    ``max_logit_rmse`` so the per-seam error budget gates the winners.
+    ``allow_q8`` is the deprecated spelling of ``wire_dtypes=(None,
+    "int8")`` and still works.
     """
     from repro.tuning.plans import seam_of
     if par.tp <= 1:
@@ -560,6 +641,8 @@ def autotune_model(cfg, par, *, tokens_per_dp: int = 2048,
         else:
             res = tune_seam(kind, m, n, k, par.tp, allow_flux=allow_flux,
                             allow_q8=allow_q8, measure=measure,
+                            wire_dtypes=wire_dtypes,
+                            max_logit_rmse=max_logit_rmse,
                             seam=cell_key, scatter_axis=scatter_axis,
                             **fused_shape.get(seam_name, {}))
             seams[cell_key] = res.plan

@@ -69,7 +69,12 @@ class SeamPlan:
     them per seam.  ``scatter_axis`` is the activation-layout knob
     ("seq" = sequence-sharded residual stream between seams, Megatron-SP;
     "hidden" = replicated residual stream, the decode layout) — swept
-    JOINTLY across the residual seams (see ``PlanSet.residual_layout``)."""
+    JOINTLY across the residual seams (see ``PlanSet.residual_layout``).
+    ``wire_dtype`` (None | "int8" | "fp8_e4m3" | "int4") quantizes the
+    seam's FORWARD wire — swept by the tuner under a logit-RMSE budget
+    (``repro.tuning.error_budget``); cotangents never ride it.  The
+    ``logit_rmse`` field records the budget evidence the tuner measured
+    for the chosen wire (0.0 for the fp wire)."""
     mode: str = "decomposed"
     comm_chunks: int = 0
     reverse: bool = False
@@ -77,14 +82,23 @@ class SeamPlan:
     fuse_epilogue: bool = True
     shared_gather: bool = True
     scatter_axis: str = "seq"
+    wire_dtype: Optional[str] = None
     source: str = "default"          # default | analytic | measured
     predicted_s: float = 0.0
     measured_s: float = 0.0
+    logit_rmse: float = 0.0
 
     def validate(self) -> "SeamPlan":
-        from repro.core.overlap import VALID_MODES, VALID_SCATTER_AXES
+        from repro.core.overlap import (VALID_MODES, VALID_SCATTER_AXES,
+                                        VALID_WIRE_DTYPES, normalize_mode)
+        mode, wd = normalize_mode(self.mode, self.wire_dtype)
+        if (mode, wd) != (self.mode, self.wire_dtype):
+            object.__setattr__(self, "mode", mode)
+            object.__setattr__(self, "wire_dtype", wd)
         if self.mode not in VALID_MODES:
             raise ValueError(f"invalid overlap mode {self.mode!r}")
+        if self.wire_dtype not in VALID_WIRE_DTYPES:
+            raise ValueError(f"invalid wire_dtype {self.wire_dtype!r}")
         if self.comm_chunks < 0:
             raise ValueError(f"comm_chunks must be >= 0, got {self.comm_chunks}")
         if self.scatter_axis not in VALID_SCATTER_AXES:
@@ -108,22 +122,27 @@ class SeamPlan:
              "fuse_epilogue": self.fuse_epilogue,
              "shared_gather": self.shared_gather,
              "scatter_axis": self.scatter_axis,
-             "predicted_s": self.predicted_s, "measured_s": self.measured_s}
+             "wire_dtype": self.wire_dtype,
+             "predicted_s": self.predicted_s, "measured_s": self.measured_s,
+             "logit_rmse": self.logit_rmse}
         d["blocks"] = list(self.blocks) if self.blocks else None
         return d
 
     @staticmethod
     def from_json(d: Mapping) -> "SeamPlan":
         blocks = d.get("blocks")
+        # profiles written before the wire_dtype field load as the fp wire
         return SeamPlan(mode=d["mode"], comm_chunks=int(d.get("comm_chunks", 0)),
                         reverse=bool(d.get("reverse", False)),
                         blocks=tuple(blocks) if blocks else None,
                         fuse_epilogue=bool(d.get("fuse_epilogue", True)),
                         shared_gather=bool(d.get("shared_gather", True)),
                         scatter_axis=d.get("scatter_axis", "seq"),
+                        wire_dtype=d.get("wire_dtype"),
                         source=d.get("source", "default"),
                         predicted_s=float(d.get("predicted_s", 0.0)),
-                        measured_s=float(d.get("measured_s", 0.0))).validate()
+                        measured_s=float(d.get("measured_s", 0.0)),
+                        logit_rmse=float(d.get("logit_rmse", 0.0))).validate()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,6 +207,19 @@ class PlanSet:
             layers={l: {s: repl(p) for s, p in ov.items()}
                     for l, ov in self.layers.items()})
 
+    def with_wire_dtype(self, wire_dtype: Optional[str]) -> "PlanSet":
+        """Stamp one wire dtype onto every plan (default, seam and
+        per-layer overrides).  Flux plans keep the fp wire — the Pallas
+        kernels have no quantized DMA path and would reject the knob."""
+        repl = lambda p: (p if p.mode == "flux"  # noqa: E731
+                          else dataclasses.replace(
+                              p, wire_dtype=wire_dtype).validate())
+        return PlanSet(
+            default=repl(self.default),
+            seams={s: repl(p) for s, p in self.seams.items()},
+            layers={l: {s: repl(p) for s, p in ov.items()}
+                    for l, ov in self.layers.items()})
+
     def to_json(self) -> Dict:
         return {"default": self.default.to_json(),
                 "seams": {s: p.to_json() for s, p in self.seams.items()},
@@ -231,4 +263,7 @@ def plan_set_from_parallel(par) -> PlanSet:
     forced = getattr(par, "scatter_axis", "auto")
     if forced and forced != "auto":
         base = base.with_scatter_axis(forced)
+    wire = getattr(par, "wire_dtype", None)
+    if wire:
+        base = base.with_wire_dtype(wire)
     return base

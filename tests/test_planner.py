@@ -189,16 +189,17 @@ def test_candidate_space_sweeps_fusion_knobs():
     cands = autotune.candidate_space("ag", 4096, 1024, 512, 4,
                                      n_weights=2, epilogue=True)
     combos = {(c.shared_gather, c.fuse_epilogue) for c in cands
-              if c.mode not in ("xla", "xla_q8")}
+              if c.mode != "xla"}
     assert combos == {(True, True), (True, False), (False, True),
                       (False, False)}
     # xla's monolithic gather consumes neither knob -> exactly one
-    # candidate per xla mode (no byte-identical duplicate rows)
-    assert sum(1 for c in cands if c.mode == "xla") == 1
+    # candidate per (xla, wire_dtype) (no byte-identical duplicate rows)
+    xla = [c for c in cands if c.mode == "xla"]
+    assert len(xla) == len({c.wire_dtype for c in xla})
     # plain seams don't blow up the candidate table
     plain = autotune.candidate_space("ag", 4096, 1024, 512, 4)
     assert all(c.shared_gather and c.fuse_epilogue for c in plain)
-    n_xla = sum(1 for c in plain if c.mode in ("xla", "xla_q8"))
+    n_xla = sum(1 for c in plain if c.mode == "xla")
     assert len(cands) == 4 * (len(plain) - n_xla) + n_xla
     # rs/ar epilogues apply once on the reduced output either way: no sweep
     rs_cands = autotune.candidate_space("rs", 4096, 512, 1024, 4,
@@ -272,8 +273,8 @@ def test_autotune_model_builds_plan_set_and_persists(tmp_path):
     assert set(shapes) <= set(ps.seams.keys()) | set(KNOWN_SEAMS)
     for seam in shapes:
         assert ps.resolve(seam).mode in overlap.VALID_MODES
-        # lossy q8 modes must not be auto-selected for whole-model plans
-        assert not ps.resolve(seam).mode.endswith("_q8")
+        # lossy wires must not be auto-selected for whole-model plans
+        assert ps.resolve(seam).wire_dtype is None
     assert os.path.exists(path)
     # second run is served from the registry (same plans, no re-tune)
     reg2 = PlanRegistry.open(path, n_dev=4)
